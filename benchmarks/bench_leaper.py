@@ -1,0 +1,37 @@
+"""LEAPER benchmarks (thesis Ch. 6: Fig 6-4, Table 6.5/6.6): few-shot
+cross-platform accuracy vs. #shots, vs. training from scratch, and the
+model-building cost savings."""
+from __future__ import annotations
+
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.leaper.transfer import PLATFORMS, evaluate_transfer
+from repro.core.napel.model import load_dryrun_records
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def run() -> list[tuple]:
+    rows = []
+    cells = load_dryrun_records(DRYRUN_DIR)
+    if len(cells) < 16:
+        return [("leaper.missing_corpus", 0.0, "run dryrun --all first")]
+    feats = np.stack([r.features() for r in cells])
+    for target in ("tpu_v4", "tpu_v5p", "trainium2"):
+        t0 = time.time()
+        res = evaluate_transfer(cells, feats, target,
+                                shots_list=(1, 3, 5, 10, 20))
+        dt_us = (time.time() - t0) * 1e6
+        for shots, row in sorted(res.items()):
+            rows.append((f"leaper.{target}_{shots}shot", 0.0,
+                         f"acc{row['leaper_acc_pct']:.1f}pct_"
+                         f"scratch{row['scratch_acc_pct']:.1f}pct"))
+        rows.append((f"leaper.{target}_eval", dt_us, "full_sweep"))
+    # Table 6.6 analogue: cost of base reuse vs from-scratch data collection
+    # (samples needed: 5 shots vs the full 64-cell sweep)
+    rows.append(("leaper.data_cost_savings", 0.0,
+                 f"{len(cells)}cells_vs_5shots_{len(cells) / 5:.0f}x"))
+    return rows

@@ -1,0 +1,122 @@
+"""NAPEL benchmarks (thesis Ch. 5: Figs 5-4/5-5/5-7, Table 5.4):
+prediction MRE on DoE-held-out configs and unseen architectures, the
+speedup over the 'simulator' (= XLA lower+compile), and the suitability
+(EDP) classification use-case."""
+from __future__ import annotations
+
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.configs.base import InputShape
+from repro.core.napel.baselines import DecisionTree, MLPRegressor
+from repro.core.napel.corpus import CORPUS_DIR, corpus_features, load_corpus, make_cfg
+from repro.core.napel.features import analytic_costs
+from repro.core.napel.forest import RandomForest, mean_relative_error
+from repro.core.napel.model import (Napel, energy_joules, leave_one_arch_out,
+                                    load_dryrun_records)
+from repro.core.roofline import roofline_terms
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def _corpus_xy():
+    recs = load_corpus(CORPUS_DIR)
+    doe = [r for r in recs if r["tag"] == "doe"]
+    test = [r for r in recs if r["tag"] == "test"]
+
+    def fa(r):
+        p = r["params"]
+        cfg = make_cfg(p)
+        sh = InputShape("t", p["seq"], p["batch"], "train")
+        return corpus_features(r), analytic_costs(cfg, sh, tuple(r["mesh"]))
+
+    return doe, test, fa
+
+
+def run() -> list[tuple]:
+    rows = []
+    doe, test, fa = _corpus_xy()
+    if not doe or not test:
+        return [("napel.missing_corpus", 0.0, "run repro.core.napel.corpus")]
+    X, A = map(np.stack, zip(*[fa(r) for r in doe]))
+    Xt, At = map(np.stack, zip(*[fa(r) for r in test]))
+
+    # Fig 5-5 analogue: RF vs ANN vs DT on held-out test configs, per target
+    t_train = time.time()
+    learners = {"rf": lambda: RandomForest(n_trees=80, max_depth=10,
+                                           min_samples_leaf=1,
+                                           max_features=X.shape[1]),
+                "ann": lambda: MLPRegressor(epochs=300),
+                "dt": lambda: DecisionTree()}
+    step_pred = {}
+    for lname, mk in learners.items():
+        preds = []
+        for i, tgt in enumerate(("flops", "bytes", "coll")):
+            y = np.log2([r[tgt] for r in doe]) - np.log2(A[:, i])
+            mdl = mk().fit(X, y)
+            pred = 2.0 ** mdl.predict(Xt) * At[:, i]
+            actual = np.array([r[tgt] for r in test])
+            preds.append(pred)
+            rows.append((f"napel.{lname}.{tgt}_mre", 0.0,
+                         f"{mean_relative_error(pred, actual):.3f}"))
+        # derived step-time + energy MRE
+        pt = [roofline_terms(f, b, c)["step_time_bound_s"]
+              for f, b, c in zip(*preds)]
+        at = [roofline_terms(r["flops"], r["bytes"], r["coll"])
+              ["step_time_bound_s"] for r in test]
+        pe = [energy_joules(f, b, c) for f, b, c in zip(*preds)]
+        ae = [energy_joules(r["flops"], r["bytes"], r["coll"]) for r in test]
+        rows.append((f"napel.{lname}.perf_mre", 0.0,
+                     f"{mean_relative_error(pt, at):.3f}"))
+        rows.append((f"napel.{lname}.energy_mre", 0.0,
+                     f"{mean_relative_error(pe, ae):.3f}"))
+        step_pred[lname] = pt
+    train_s = time.time() - t_train
+
+    # Fig 5-4 / Table 5.4: speedup over the 'simulator' (compile)
+    rf = RandomForest(n_trees=80, min_samples_leaf=1,
+                      max_features=X.shape[1]).fit(
+        X, np.log2([r["flops"] for r in doe]) - np.log2(A[:, 0]))
+    t0 = time.time()
+    for _ in range(50):
+        rf.predict(Xt)
+    pred_us = (time.time() - t0) / 50 / len(Xt) * 1e6
+    sim_us = float(np.mean([r["compile_s"] for r in test])) * 1e6
+    rows.append(("napel.predict", pred_us, f"speedup_{sim_us / pred_us:.0f}x"))
+    rows.append(("napel.train_all", train_s * 1e6, f"{len(doe)}doe_points"))
+
+    # unseen-architecture generalization (leave-one-arch-out on prod cells)
+    prod = load_dryrun_records(DRYRUN_DIR)
+    if prod:
+        loao = leave_one_arch_out(prod)
+        perf = float(np.mean([r["perf_mre"] for r in loao.values()]))
+        en = float(np.mean([r["energy_mre"] for r in loao.values()]))
+        rows.append(("napel.unseen_arch_perf_mre", 0.0, f"{perf:.3f}"))
+        rows.append(("napel.unseen_arch_energy_mre", 0.0, f"{en:.3f}"))
+
+        # Fig 5-7 analogue: EDP suitability decision (multi-pod vs 1-pod)
+        napel = Napel(tune=False).fit(prod)
+        correct = total = 0
+        by_cell = {}
+        for r in prod:
+            by_cell.setdefault((r.arch, r.shape), {})[r.mesh_shape] = r
+        for (arch, shape), m in by_cell.items():
+            if len(m) != 2:
+                continue
+            def edp(rec):
+                t = roofline_terms(rec.flops, rec.bytes_, rec.coll)
+                return t["step_time_bound_s"] * energy_joules(
+                    rec.flops, rec.bytes_, rec.coll)
+            actual = edp(m[(2, 16, 16)]) < edp(m[(16, 16)])
+            p2 = napel.predict_cell(arch, shape, (2, 16, 16))
+            p1 = napel.predict_cell(arch, shape, (16, 16))
+            pred = (p2["step_time_s"] * p2["energy_j"] <
+                    p1["step_time_s"] * p1["energy_j"])
+            correct += pred == actual
+            total += 1
+        if total:
+            rows.append(("napel.edp_suitability_acc", 0.0,
+                         f"{100 * correct / total:.0f}pct_of_{total}"))
+    return rows

@@ -1,0 +1,87 @@
+"""Precision-exploration benchmarks (thesis Ch. 4, Fig 4-4 / Table 4.2):
+accuracy of 7-point, 25-point, and hdiff stencils across fixed-point /
+dynamic-float / posit formats, with the thesis' 2-norm error metric."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import precision as prec
+from repro.kernels.hdiff import ref as hdiff_ref
+
+
+def stencil_7pt(src):
+    """3D 7-point star stencil (interior)."""
+    c = 0.1
+    out = src.copy()
+    out[1:-1, 1:-1, 1:-1] = (
+        src[1:-1, 1:-1, 1:-1] * (1 - 6 * c)
+        + c * (src[:-2, 1:-1, 1:-1] + src[2:, 1:-1, 1:-1]
+               + src[1:-1, :-2, 1:-1] + src[1:-1, 2:, 1:-1]
+               + src[1:-1, 1:-1, :-2] + src[1:-1, 1:-1, 2:]))
+    return out
+
+
+def stencil_25pt(src):
+    """25-point high-order stencil along x/y (4th-neighbour reach)."""
+    w = np.array([-1 / 280, 4 / 105, -1 / 5, 4 / 5, 0, -4 / 5, 1 / 5,
+                  -4 / 105, 1 / 280]) * 0.05
+    out = src.copy()
+    acc = np.zeros_like(src[..., 4:-4])
+    for i, wi in enumerate(w):
+        acc += wi * src[..., i:src.shape[-1] - 8 + i]
+    out[..., 4:-4] = src[..., 4:-4] + acc
+    acc2 = np.zeros_like(src[:, 4:-4, :])
+    for i, wi in enumerate(w):
+        acc2 += wi * src[:, i:src.shape[1] - 8 + i, :]
+    out[:, 4:-4, :] += acc2
+    return out
+
+
+def hdiff_np(src):
+    import jax.numpy as jnp
+    return np.asarray(hdiff_ref.hdiff(jnp.asarray(src, jnp.float32)))
+
+
+FORMATS = [
+    prec.FP32, prec.BF16, prec.FP16,
+    prec.fmt_float(5, 6), prec.fmt_float(4, 3),
+    prec.fmt_fixed(20, 4), prec.fmt_fixed(16, 4), prec.fmt_fixed(14, 7),
+    prec.fmt_fixed(11, 5), prec.fmt_fixed(8, 3),
+    prec.fmt_posit(16, 2), prec.fmt_posit(16, 1), prec.fmt_posit(12, 2),
+    prec.fmt_posit(8, 1),
+]
+
+
+def run() -> list[tuple]:
+    rng = np.random.default_rng(0)
+    grid = rng.normal(0, 1, size=(16, 48, 48))   # Gaussian input (thesis)
+    rows = []
+
+    # Appendix B (PreciseFPGA): automated fixed-point search, Pareto curve
+    from repro.core.precision_search import search_fixed_point
+    import time as _t
+    t0 = _t.time()
+    res = search_fixed_point(stencil_7pt, {"src": grid}, target_err=0.01)
+    ch = res["chosen"]
+    rows.append(("precisefpga.7pt_auto", (_t.time() - t0) * 1e6,
+                 f"{ch.label}_err{ch.rel_err:.4f}_"
+                 f"{res['configs_evaluated']}of"
+                 f"{res['exhaustive_equivalent']}configs"))
+    for name, fn in (("7pt", stencil_7pt), ("25pt", stencil_25pt),
+                     ("hdiff", hdiff_np)):
+        t0 = time.time()
+        res = prec.precision_sweep(fn, {"src": grid}, FORMATS)
+        dt_us = (time.time() - t0) * 1e6 / len(FORMATS)
+        # report the smallest format within 1% accuracy (thesis headline)
+        ok = [r for r in res if r["accuracy_pct"] >= 99.0
+              and r["kind"] != "native"]
+        best = min(ok, key=lambda r: r["bits"]) if ok else res[0]
+        rows.append((f"precision.{name}_best99", dt_us,
+                     f"{best['format']}_{best['bits']}bits_"
+                     f"acc{best['accuracy_pct']:.2f}pct"))
+        for r in res:
+            rows.append((f"precision.{name}.{r['format']}", 0.0,
+                         f"acc{max(r['accuracy_pct'], 0):.3f}pct"))
+    return rows

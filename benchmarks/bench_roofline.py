@@ -1,0 +1,46 @@
+"""Roofline / dry-run table (assignment deliverables e+g): per-cell terms
+from the compiled dry-run artifacts (reads the cached JSON records)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_cells(mesh_filter=None):
+    cells = []
+    for p in sorted(DRYRUN_DIR.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("status") != "ok":
+            continue
+        if mesh_filter and r["mesh"] != mesh_filter:
+            continue
+        cells.append(r)
+    return cells
+
+
+def run() -> list[tuple]:
+    rows = []
+    cells = load_cells("pod16x16")
+    if not cells:
+        return [("roofline.missing", 0.0, "run dryrun --all --both-meshes")]
+    for r in cells:
+        rl = r["roofline"]
+        rows.append((
+            f"roofline.{r['arch']}.{r['shape']}",
+            rl["step_time_bound_s"] * 1e6,
+            f"{rl['bottleneck']}_frac{rl['roofline_fraction']:.3f}"
+            f"_useful{r['useful_flops_ratio']:.2f}",
+        ))
+    multi = load_cells("pod2x16x16")
+    rows.append(("roofline.multipod_cells_ok", 0.0,
+                 f"{len(multi)}of{len(cells)}"))
+    worst = min(cells, key=lambda r: r["roofline"]["roofline_fraction"])
+    coll = max(cells, key=lambda r: r["roofline"]["collective_s"] /
+               max(r["roofline"]["step_time_bound_s"], 1e-12))
+    rows.append(("roofline.worst_fraction", 0.0,
+                 f"{worst['arch']}.{worst['shape']}"))
+    rows.append(("roofline.most_collective_bound", 0.0,
+                 f"{coll['arch']}.{coll['shape']}"))
+    return rows

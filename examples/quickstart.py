@@ -1,0 +1,40 @@
+"""Quickstart: train a small LM for a few steps, checkpoint, resume, serve.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import tempfile
+
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.serve.engine import Request, ServeEngine
+from repro.train.optimizer import OptimizerConfig
+from repro.train.trainer import Trainer, TrainJobConfig
+
+
+def main():
+    cfg = smoke_config("codeqwen1.5-7b")
+    print(f"arch={cfg.name} (reduced) d_model={cfg.d_model} "
+          f"layers={cfg.num_layers}")
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        oc = OptimizerConfig(lr=3e-3, warmup_steps=5, total_steps=40)
+        job = TrainJobConfig(steps=40, seq_len=64, global_batch=8,
+                             checkpoint_every=20, checkpoint_dir=ckpt_dir,
+                             log_every=10)
+        out = Trainer(cfg, oc, job).run()
+        h = out["history"]
+        print(f"loss {h[0]['loss']:.3f} -> {h[-1]['loss']:.3f} "
+              f"over {len(h)} steps")
+
+        # serve with the trained weights
+        eng = ServeEngine(cfg, params=out["state"]["params"])
+        rng = np.random.default_rng(0)
+        reqs = [Request(rng.integers(0, cfg.vocab_size, 16).astype(np.int32),
+                        max_new_tokens=8) for _ in range(2)]
+        outs = eng.generate(reqs)
+        print("generated:", [o.tolist() for o in outs])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Sibyl on hybrid storage: online RL placement vs heuristics on an
+MSRC-like trace (thesis Ch. 7 in miniature).
+
+    PYTHONPATH=src python examples/sibyl_storage.py
+"""
+import numpy as np
+
+from repro.core.sibyl.agent import SibylAgent, SibylConfig, run_policy
+from repro.core.sibyl.env import HssEnv, hss_config
+from repro.core.sibyl.policies import CDE, HPS, FastOnly
+from repro.core.sibyl.traces import WORKLOADS, generate
+
+
+def main():
+    spec = WORKLOADS["rsrch_0"]
+    trace = generate(spec, 10_000, seed=1)
+    print(f"workload {spec.name}: {len(trace)} requests, "
+          f"read_ratio={spec.read_ratio}, scans={spec.scan_fraction}")
+    results = {}
+    agent = SibylAgent(SibylConfig(seed=3))
+    for pol in [FastOnly(), CDE(), HPS(), agent]:
+        env = HssEnv(hss_config("H&L", fast_cap=1024))
+        r = run_policy(env, trace, pol, warmup=2000)
+        results[pol.name] = r
+    fo = results["fast_only"]["avg_latency_us"]
+    for name, r in results.items():
+        print(f"{name:10s} avg={r['avg_latency_us']:10.1f}us "
+              f"norm={r['avg_latency_us'] / fo:6.3f} "
+              f"p99={r['p99_latency_us'] / 1e3:8.1f}ms "
+              f"migrations={r['migrations']}")
+    imp = agent.explain()
+    names = ["size", "is_write", "fast_fill", "fast_q", "slow_q", "hotness",
+             "recency", "in_fast", "lat_ema", "config"]
+    top = np.argsort(-imp)[:3]
+    print("sibyl's top decision features:", [names[i] for i in top])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""The paper's own workload: COSMO weather-prediction compound stencils (NERO).
+
+Not an LM architecture — a 3D grid workload config consumed by
+``repro.kernels.hdiff`` / ``repro.kernels.vadvc`` and the NERO benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilConfig:
+    name: str = "cosmo-stencil"
+    # COSMO production grid used in the thesis (Ch. 3): 256 x 256 x 64
+    nx: int = 256
+    ny: int = 256
+    nz: int = 64
+    dtype: str = "float32"
+    # NERO-style tiling window (auto-tunable)
+    tile_x: int = 64
+    tile_y: int = 64
+    halo: int = 2
+
+
+def cosmo_grid() -> StencilConfig:
+    return StencilConfig()
+
+
+def smoke_grid() -> StencilConfig:
+    return StencilConfig(name="cosmo-stencil-smoke", nx=16, ny=16, nz=4,
+                         tile_x=8, tile_y=8)

@@ -1,0 +1,100 @@
+"""NERO-style multi-objective tile ("window") auto-tuning (thesis §3.3.1).
+
+The thesis frames window-size selection as a multi-objective search
+(performance vs. FPGA resources) driven by OpenTuner. The TPU-native
+analogue: a kernel's block shape determines its VMEM footprint (the
+"resource") and its roofline-estimated step time (the "performance").
+With no hardware in this container, performance comes from an analytic
+traffic/compute model per candidate — exactly the kind of model NAPEL
+would otherwise learn — and the tuner returns the Pareto front + the
+knee point. The thesis' key observation reproduces here: the Pareto-
+optimal window depends on the datatype precision.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Sequence
+
+VMEM_BYTES = 16 * 2 ** 20          # per-core VMEM budget (v5e-class)
+GRID_STEP_OVERHEAD_S = 2e-6        # per grid-step dispatch/DMA latency
+HBM_BW = 819e9
+LANE = 128                          # TPU lane width
+SUBLANE = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    params: dict
+    vmem_bytes: int
+    est_time_s: float
+    feasible: bool
+
+    @property
+    def gflops(self):
+        return self.params.get("_gflops", 0.0)
+
+
+def stencil_cost(grid_shape, tile: dict, dtype_bytes: int,
+                 flops_per_point: float, fields: int = 1) -> tuple:
+    """Analytic cost for a z-batched plane stencil (hdiff-style).
+
+    tile = {"block_z": bz}; VMEM = bz*ny*nx*dtype*(in+out); time =
+    traffic/BW + grid_steps * overhead, with an alignment penalty when nx
+    is not lane-aligned.
+    """
+    nz, ny, nx = grid_shape
+    bz = tile["block_z"]
+    if nz % bz:
+        return None
+    vmem = bz * ny * nx * dtype_bytes * (fields + 1) * 2   # double buffered
+    traffic = nz * ny * nx * dtype_bytes * (fields + 1)
+    steps = nz // bz
+    align = 1.0 if nx % LANE == 0 else 1.0 + (LANE - nx % LANE) / LANE
+    time = traffic * align / HBM_BW + steps * GRID_STEP_OVERHEAD_S
+    return vmem, time
+
+
+def vadvc_cost(grid_shape, tile: dict, dtype_bytes: int) -> tuple:
+    nz, ny, nx = grid_shape
+    ty = tile["tile_y"]
+    if ny % ty:
+        return None
+    fields = 5          # ustage/upos/utens/utens_stage/wcon
+    scratch = 2         # ccol/dcol
+    vmem = nz * ty * (nx + 1) * dtype_bytes * (fields + scratch + 1)
+    traffic = nz * ny * nx * dtype_bytes * (fields + 1)
+    steps = ny // ty
+    align = 1.0 if nx % LANE == 0 else 1.0 + (LANE - nx % LANE) / LANE
+    # sequential z-sweep limits pipelining for small slabs
+    seq_penalty = 1.0 + 0.2 / max(ty, 1)
+    time = traffic * align * seq_penalty / HBM_BW + steps * GRID_STEP_OVERHEAD_S
+    return vmem, time
+
+
+def autotune(cost_fn: Callable, grid_shape, space: dict, dtype_bytes: int,
+             vmem_budget: int = VMEM_BYTES, **cost_kwargs) -> dict:
+    """Exhaustive multi-objective search (the thesis used OpenTuner in
+    exhaustive mode for the same spaces). Returns Pareto front + knee."""
+    names = sorted(space)
+    cands = []
+    for combo in itertools.product(*(space[n] for n in names)):
+        tile = dict(zip(names, combo))
+        res = cost_fn(grid_shape, tile, dtype_bytes, **cost_kwargs)
+        if res is None:
+            continue
+        vmem, t = res
+        cands.append(Candidate(tile, vmem, t, vmem <= vmem_budget))
+    feas = [c for c in cands if c.feasible] or cands
+    # Pareto: minimize (vmem, time)
+    front = []
+    for c in sorted(feas, key=lambda c: (c.est_time_s, c.vmem_bytes)):
+        if not front or c.vmem_bytes < front[-1].vmem_bytes:
+            front.append(c)
+    best = min(feas, key=lambda c: c.est_time_s)
+    # knee: fastest config whose VMEM is within 2x of the smallest on front
+    min_vmem = min(c.vmem_bytes for c in front)
+    knee = min((c for c in front if c.vmem_bytes <= 4 * min_vmem),
+               key=lambda c: c.est_time_s, default=best)
+    return {"candidates": cands, "pareto": front, "fastest": best,
+            "knee": knee}

@@ -1,0 +1,160 @@
+"""Collective/op breakdown of a compiled cell — the §Perf 'profiler'.
+
+With no real TPU, the 'profile' is the lowered HLO: this tool attributes
+trip-count-weighted collective bytes to op shapes + source ops (metadata
+op_name), so hillclimbing can target the dominant transfers.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+from repro.core.hlo_cost import (HloCost, _shape_elems_bytes, _trip_count,
+                                 parse_computations)
+from repro.core.roofline import COLLECTIVES
+
+
+def collective_breakdown(hlo_text: str, top: int = 15) -> list[dict]:
+    parsed = parse_computations(hlo_text)
+    comps, entry = parsed["comps"], parsed["entry"]
+
+    # build multipliers per computation by walking call graph
+    mult: dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    i = 0
+    while i < len(order):
+        c = order[i]
+        i += 1
+        for ins in comps.get(c, []):
+            if ins.opcode == "while":
+                m = re.search(r"body=%?([\w\.\-]+)", ins.line)
+                if m:
+                    body = m.group(1)
+                    mult[body] += mult[c] * _trip_count(ins, comps)
+                    if body not in seen:
+                        seen.add(body)
+                        order.append(body)
+            elif ins.opcode in ("fusion", "call", "conditional"):
+                for attr in ("calls", "to_apply"):
+                    m = re.search(attr + r"=%?([\w\.\-]+)", ins.line)
+                    if m and m.group(1) in comps:
+                        nm = m.group(1)
+                        mult[nm] += mult[c]
+                        if nm not in seen:
+                            seen.add(nm)
+                            order.append(nm)
+
+    rows = defaultdict(lambda: {"count": 0.0, "bytes": 0.0})
+    for cname, instrs in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        defs = {i2.name: i2.type_str for i2 in instrs}
+        for ins in instrs:
+            base = ins.opcode.removesuffix("-start")
+            if base not in COLLECTIVES or ins.opcode.endswith("-done"):
+                continue
+            nbytes = 0
+            for op in ins.operands:
+                tm = re.match(r"^(\(.*\)|[\w\[\],\{\}]+)\s+%([\w\.\-]+)$", op)
+                if tm:
+                    nbytes += _shape_elems_bytes(tm.group(1))[1]
+                elif op.startswith("%"):
+                    nbytes += _shape_elems_bytes(defs.get(op[1:], ""))[1]
+            src = ""
+            mm = re.search(r'op_name="([^"]+)"', ins.line)
+            if mm:
+                src = mm.group(1)[:120]
+            shape_sig = ins.type_str[:60]
+            key = (base, shape_sig, src)
+            rows[key]["count"] += m
+            rows[key]["bytes"] += m * nbytes
+
+    out = [{"op": k[0], "shape": k[1], "source": k[2], **v}
+           for k, v in rows.items()]
+    out.sort(key=lambda r: -r["bytes"])
+    return out[:top]
+
+
+def _comp_multipliers(comps, entry):
+    mult: dict = defaultdict(float)
+    mult[entry] = 1.0
+    order, seen, i = [entry], {entry}, 0
+    while i < len(order):
+        c = order[i]
+        i += 1
+        for ins in comps.get(c, []):
+            if ins.opcode == "while":
+                m = re.search(r"body=%?([\w\.\-]+)", ins.line)
+                if m:
+                    body = m.group(1)
+                    mult[body] += mult[c] * _trip_count(ins, comps)
+                    if body not in seen:
+                        seen.add(body)
+                        order.append(body)
+            elif ins.opcode in ("fusion", "call", "conditional"):
+                for attr in ("calls", "to_apply"):
+                    m = re.search(attr + r"=%?([\w\.\-]+)", ins.line)
+                    if m and m.group(1) in comps:
+                        nm = m.group(1)
+                        mult[nm] += mult[c]
+                        if nm not in seen:
+                            seen.add(nm)
+                            order.append(nm)
+    return mult
+
+
+def top_bytes_ops(hlo_text: str, top: int = 20) -> list[dict]:
+    """All instructions ranked by trip-count-weighted operand+output bytes."""
+    from repro.core.hlo_cost import FUSED_BYTES_OPS, NO_BYTES
+    parsed = parse_computations(hlo_text)
+    comps, entry = parsed["comps"], parsed["entry"]
+    mult = _comp_multipliers(comps, entry)
+    rows = defaultdict(lambda: {"count": 0.0, "bytes": 0.0})
+    for cname, instrs in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        defs = {i2.name: i2.type_str for i2 in instrs}
+        for ins in instrs:
+            if ins.opcode in NO_BYTES or ins.opcode not in FUSED_BYTES_OPS:
+                continue
+            _, out_b = _shape_elems_bytes(ins.type_str)
+            nbytes = out_b
+            for op in ins.operands:
+                tm = re.match(r"^(\(.*\)|[\w\[\],\{\}]+)\s+%([\w\.\-]+)$", op)
+                if tm:
+                    nbytes += _shape_elems_bytes(tm.group(1))[1]
+                elif op.startswith("%"):
+                    nbytes += _shape_elems_bytes(defs.get(op[1:], ""))[1]
+            src = ""
+            mm = re.search(r'op_name="([^"]+)"', ins.line)
+            if mm:
+                src = mm.group(1)[-90:]
+            key = (ins.opcode, ins.type_str[:48], src)
+            rows[key]["count"] += m
+            rows[key]["bytes"] += m * nbytes
+    out = [{"op": k[0], "shape": k[1], "source": k[2], **v}
+           for k, v in rows.items()]
+    out.sort(key=lambda r: -r["bytes"])
+    return out[:top]
+
+
+def top_bytes_report(hlo_text: str, top: int = 20) -> str:
+    rows = top_bytes_ops(hlo_text, top)
+    lines = [f"{'bytes/dev':>12} {'count':>7} {'op':22} shape <- source"]
+    for r in rows:
+        lines.append(f"{r['bytes']:12.3e} {r['count']:7.0f} {r['op']:22} "
+                     f"{r['shape']} <- {r['source']}")
+    return "\n".join(lines)
+
+
+def dominant_ops_report(hlo_text: str, top: int = 15) -> str:
+    rows = collective_breakdown(hlo_text, top)
+    lines = [f"{'bytes/dev':>14} {'count':>8} {'op':18} shape/source"]
+    for r in rows:
+        lines.append(f"{r['bytes']:14.3e} {r['count']:8.0f} {r['op']:18} "
+                     f"{r['shape']}  <- {r['source']}")
+    return "\n".join(lines)

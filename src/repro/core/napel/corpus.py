@@ -1,0 +1,131 @@
+import os
+if __name__ == "__main__":
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=64"
+
+"""DoE training corpus for NAPEL/LEAPER: central-composite-design sweep over
+a parametric dense-LM config space, each point lowered+compiled (the 'few
+simulator runs' of thesis §5.2.4) and measured with the trip-count-aware
+HLO analyzer. Run as a subprocess (needs its own device-count flag):
+
+    python -m repro.core.napel.corpus [--out DIR] [--mesh 8x8]
+
+Records cache as JSON; the benchmarks load them via load_corpus().
+"""
+import argparse       # noqa: E402
+import dataclasses    # noqa: E402
+import json           # noqa: E402
+import time           # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import numpy as np    # noqa: E402
+
+from repro.configs.base import InputShape, ModelConfig  # noqa: E402
+from repro.core.napel.doe import central_composite  # noqa: E402
+
+CORPUS_DIR = Path(__file__).resolve().parents[4] / "experiments" / "napel_corpus"
+
+# 5-level DoE parameters (thesis Table 5.2 style)
+DOE_PARAMS = {
+    "num_layers": [2, 4, 8, 16, 24],
+    "d_model": [256, 512, 1024, 2048, 3072],
+    "seq": [512, 1024, 2048, 4096, 8192],
+    "batch": [16, 32, 64, 128, 256],
+}
+TEST_POINTS = [  # thesis 'test' inputs: outside the DoE grid
+    {"num_layers": 6, "d_model": 768, "seq": 1536, "batch": 48},
+    {"num_layers": 12, "d_model": 1536, "seq": 3072, "batch": 96},
+    {"num_layers": 20, "d_model": 2560, "seq": 6144, "batch": 24},
+    {"num_layers": 10, "d_model": 1280, "seq": 2048, "batch": 192},
+    {"num_layers": 14, "d_model": 896, "seq": 5120, "batch": 40},
+    {"num_layers": 18, "d_model": 1792, "seq": 1024, "batch": 160},
+]
+
+
+def make_cfg(p: dict) -> ModelConfig:
+    d = p["d_model"]
+    heads = max(4, d // 128)
+    return ModelConfig(
+        name=f"doe_l{p['num_layers']}_d{d}_s{p['seq']}_b{p['batch']}",
+        family="dense", num_layers=p["num_layers"], d_model=d,
+        num_heads=heads, num_kv_heads=heads, head_dim=d // heads,
+        d_ff=4 * d, vocab_size=32768)
+
+
+def compile_and_measure(cfg: ModelConfig, shape: InputShape, mesh) -> dict:
+    import jax
+    from repro.core.hlo_cost import analyze
+    from repro.models import Model
+    from repro.sharding.partition import activation_sharding
+    from repro.train.optimizer import OptimizerConfig
+    from repro.train.train_step import (abstract_batch, abstract_state,
+                                        make_train_step)
+    model = Model(cfg)
+    oc = OptimizerConfig()
+    fn = make_train_step(model, oc, mesh=mesh)
+    kwargs = {"state": abstract_state(model, oc, mesh),
+              "batch": abstract_batch(model, shape.seq_len,
+                                      shape.global_batch, mesh, "train")}
+    t0 = time.time()
+    with mesh, activation_sharding(mesh):
+        compiled = jax.jit(fn, donate_argnames=("state",)).lower(**kwargs) \
+            .compile()
+    wall = time.time() - t0
+    tc = analyze(compiled.as_text())
+    return {"flops": tc["flops"], "bytes": tc["bytes_accessed_fused"],
+            "coll": max(tc["collectives"]["total_bytes"], 1.0),
+            "compile_s": wall}
+
+
+def main():
+    import jax
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=str(CORPUS_DIR))
+    ap.add_argument("--mesh", default="8x8")
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    md, mm = (int(x) for x in args.mesh.split("x"))
+    mesh = jax.make_mesh((md, mm), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+    points = central_composite(DOE_PARAMS)
+    for tag, plist in (("doe", points), ("test", TEST_POINTS)):
+        for p in plist:
+            cfg = make_cfg(p)
+            path = out_dir / f"{tag}__{cfg.name}__{args.mesh}.json"
+            if path.exists():
+                continue
+            shape = InputShape(f"train_{p['seq']}", p["seq"], p["batch"],
+                               "train")
+            t0 = time.time()
+            try:
+                rec = compile_and_measure(cfg, shape, mesh)
+                rec.update(status="ok")
+            except Exception as e:
+                rec = {"status": "error", "error": str(e)[:500]}
+            rec.update(tag=tag, params=p, mesh=[md, mm])
+            path.write_text(json.dumps(rec))
+            print(f"{tag} {cfg.name}: {rec.get('status')} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+
+
+def load_corpus(out_dir=CORPUS_DIR) -> list[dict]:
+    out = []
+    for p in sorted(Path(out_dir).glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("status") == "ok":
+            out.append(r)
+    return out
+
+
+def corpus_features(rec: dict) -> np.ndarray:
+    from repro.configs.base import InputShape
+    from repro.core.napel.features import featurize
+    p = rec["params"]
+    cfg = make_cfg(p)
+    shape = InputShape("t", p["seq"], p["batch"], "train")
+    return featurize(cfg, shape, tuple(rec["mesh"]))
+
+
+if __name__ == "__main__":
+    main()

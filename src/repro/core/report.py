@@ -1,0 +1,104 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the cached
+dry-run JSON records."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def load(mesh=None, variant="baseline", dryrun_dir=DRYRUN_DIR):
+    out = []
+    for p in sorted(Path(dryrun_dir).glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("status") != "ok":
+            continue
+        if variant is not None and r.get("variant", "baseline") != variant:
+            continue
+        base_mesh = r["mesh"].split("__")[0]
+        if mesh is not None and base_mesh != mesh:
+            continue
+        r["base_mesh"] = base_mesh
+        out.append(r)
+    return out
+
+
+def _fmt_s(x):
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def roofline_table(mesh="pod16x16", variant="baseline") -> str:
+    rows = load(mesh, variant)
+    lines = [
+        "| arch | shape | compute | memory | collective | bottleneck | "
+        "frac | 6ND/HLO | HBM GiB/dev | fits |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        rl = r["roofline"]
+        mem = r["memory"]["live_bytes_per_device"] / 2 ** 30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt_s(rl['compute_s'])} | "
+            f"{_fmt_s(rl['memory_s'])} | {_fmt_s(rl['collective_s'])} | "
+            f"{rl['bottleneck']} | {rl['roofline_fraction']:.3f} | "
+            f"{min(r['useful_flops_ratio'], 9.99):.2f} | {mem:.1f} | "
+            f"{'y' if r['memory']['fits_hbm'] else 'n'} |")
+    return "\n".join(lines)
+
+
+def dryrun_table() -> str:
+    single = {(r["arch"], r["shape"]): r for r in load("pod16x16")}
+    multi = {(r["arch"], r["shape"]): r for r in load("pod2x16x16")}
+    lines = [
+        "| arch | shape | 16x16 compile | 2x16x16 compile | "
+        "collectives (count/GB per dev, 1-pod) | argbytes/dev |",
+        "|---|---|---|---|---|---|",
+    ]
+    for key in sorted(single):
+        r = single[key]
+        m = multi.get(key)
+        c = r["collectives"]
+        cs = " ".join(
+            f"{k.replace('collective-', 'c-')}:{v['count']:.0f}/"
+            f"{v['bytes'] / 1e9:.1f}"
+            for k, v in c.items()
+            if isinstance(v, dict) and v.get("count"))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r.get('compile_s', 0):.0f}s | "
+            f"{(m or {}).get('compile_s', float('nan')):.0f}s | {cs} | "
+            f"{r['memory']['argument_bytes'] / 2 ** 30:.2f}GiB |")
+    return "\n".join(lines)
+
+
+def variant_delta(arch, shape, variant, mesh="pod16x16") -> dict:
+    base = load(mesh, "baseline")
+    var = load(mesh, variant)
+    b = next((r for r in base if r["arch"] == arch and r["shape"] == shape),
+             None)
+    v = next((r for r in var if r["arch"] == arch and r["shape"] == shape),
+             None)
+    if not b or not v:
+        return {}
+    out = {"variant": variant}
+    for term in ("compute_s", "memory_s", "collective_s",
+                 "step_time_bound_s", "roofline_fraction"):
+        out[term] = {"before": b["roofline"][term],
+                     "after": v["roofline"][term],
+                     "x": (v["roofline"][term] /
+                           max(b["roofline"][term], 1e-15))}
+    out["mem_gib"] = {
+        "before": b["memory"]["live_bytes_per_device"] / 2 ** 30,
+        "after": v["memory"]["live_bytes_per_device"] / 2 ** 30}
+    return out
+
+
+if __name__ == "__main__":
+    print("## Roofline (single-pod 16x16, baseline)\n")
+    print(roofline_table())
+    print("\n## Dry-run (both meshes)\n")
+    print(dryrun_table())

@@ -1,0 +1,172 @@
+"""Sibyl RL agent: small DQN in pure JAX (thesis §7.5-7.6).
+
+Two 2-hidden-layer MLPs (training + target network, Fig. 7-8), experience
+replay, epsilon-greedy exploration, reward = negative served latency.
+Hyper-parameters follow thesis Table 7.2 defaults.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sibyl.env import N_FEATURES
+
+
+@dataclasses.dataclass
+class SibylConfig:
+    n_actions: int = 2
+    hidden: int = 32            # thesis: 2 hidden layers, 20-30 nodes
+    gamma: float = 0.9          # discount factor (Table 7.2)
+    lr: float = 1e-3
+    eps: float = 0.15           # initial exploration rate
+    eps_final: float = 0.01
+    eps_decay_steps: int = 3000
+    batch_size: int = 32
+    buffer_size: int = 4096
+    target_sync: int = 256
+    train_every: int = 2
+    seed: int = 0
+
+
+def _init_net(key, n_in, hidden, n_out):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = lambda k, a, b: jax.random.normal(k, (a, b)) / jnp.sqrt(a)
+    # bias the fast tier at init: exploration starts from the safe policy
+    b3 = jnp.zeros(n_out).at[0].set(0.5)
+    return {"w1": s(k1, n_in, hidden), "b1": jnp.zeros(hidden),
+            "w2": s(k2, hidden, hidden), "b2": jnp.zeros(hidden),
+            "w3": s(k3, hidden, n_out), "b3": b3}
+
+
+def _q(params, x):
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    h = jax.nn.relu(h @ params["w2"] + params["b2"])
+    return h @ params["w3"] + params["b3"]
+
+
+@partial(jax.jit, static_argnames=("gamma", "lr"))
+def _train_step(params, target_params, opt_m, opt_v, step, batch, *,
+                gamma: float, lr: float):
+    obs, act, rew, nobs = batch
+
+    def loss_fn(p):
+        q = _q(p, obs)
+        qa = jnp.take_along_axis(q, act[:, None], axis=1)[:, 0]
+        nq = _q(target_params, nobs).max(axis=1)
+        target = rew + gamma * nq
+        return jnp.mean((qa - jax.lax.stop_gradient(target)) ** 2)
+
+    loss, g = jax.value_and_grad(loss_fn)(params)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    step = step + 1
+    new_m = jax.tree.map(lambda m, gg: b1 * m + (1 - b1) * gg, opt_m, g)
+    new_v = jax.tree.map(lambda v, gg: b2 * v + (1 - b2) * gg * gg, opt_v, g)
+    def upd(p, m, v):
+        mh = m / (1 - b1 ** step)
+        vh = v / (1 - b2 ** step)
+        return p - lr * mh / (jnp.sqrt(vh) + eps)
+    new_params = jax.tree.map(upd, params, new_m, new_v)
+    return new_params, new_m, new_v, step, loss
+
+
+class SibylAgent:
+    name = "sibyl"
+
+    def __init__(self, cfg: SibylConfig = SibylConfig()):
+        self.cfg = cfg
+        key = jax.random.PRNGKey(cfg.seed)
+        self.params = _init_net(key, N_FEATURES, cfg.hidden, cfg.n_actions)
+        self.target_params = jax.tree.map(jnp.copy, self.params)
+        self.opt_m = jax.tree.map(jnp.zeros_like, self.params)
+        self.opt_v = jax.tree.map(jnp.zeros_like, self.params)
+        self.opt_step = jnp.zeros((), jnp.int32)
+        self.buffer: deque = deque(maxlen=cfg.buffer_size)
+        self.rng = np.random.default_rng(cfg.seed)
+        self.t = 0
+        self._pending = None
+        self.losses: list[float] = []
+
+    # Policy interface ------------------------------------------------------
+    @property
+    def epsilon(self) -> float:
+        c = self.cfg
+        frac = min(1.0, self.t / max(c.eps_decay_steps, 1))
+        return c.eps + (c.eps_final - c.eps) * frac
+
+    def act(self, obs: np.ndarray, n_devices: int) -> int:
+        n_act = min(self.cfg.n_actions, n_devices)
+        if self.rng.random() < self.epsilon:
+            a = int(self.rng.integers(0, n_act))
+        else:
+            q = np.asarray(_q(self.params, jnp.asarray(obs[None])))[0]
+            a = int(np.argmax(q[:n_act]))
+        self._pending = (obs.copy(), a)
+        return a
+
+    def feedback(self, reward: float, next_obs=None):
+        if self._pending is None:
+            return
+        obs, act = self._pending
+        nobs = next_obs if next_obs is not None else obs
+        self.buffer.append((obs, act, float(np.clip(reward, -50.0, 0.0)),
+                            nobs.copy()))
+        self._pending = None
+        self.t += 1
+        cfg = self.cfg
+        if self.t % cfg.train_every == 0 and len(self.buffer) >= cfg.batch_size:
+            idx = self.rng.integers(0, len(self.buffer), cfg.batch_size)
+            rows = [self.buffer[i] for i in idx]
+            batch = (jnp.asarray(np.stack([r[0] for r in rows])),
+                     jnp.asarray(np.array([r[1] for r in rows], np.int32)),
+                     jnp.asarray(np.array([r[2] for r in rows], np.float32)),
+                     jnp.asarray(np.stack([r[3] for r in rows])))
+            (self.params, self.opt_m, self.opt_v, self.opt_step,
+             loss) = _train_step(self.params, self.target_params, self.opt_m,
+                                 self.opt_v, self.opt_step, batch,
+                                 gamma=cfg.gamma, lr=cfg.lr)
+            self.losses.append(float(loss))
+        if self.t % cfg.target_sync == 0:
+            self.target_params = jax.tree.map(jnp.copy, self.params)
+
+    # Explainability (thesis §7.9): mean |dQ/dfeature| over recent states ---
+    def explain(self, n: int = 256) -> np.ndarray:
+        if not self.buffer:
+            return np.zeros(N_FEATURES)
+        rows = [self.buffer[i] for i in
+                self.rng.integers(0, len(self.buffer), min(n, len(self.buffer)))]
+        obs = jnp.asarray(np.stack([r[0] for r in rows]))
+        grad = jax.vmap(jax.grad(lambda o: _q(self.params, o[None]).max()))(obs)
+        return np.asarray(jnp.abs(grad).mean(axis=0))
+
+
+def run_policy(env, trace, policy, warmup: int = 0) -> dict:
+    """Drive a policy through a trace; online learning via feedback().
+    `warmup`: number of leading requests excluded from the latency stats
+    (the agent keeps learning throughout — Sibyl is online)."""
+    env.reset()
+    lats = []
+    prev_obs = None
+    for (lba, size, is_write, dt) in trace:
+        obs = env.observe(lba, size, is_write)
+        if is_write or lba not in env.pages:
+            action = policy.act(obs, len(env.devices))
+        else:
+            action = env.pages[lba].device
+        lat, reward = env.step(lba, size, is_write, action, dt)
+        if hasattr(policy, "feedback"):
+            try:
+                policy.feedback(reward, next_obs=obs)
+            except TypeError:
+                policy.feedback(reward)
+        lats.append(lat)
+        prev_obs = obs
+    lats = np.array(lats[warmup:])
+    return {"avg_latency_us": float(lats.mean()),
+            "p99_latency_us": float(np.percentile(lats, 99)),
+            "iops": 1e6 * len(lats) / max(env.now_us, 1.0),
+            "migrations": env.migrations}

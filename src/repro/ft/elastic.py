@@ -1,0 +1,56 @@
+"""Elastic scaling plan: map a checkpoint taken on one mesh onto another.
+
+Checkpoints store logical (unsharded) arrays, so restore-on-new-mesh is a
+device_put with the new shardings (checkpoint/checkpointer.py). This module
+adds the *planning* layer: validate that a target mesh can host the model
+(divisibility, memory estimate) and produce the new sharding tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.models import Model
+from repro.sharding.partition import tree_shardings
+from repro.train.optimizer import OptimizerConfig, opt_state_logical
+from repro.train.train_step import abstract_state
+
+
+@dataclasses.dataclass
+class ElasticPlan:
+    ok: bool
+    reasons: list
+    shardings: object | None
+    bytes_per_device: int
+
+
+def plan_rescale(model: Model, oc: OptimizerConfig, mesh: Mesh,
+                 hbm_bytes: int = 16 * 2 ** 30) -> ElasticPlan:
+    reasons = []
+    abstract = abstract_state(model, oc, None)
+    logical = {"params": model.logical(),
+               "opt": opt_state_logical(model.logical(), oc)}
+    shardings = tree_shardings(abstract, logical, mesh)
+
+    import jax
+    total = 0
+    n_dev = mesh.devices.size
+    for leaf, sh in zip(jax.tree.leaves(abstract), jax.tree.leaves(
+            shardings, is_leaf=lambda x: hasattr(x, "spec"))):
+        nbytes = int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        spec = sh.spec
+        shard_factor = 1
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        for entry in spec:
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            for ax in axes:
+                shard_factor *= sizes[ax]
+        total += nbytes // shard_factor
+    if total > hbm_bytes:
+        reasons.append(f"state {total / 2 ** 30:.1f} GiB/device exceeds HBM "
+                       f"budget {hbm_bytes / 2 ** 30:.0f} GiB")
+    return ElasticPlan(not reasons, reasons, shardings, total)

@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: blocked online-softmax attention (GQA, causal/window).
+
+Grid (batch, q_head, q_blocks, kv_blocks); the kv dimension is innermost so
+the (m, l, acc) running softmax lives in VMEM scratch across kv steps —
+the standard TPU flash schedule. Fully-masked diagonal blocks are skipped.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  causal: bool, window: int, bq: int, bk: int, scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # block-level skip conditions
+    run = True
+    if causal:
+        run = qi * bq + bq - 1 >= ki * bk          # any unmasked element
+    if window:
+        run = jnp.logical_and(run, ki * bk + bk - 1 > qi * bq - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale      # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)              # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        ok = jnp.ones((bq, bk), bool)
+        if causal:
+            ok &= k_pos <= q_pos
+        if window:
+            ok &= k_pos > q_pos - window
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_ref[...]                              # (bq, 1)
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + p.sum(axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr + pv
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           block_q: int = 128, block_k: int = 128,
+                           softmax_scale=None, interpret: bool = False):
+    """q: (b, sq, hq, d); k/v: (b, skv, hkv, d) -> (b, sq, hq, d)."""
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(d)
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    assert sq % bq == 0 and skv % bk == 0, (sq, bq, skv, bk)
+
+    # layout: (b, h, s, d)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    grid = (b, hq, sq // bq, skv // bk)
+    kernel = functools.partial(_flash_kernel, causal=causal, window=window,
+                               bq=bq, bk=bk, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bi, hi, qi, ki: (bi, hi // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bi, hi, qi, ki: (bi, hi // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: COSMO horizontal diffusion (NERO, thesis Ch. 3).
+
+NERO's FPGA design streams 2D slices of the 3D grid into on-chip
+URAM/BRAM; the TPU-native analogue keeps one (or a small batch of)
+z-plane(s) resident in VMEM per grid step and writes the interior back.
+The z-batch block size is the NERO "window" — auto-tunable
+(repro.core.autotune), and Pareto-dependent on dtype exactly as the
+thesis observes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.hdiff.ref import COEFF, HALO
+
+
+def _hdiff_kernel(src_ref, out_ref, *, coeff: float):
+    p = src_ref[...]                     # (bz, ny, nx) in VMEM
+    bz, ny, nx = p.shape
+
+    def s(dy, dx):
+        return p[:, 2 + dy:ny - 2 + dy, 2 + dx:nx - 2 + dx]
+
+    def lap(dy, dx):
+        return (4.0 * s(dy, dx)
+                - (s(dy - 1, dx) + s(dy + 1, dx)
+                   + s(dy, dx - 1) + s(dy, dx + 1)))
+
+    lap_c = lap(0, 0)
+    flx_c = lap(0, 1) - lap_c
+    flx_c = jnp.where(flx_c * (s(0, 1) - s(0, 0)) > 0, 0.0, flx_c)
+    flx_m = lap_c - lap(0, -1)
+    flx_m = jnp.where(flx_m * (s(0, 0) - s(0, -1)) > 0, 0.0, flx_m)
+    fly_c = lap(1, 0) - lap_c
+    fly_c = jnp.where(fly_c * (s(1, 0) - s(0, 0)) > 0, 0.0, fly_c)
+    fly_m = lap_c - lap(-1, 0)
+    fly_m = jnp.where(fly_m * (s(0, 0) - s(-1, 0)) > 0, 0.0, fly_m)
+
+    out = s(0, 0) - coeff * ((flx_c - flx_m) + (fly_c - fly_m))
+    full = p  # halo ring passes through
+    full = full.at[:, HALO:ny - HALO, HALO:nx - HALO].set(out.astype(p.dtype))
+    out_ref[...] = full
+
+
+def hdiff_pallas(src, *, coeff: float = COEFF, block_z: int = 1,
+                 interpret: bool = False):
+    """src: (nz, ny, nx). block_z = NERO window depth (z-planes per step)."""
+    nz, ny, nx = src.shape
+    assert nz % block_z == 0, (nz, block_z)
+    grid = (nz // block_z,)
+    return pl.pallas_call(
+        functools.partial(_hdiff_kernel, coeff=coeff),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_z, ny, nx), lambda z: (z, 0, 0))],
+        out_specs=pl.BlockSpec((block_z, ny, nx), lambda z: (z, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(src.shape, src.dtype),
+        interpret=interpret,
+    )(src)

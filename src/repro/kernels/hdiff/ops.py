@@ -1,0 +1,22 @@
+"""Public jit'd entry point for horizontal diffusion."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.hdiff import ref
+from repro.kernels.hdiff.hdiff import hdiff_pallas
+
+
+@partial(jax.jit, static_argnames=("use_kernel", "block_z", "interpret"))
+def hdiff(src, *, use_kernel: bool = True, block_z: int = 1,
+          interpret: bool = True):
+    """Horizontal diffusion over a (nz, ny, nx) grid.
+
+    use_kernel=True runs the Pallas TPU kernel (interpret=True executes the
+    kernel body on CPU for validation); False runs the jnp reference.
+    """
+    if use_kernel:
+        return hdiff_pallas(src, block_z=block_z, interpret=interpret)
+    return ref.hdiff(src)

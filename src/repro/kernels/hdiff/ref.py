@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the COSMO horizontal diffusion compound stencil.
+
+Laplacian -> flux-limited fluxes -> output (thesis Ch.3 Algorithm 1 /
+Fig. 3-2). Grid layout (nz, ny, nx); halo = 2 cells in y and x; the halo
+ring of the output is passed through unchanged.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+HALO = 2
+COEFF = 0.025
+
+
+def hdiff_plane(src, coeff: float = COEFF):
+    """One z-plane. src: (ny, nx) -> (ny, nx)."""
+    lap = (4.0 * src
+           - (jnp.roll(src, 1, 0) + jnp.roll(src, -1, 0)
+              + jnp.roll(src, 1, 1) + jnp.roll(src, -1, 1)))
+    # fluxes between cell i and i+1 (x) / j and j+1 (y), flux-limited
+    flx = jnp.roll(lap, -1, 1) - lap               # f_x[j, i] = lap[i+1]-lap[i]
+    dif = jnp.roll(src, -1, 1) - src
+    flx = jnp.where(flx * dif > 0.0, 0.0, flx)
+    fly = jnp.roll(lap, -1, 0) - lap               # f_y[j, i] = lap[j+1]-lap[j]
+    dify = jnp.roll(src, -1, 0) - src
+    fly = jnp.where(fly * dify > 0.0, 0.0, fly)
+    out = src - coeff * ((flx - jnp.roll(flx, 1, 1))
+                         + (fly - jnp.roll(fly, 1, 0)))
+    # only interior (halo ring passes through)
+    ny, nx = src.shape
+    jj, ii = jnp.meshgrid(jnp.arange(ny), jnp.arange(nx), indexing="ij")
+    interior = ((jj >= HALO) & (jj < ny - HALO) &
+                (ii >= HALO) & (ii < nx - HALO))
+    return jnp.where(interior, out, src)
+
+
+def hdiff(src, coeff: float = COEFF):
+    """src: (nz, ny, nx) -> (nz, ny, nx). Independent per z-plane."""
+    import jax
+    return jax.vmap(lambda p: hdiff_plane(p, coeff))(src)

@@ -1,0 +1,17 @@
+"""Public entry point for the RG-LRU linear recurrence."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.rglru_scan import ref
+from repro.kernels.rglru_scan.rglru_scan import rglru_scan_pallas
+
+
+@partial(jax.jit, static_argnames=("use_kernel", "chunk", "interpret"))
+def lru_scan(a, b, *, use_kernel: bool = True, chunk: int = 256,
+             interpret: bool = True):
+    if use_kernel:
+        return rglru_scan_pallas(a, b, chunk=chunk, interpret=interpret)
+    return ref.lru_scan(a, b)

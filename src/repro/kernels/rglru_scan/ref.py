@@ -1,0 +1,20 @@
+"""Pure-jnp oracle: sequential gated linear recurrence h_t = a_t h + b_t."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lru_scan(a, b):
+    """a, b: (B, S, W) fp32. Returns h: (B, S, W), h0 = b_0 (zero init)."""
+    def step(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+
+    def per_batch(ab, bb):
+        h0 = jnp.zeros((a.shape[-1],), jnp.float32)
+        _, hs = jax.lax.scan(step, h0, (ab, bb))
+        return hs
+
+    return jax.vmap(per_batch)(a.astype(jnp.float32), b.astype(jnp.float32))

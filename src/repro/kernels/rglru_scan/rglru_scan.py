@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: RG-LRU linear recurrence, chunked.
+
+Grid (batch, chunks); chunks innermost so the (1, W) hidden state persists
+in VMEM scratch. Within a chunk the recurrence runs sequentially over rows
+(VPU elementwise work); HBM sees each element exactly once in and once out —
+the XLA associative_scan path instead does log2(S) full passes over the
+(B, S, W) sequence.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _lru_kernel(a_ref, b_ref, h_ref, state_ref, *, q: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    def step(t, h):
+        at = a_ref[0, t, :].astype(jnp.float32)
+        bt = b_ref[0, t, :].astype(jnp.float32)
+        h = at * h + bt
+        h_ref[0, t, :] = h.astype(h_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, q, step, state_ref[0])
+    state_ref[0] = h
+
+
+def rglru_scan_pallas(a, b, *, chunk: int = 256, interpret: bool = False):
+    """a, b: (B, S, W) -> h (B, S, W) fp32."""
+    B, S, W = a.shape
+    q = min(chunk, S)
+    assert S % q == 0, (S, q)
+    grid = (B, S // q)
+    return pl.pallas_call(
+        functools.partial(_lru_kernel, q=q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q, W), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, q, W), lambda bi, ci: (bi, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q, W), lambda bi, ci: (bi, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, W), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, W), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

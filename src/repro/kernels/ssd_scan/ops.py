@@ -1,0 +1,18 @@
+"""Public entry point for the SSD scan."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.ssd_scan import ref
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan_pallas
+
+
+@partial(jax.jit, static_argnames=("use_kernel", "chunk", "interpret"))
+def ssd_scan(x, b_mat, c_mat, dt, a, *, use_kernel: bool = True,
+             chunk: int = 128, interpret: bool = True):
+    if use_kernel:
+        return ssd_scan_pallas(x, b_mat, c_mat, dt, a, chunk=chunk,
+                               interpret=interpret)
+    return ref.ssd(x, b_mat, c_mat, dt, a)[0]

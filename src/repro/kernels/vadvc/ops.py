@@ -1,0 +1,18 @@
+"""Public jit'd entry point for vertical advection."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.vadvc import ref
+from repro.kernels.vadvc.vadvc import vadvc_pallas
+
+
+@partial(jax.jit, static_argnames=("use_kernel", "tile_y", "interpret"))
+def vadvc(ustage, upos, utens, utens_stage, wcon, *, use_kernel: bool = True,
+          tile_y: int = 4, interpret: bool = True):
+    if use_kernel:
+        return vadvc_pallas(ustage, upos, utens, utens_stage, wcon,
+                            tile_y=tile_y, interpret=interpret)
+    return ref.vadvc(ustage, upos, utens, utens_stage, wcon)

@@ -1,0 +1,72 @@
+"""Pure-jnp oracle for COSMO vertical advection (Thomas tridiagonal solve).
+
+Follows the gridtools ``vertical_advection_dycore`` u-stage benchmark the
+thesis accelerates: an implicit vertical advection with forward/backward
+sweeps along z (the dependency chain that limits parallelism to the
+horizontal plane — thesis §3.2.1).
+
+Fields (nz, ny, nx); wcon staggered: (nz+1, ny, nx+1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+DTR_STAGE = 3.0 / 20.0
+BET_M = 0.5
+BET_P = 0.5
+
+
+def vadvc(ustage, upos, utens, utens_stage, wcon):
+    nz = ustage.shape[0]
+
+    def gcv_at(k):  # wcon averaged onto the u-point, level k+1 interface
+        return 0.25 * (wcon[k + 1, :, 1:] + wcon[k + 1, :, :-1])
+
+    def gav_at(k):  # level k interface
+        return -0.25 * (wcon[k, :, 1:] + wcon[k, :, :-1])
+
+    # ---- forward sweep (vectorized over the horizontal plane) ----
+    def fwd_body(carry, k):
+        ccol_prev, dcol_prev = carry
+        gav = gav_at(k)
+        gcv = gcv_at(k)
+        first = k == 0
+        last = k == nz - 1
+
+        as_ = gav * BET_M
+        cs = gcv * BET_M
+        acol = gav * BET_P
+        ccol = gcv * BET_P
+
+        u_k = ustage[k]
+        u_km1 = ustage[jnp.maximum(k - 1, 0)]
+        u_kp1 = ustage[jnp.minimum(k + 1, nz - 1)]
+        corr_lo = -as_ * (u_km1 - u_k)
+        corr_hi = -cs * (u_kp1 - u_k)
+        correction = jnp.where(first, corr_hi,
+                               jnp.where(last, corr_lo, corr_lo + corr_hi))
+
+        acol = jnp.where(first, 0.0, acol)
+        ccol = jnp.where(last, 0.0, ccol)
+        bcol = DTR_STAGE - acol - ccol
+
+        dcol = (DTR_STAGE * upos[k] + utens[k] + utens_stage[k] + correction)
+        divided = 1.0 / (bcol - ccol_prev * acol)
+        ccol_out = ccol * divided
+        dcol_out = (dcol - dcol_prev * acol) * divided
+        return (ccol_out, dcol_out), (ccol_out, dcol_out)
+
+    plane = ustage.shape[1:]
+    z0 = (jnp.zeros(plane, ustage.dtype), jnp.zeros(plane, ustage.dtype))
+    _, (ccol, dcol) = jax.lax.scan(fwd_body, z0, jnp.arange(nz))
+
+    # ---- backward sweep ----
+    def bwd_body(data_next, k):
+        datacol = dcol[k] - ccol[k] * data_next
+        out_k = DTR_STAGE * (datacol - upos[k])
+        return datacol, out_k
+
+    _, outs = jax.lax.scan(bwd_body, jnp.zeros(plane, ustage.dtype),
+                           jnp.arange(nz - 1, -1, -1))
+    return outs[::-1]

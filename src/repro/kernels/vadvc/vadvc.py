@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: vertical advection (NERO's forward/backward sweep).
+
+Grid over y-tiles: each step holds a (nz, ty, nx) column slab + scratch
+ccol/dcol in VMEM and runs the sequential Thomas sweeps along z with the
+horizontal plane vectorized on the VPU — NERO's "parallel over (x, y),
+sequential over z" PE structure mapped onto the TPU memory hierarchy.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.vadvc.ref import BET_M, BET_P, DTR_STAGE
+
+
+def _vadvc_kernel(ustage_ref, upos_ref, utens_ref, utens_stage_ref, wcon_ref,
+                  out_ref, ccol_ref, dcol_ref):
+    nz = ustage_ref.shape[0]
+
+    def gav(k):
+        w = wcon_ref[k]                       # (ty, nx+1)
+        return -0.25 * (w[:, 1:] + w[:, :-1])
+
+    def gcv(k):
+        w = wcon_ref[k + 1]
+        return 0.25 * (w[:, 1:] + w[:, :-1])
+
+    def rhs(k, correction):
+        return (DTR_STAGE * upos_ref[k] + utens_ref[k] + utens_stage_ref[k]
+                + correction)
+
+    # ---- k = 0 ----
+    g = gcv(0)
+    cs = g * BET_M
+    ccol0 = g * BET_P
+    bcol = DTR_STAGE - ccol0
+    corr = -cs * (ustage_ref[1] - ustage_ref[0])
+    div = 1.0 / bcol
+    ccol_ref[0] = ccol0 * div
+    dcol_ref[0] = rhs(0, corr) * div
+
+    # ---- forward k = 1 .. nz-2 ----
+    def fwd(k, _):
+        ga, gc = gav(k), gcv(k)
+        as_, cs = ga * BET_M, gc * BET_M
+        acol, ccol = ga * BET_P, gc * BET_P
+        bcol = DTR_STAGE - acol - ccol
+        corr = (-as_ * (ustage_ref[k - 1] - ustage_ref[k])
+                - cs * (ustage_ref[k + 1] - ustage_ref[k]))
+        div = 1.0 / (bcol - ccol_ref[k - 1] * acol)
+        ccol_ref[k] = ccol * div
+        dcol_ref[k] = (rhs(k, corr) - dcol_ref[k - 1] * acol) * div
+        return 0
+
+    jax.lax.fori_loop(1, nz - 1, fwd, 0)
+
+    # ---- k = nz-1 ----
+    ga = gav(nz - 1)
+    as_ = ga * BET_M
+    acol = ga * BET_P
+    bcol = DTR_STAGE - acol
+    corr = -as_ * (ustage_ref[nz - 2] - ustage_ref[nz - 1])
+    div = 1.0 / (bcol - ccol_ref[nz - 2] * acol)
+    dcol_ref[nz - 1] = (rhs(nz - 1, corr) - dcol_ref[nz - 2] * acol) * div
+
+    # ---- backward sweep ----
+    out_ref[nz - 1] = DTR_STAGE * (dcol_ref[nz - 1] - upos_ref[nz - 1])
+    dcol_last = dcol_ref[nz - 1]
+
+    def bwd(i, data_next):
+        k = nz - 2 - i
+        datacol = dcol_ref[k] - ccol_ref[k] * data_next
+        out_ref[k] = DTR_STAGE * (datacol - upos_ref[k])
+        return datacol
+
+    jax.lax.fori_loop(0, nz - 1, bwd, dcol_last)
+
+
+def vadvc_pallas(ustage, upos, utens, utens_stage, wcon, *, tile_y: int = 4,
+                 interpret: bool = False):
+    """Fields (nz, ny, nx); wcon (nz+1, ny, nx+1). tile_y = NERO window."""
+    nz, ny, nx = ustage.shape
+    assert ny % tile_y == 0, (ny, tile_y)
+    grid = (ny // tile_y,)
+    f_spec = pl.BlockSpec((nz, tile_y, nx), lambda j: (0, j, 0))
+    w_spec = pl.BlockSpec((nz + 1, tile_y, nx + 1), lambda j: (0, j, 0))
+    return pl.pallas_call(
+        _vadvc_kernel,
+        grid=grid,
+        in_specs=[f_spec, f_spec, f_spec, f_spec, w_spec],
+        out_specs=f_spec,
+        out_shape=jax.ShapeDtypeStruct(ustage.shape, ustage.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((nz, tile_y, nx), ustage.dtype),
+            pltpu.VMEM((nz, tile_y, nx), ustage.dtype),
+        ],
+        interpret=interpret,
+    )(ustage, upos, utens, utens_stage, wcon)

@@ -1,0 +1,208 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell and
+record roofline inputs. No real allocation — everything is ShapeDtypeStruct.
+
+Usage:
+  python -m repro.launch.dryrun --arch mamba2-780m --shape train_4k
+  python -m repro.launch.dryrun --all                 # every assigned cell
+  python -m repro.launch.dryrun --all --multi-pod     # 2x16x16 pod mesh
+Results cached as JSON under experiments/dryrun/.
+"""
+import argparse   # noqa: E402
+import json       # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax        # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import SHAPES, get_config, list_archs, shapes_for  # noqa: E402
+from repro.core.roofline import (TPU_V5E, model_flops, parse_collectives,  # noqa: E402
+                                 roofline_terms)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import Model  # noqa: E402
+from repro.serve.steps import (abstract_caches_sharded,  # noqa: E402
+                               abstract_params_sharded, make_decode_step,
+                               make_prefill_step)
+from repro.train.optimizer import OptimizerConfig  # noqa: E402
+from repro.train.train_step import (abstract_batch, abstract_state,  # noqa: E402
+                                    make_train_step)
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def input_specs(arch: str, shape_name: str, mesh, *, variant: str = "baseline"):
+    """ShapeDtypeStruct stand-ins (with shardings) for every input of the
+    step function of this cell. Returns (fn, kwargs, model, shape, rules)."""
+    cfg = get_config(arch)
+    rules = None
+    if variant != "baseline":
+        from repro.launch import variants
+        cfg, rules = variants.apply(variant, cfg)
+    shape = SHAPES[shape_name]
+    model = Model(cfg)
+    oc = OptimizerConfig()
+
+    if shape.kind == "train":
+        fn = make_train_step(model, oc, mesh=mesh,
+                             num_microbatches=cfg.train_microbatches)
+        kwargs = {
+            "state": abstract_state(model, oc, mesh, rules),
+            "batch": abstract_batch(model, shape.seq_len, shape.global_batch,
+                                    mesh, kind="train", rules=rules),
+        }
+    elif shape.kind == "prefill":
+        fn = make_prefill_step(model)
+        kwargs = {
+            "params": abstract_params_sharded(model, mesh, rules),
+            "batch": abstract_batch(model, shape.seq_len, shape.global_batch,
+                                    mesh, kind="prefill", rules=rules),
+        }
+    else:  # decode
+        fn = make_decode_step(model)
+        kwargs = {
+            "params": abstract_params_sharded(model, mesh, rules),
+            "caches": abstract_caches_sharded(model, shape.global_batch,
+                                              shape.seq_len, mesh, rules),
+            "batch": abstract_batch(model, shape.seq_len, shape.global_batch,
+                                    mesh, kind="decode", rules=rules),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+    return fn, kwargs, model, shape, rules
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: Path = OUT_DIR, force: bool = False,
+             hw=TPU_V5E, variant: str = "baseline",
+             save_hlo: bool = False) -> dict:
+    tag = "" if variant == "baseline" else f"__variant_{variant}"
+    mesh_name = ("pod2x16x16" if multi_pod else "pod16x16") + tag
+    out_path = out_dir / f"{arch}__{shape_name}__{mesh_name}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "chips": chips, "status": "ok", "variant": variant}
+    try:
+        fn, kwargs, model, shape, rules = input_specs(arch, shape_name, mesh,
+                                                      variant=variant)
+        donate = ("state",) if shape.kind == "train" else (
+            ("caches",) if shape.kind == "decode" else ())
+        from repro.sharding.partition import activation_sharding
+        t0 = time.time()
+        with mesh, activation_sharding(mesh, rules):
+            lowered = jax.jit(fn, donate_argnames=donate).lower(**kwargs)
+            rec["lower_s"] = round(time.time() - t0, 2)
+            t0 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t0, 2)
+
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "code_bytes": int(ma.generated_code_size_in_bytes),
+        }
+        live = (ma.argument_size_in_bytes + ma.output_size_in_bytes +
+                ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+        rec["memory"]["live_bytes_per_device"] = int(live)
+        rec["memory"]["fits_hbm"] = bool(live <= hw.hbm_gib * 2**30)
+
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+        rec["cost_xla_raw"] = {  # NOTE: counts while bodies once — see hlo_cost
+            "flops_per_device": float(ca.get("flops", 0.0)),
+            "bytes_per_device": float(ca.get("bytes accessed", 0.0)),
+        }
+
+        # trip-count-aware analysis over the compiled HLO
+        from repro.core.hlo_cost import analyze as hlo_analyze
+        tc = hlo_analyze(compiled.as_text())
+        flops = tc["flops"]
+        rec["cost"] = {"flops_per_device": flops,
+                       "bytes_per_device": tc["bytes_accessed_fused"],
+                       "bytes_per_device_unfused": tc["bytes_accessed"]}
+        rec["collectives"] = tc["collectives"]
+        rec["cost_warnings"] = tc["warnings"]
+
+        # memory term uses fusion-aware bytes (TPU would fuse elementwise
+        # chains; raw per-instruction bytes also recorded above)
+        rec["roofline"] = roofline_terms(
+            flops, tc["bytes_accessed_fused"],
+            tc["collectives"]["total_bytes"], hw)
+        mf = model_flops(model.cfg, shape, chips)
+        rec["model_flops_per_device"] = mf
+        rec["useful_flops_ratio"] = (mf / flops) if flops else 0.0
+        rec["hardware"] = hw.name
+        if save_hlo:
+            hlo_path = out_path.with_suffix(".hlo.txt")
+            hlo_path.write_text(compiled.as_text())
+            rec["hlo_path"] = str(hlo_path)
+    except Exception as e:  # record failures for triage, don't hide them
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+def all_cells():
+    cells = []
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape in shapes_for(cfg):
+            cells.append((arch, shape.name))
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--out", default=str(OUT_DIR))
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    cells = all_cells() if args.all else [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    n_fail = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            t0 = time.time()
+            rec = run_cell(arch, shape, multi_pod=mp, out_dir=out_dir,
+                           force=args.force, variant=args.variant,
+                           save_hlo=args.save_hlo)
+            status = rec["status"]
+            n_fail += status != "ok"
+            extra = ""
+            if status == "ok":
+                r = rec["roofline"]
+                extra = (f"bottleneck={r['bottleneck']} "
+                         f"frac={r['roofline_fraction']:.3f} "
+                         f"compile={rec.get('compile_s', 0):.0f}s")
+            else:
+                extra = rec["error"][:120]
+            print(f"[{time.strftime('%H:%M:%S')}] {arch:24s} {shape:12s} "
+                  f"{'2x16x16' if mp else '16x16':8s} {status:5s} {extra} "
+                  f"(wall {time.time() - t0:.0f}s)", flush=True)
+    print(f"done; {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

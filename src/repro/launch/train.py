@@ -1,0 +1,55 @@
+"""Training launcher: supervised (restartable) training of any --arch.
+
+    PYTHONPATH=src python -m repro.launch.train --arch mamba2-780m \
+        --steps 200 --seq 128 --batch 8 --smoke
+
+--smoke uses the reduced config (CPU-runnable); full configs assume a real
+TPU fleet (the multi-pod dry-run proves those lower+compile).
+"""
+from __future__ import annotations
+
+import argparse
+import logging
+
+from repro.configs import get_config, list_archs, smoke_config
+from repro.ft.supervisor import Supervisor
+from repro.train.optimizer import OptimizerConfig
+from repro.train.trainer import Trainer, TrainJobConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--max-restarts", type=int, default=3)
+    args = ap.parse_args()
+
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(name)s %(message)s")
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    oc = OptimizerConfig(lr=args.lr, warmup_steps=min(100, args.steps // 10),
+                         total_steps=args.steps)
+    job = TrainJobConfig(steps=args.steps, seq_len=args.seq,
+                         global_batch=args.batch,
+                         checkpoint_dir=args.checkpoint_dir,
+                         num_microbatches=args.microbatches,
+                         grad_compression=args.grad_compression)
+
+    def make_loop():
+        return Trainer(cfg, oc, job).run
+
+    out = Supervisor(max_restarts=args.max_restarts).run(make_loop)
+    print(f"done: final loss {out['final_metrics'].get('loss'):.4f} over "
+          f"{args.steps} steps; stragglers={out['stragglers']}")
+
+
+if __name__ == "__main__":
+    main()

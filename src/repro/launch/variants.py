@@ -1,0 +1,97 @@
+"""Named optimization variants for §Perf hillclimbing.
+
+A variant transforms (ModelConfig, sharding rules) before a dry-run cell is
+lowered; `dryrun.run_cell_variant` compiles it and records the roofline
+delta vs baseline. Each variant encodes one hypothesis from the
+hypothesis → change → measure → validate loop (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+from repro.sharding.partition import DEFAULT_RULES
+
+
+def _rules(**updates):
+    r = {k: list(v) for k, v in DEFAULT_RULES.items()}
+    for k, v in updates.items():
+        r[k] = v
+    return r
+
+
+def apply(variant: str, cfg: ModelConfig):
+    """Returns (cfg', rules') for a named variant."""
+    if variant == "baseline":
+        return cfg, None
+
+    # ---- mamba2 / SSD (memory-bound) ----
+    if variant.startswith("ssm_chunk"):
+        q = int(variant.removeprefix("ssm_chunk"))
+        return dataclasses.replace(cfg, ssm_chunk=q), None
+    if variant == "ssm_bf16":
+        return dataclasses.replace(cfg, ssm_bf16_intra=True), None
+    if variant == "ssm_bf16_sp":
+        return (dataclasses.replace(cfg, ssm_bf16_intra=True),
+                _rules(seq=[("model",)]))
+
+    # ---- sequence parallelism: shard activations' seq dim over model ----
+    if variant == "seq_parallel":
+        return cfg, _rules(seq=[("model",)])
+
+    # ---- microbatched training (memory) ----
+    if variant.startswith("microbatch"):
+        n = int(variant.removeprefix("microbatch"))
+        return dataclasses.replace(cfg, train_microbatches=n), None
+
+    # ---- remat policy ----
+    if variant == "no_remat":
+        return dataclasses.replace(cfg, remat="none"), None
+
+    # ---- MLA latent replication (collective-bound prefill) ----
+    if variant == "mla_replicate_latent":
+        return cfg, _rules(kv_lora=[], q_lora=[])
+
+    # ---- pad attention heads up to the model-axis multiple (40 -> 48):
+    # +20% attention params/flops but 16-way sharded instead of replicated
+    if variant.startswith("pad_heads"):
+        h = int(variant.removeprefix("pad_heads"))
+        return dataclasses.replace(cfg, num_heads=h,
+                                   num_kv_heads=h if cfg.num_kv_heads ==
+                                   cfg.num_heads else cfg.num_kv_heads), None
+
+    # ---- combined best-of for the minicpm3 prefill cell ----
+    if variant == "mla_opt":
+        cfg2 = dataclasses.replace(cfg, num_heads=48, num_kv_heads=48)
+        return cfg2, _rules(kv_lora=[], q_lora=[])
+
+    # ---- pad MoE experts to the model-axis multiple (40 -> 48) ----
+    if variant.startswith("pad_experts"):
+        e = int(variant.removeprefix("pad_experts"))
+        return dataclasses.replace(cfg, num_experts=e), None
+
+    # ---- granite combined: pad heads + experts ----
+    if variant == "granite_opt":
+        return dataclasses.replace(cfg, num_heads=32, num_kv_heads=8,
+                                   num_experts=48), None
+
+    # ---- keep kv cache unsharded over seq (decode resharding pathology) ----
+    if variant == "kv_seq_unsharded":
+        return cfg, _rules(kv_seq=[])
+
+    # ---- experts over data axis instead of model (MoE) ----
+    if variant == "experts_over_data":
+        return cfg, _rules(experts=[("data",)])
+
+    # ---- combined: sequence parallelism + gradient accumulation ----
+    if variant.startswith("sp_mb"):
+        n = int(variant.removeprefix("sp_mb"))
+        return (dataclasses.replace(cfg, train_microbatches=n),
+                _rules(seq=[("model",)]))
+
+    raise ValueError(f"unknown variant {variant!r}")
+
+
+VARIANTS = ["baseline", "ssm_chunk64", "ssm_chunk128", "seq_parallel",
+            "microbatch4", "microbatch16", "no_remat",
+            "mla_replicate_latent", "kv_seq_unsharded", "experts_over_data"]

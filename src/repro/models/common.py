@@ -1,0 +1,73 @@
+"""Parameter-spec machinery: one source of truth for shape/logical-axes/init.
+
+A module describes its parameters as a pytree of ``ParamSpec`` leaves; the
+same tree materializes real params, abstract (ShapeDtypeStruct) params, and
+PartitionSpecs — so init, dry-run, and sharding can never drift apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    logical: tuple                 # logical axis name per dim (None = replicated)
+    init: str = "normal"           # normal | zeros | ones | fan_in | custom:<name>
+    scale: float = 0.02
+    dtype: Optional[str] = None    # override model param dtype (e.g. fp32 norms)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def stack_specs(tree, n: int):
+    """Prepend a scan ("layers") dim of size n to every spec in the tree."""
+    def f(ps: ParamSpec) -> ParamSpec:
+        return ParamSpec((n,) + tuple(ps.shape), ("layers",) + tuple(ps.logical),
+                         ps.init, ps.scale, ps.dtype)
+    return jax.tree.map(f, tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def _init_leaf(ps: ParamSpec, key, default_dtype):
+    dtype = jnp.dtype(ps.dtype or default_dtype)
+    if ps.init == "zeros":
+        return jnp.zeros(ps.shape, dtype)
+    if ps.init == "ones":
+        return jnp.ones(ps.shape, dtype)
+    if ps.init == "fan_in":
+        fan_in = ps.shape[0] if len(ps.shape) == 1 else int(np.prod(ps.shape[:-1]))
+        std = 1.0 / math.sqrt(max(fan_in, 1))
+        return (std * jax.random.normal(key, ps.shape, jnp.float32)).astype(dtype)
+    if ps.init == "alog":  # mamba2 A_log init: log(uniform[1,16])
+        u = jax.random.uniform(key, ps.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    if ps.init == "lambda":  # RG-LRU Lambda: a = sigmoid(L) in [0.9, 0.999]
+        u = jax.random.uniform(key, ps.shape, jnp.float32, 0.9, 0.999)
+        return jnp.log(u / (1 - u)).astype(dtype)
+    return (ps.scale * jax.random.normal(key, ps.shape, jnp.float32)).astype(dtype)
+
+
+def materialize(spec_tree, key, default_dtype):
+    leaves, treedef = jax.tree.flatten(
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(ps, k, default_dtype) for ps, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract(spec_tree, default_dtype):
+    def f(ps: ParamSpec):
+        return jax.ShapeDtypeStruct(ps.shape, jnp.dtype(ps.dtype or default_dtype))
+    return jax.tree.map(f, spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def logical_tree(spec_tree):
+    return jax.tree.map(lambda ps: tuple(ps.logical), spec_tree,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))

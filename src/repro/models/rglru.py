@@ -1,0 +1,92 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma) — parallel + step forms.
+
+Parallel form uses ``jax.lax.associative_scan`` (log-depth); the sequential
+chunked Pallas kernel lives in repro/kernels/rglru_scan with this as oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamSpec
+
+C_EXP = 8.0  # Griffin's fixed gate exponent
+
+
+def rglru_spec(cfg: ModelConfig):
+    d, w = cfg.d_model, cfg.lru_width
+    k = 4  # temporal conv width
+    return {
+        "w_in": ParamSpec((d, w), ("embed", "lru"), init="fan_in"),
+        "w_gate": ParamSpec((d, w), ("embed", "lru"), init="fan_in"),
+        "conv_w": ParamSpec((k, w), (None, "lru"), init="fan_in"),
+        "conv_b": ParamSpec((w,), ("lru",), init="zeros"),
+        "w_a": ParamSpec((w, w), ("lru", "lru_out"), init="fan_in"),
+        "b_a": ParamSpec((w,), ("lru",), init="zeros", dtype="float32"),
+        "w_i": ParamSpec((w, w), ("lru", "lru_out"), init="fan_in"),
+        "b_i": ParamSpec((w,), ("lru",), init="zeros", dtype="float32"),
+        "lam": ParamSpec((w,), ("lru",), init="lambda", dtype="float32"),
+        "w_out": ParamSpec((w, d), ("lru", "embed"), init="fan_in"),
+    }
+
+
+def _gates(p, u):
+    """log_a (B,S,W) in fp32, gated input (B,S,W) fp32."""
+    r = jax.nn.sigmoid((u @ p["w_a"]).astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid((u @ p["w_i"]).astype(jnp.float32) + p["b_i"])
+    log_a = C_EXP * r * jax.nn.log_sigmoid(p["lam"])[None, None, :]
+    a = jnp.exp(log_a)
+    # eps floor: sqrt'(0) is inf and would poison gradients when r -> 0
+    beta = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-6, 1.0))
+    gated = beta * i * u.astype(jnp.float32)
+    return a, gated
+
+
+def _conv1d(u, w, bias, state=None):
+    """Causal depthwise conv. u: (B,S,W); state: (B,K-1,W) prior inputs."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([state.astype(u.dtype), u], axis=1)
+    out = sum(pad[:, i:i + u.shape[1], :] * w[i] for i in range(k))
+    return out + bias
+
+
+def rglru_apply(cfg: ModelConfig, p, x, *, mode: str, cache=None):
+    """Returns (y, new_cache). cache = {"h": (B,W) fp32, "conv": (B,K-1,W)}."""
+    from repro.sharding.partition import constrain
+    b = x.shape[0]
+    w = cfg.lru_width
+    u_raw = constrain(x @ p["w_in"], ("batch", "seq", "lru"))
+
+    if mode == "decode":
+        conv_window = jnp.concatenate([cache["conv"].astype(u_raw.dtype), u_raw],
+                                      axis=1)
+        u = jnp.einsum("bkw,kw->bw", conv_window, p["conv_w"]) + p["conv_b"]
+        u = u[:, None, :]
+        a, gated = _gates(p, u)
+        h = a[:, 0] * cache["h"] + gated[:, 0]
+        y = h[:, None, :]
+        new_cache = {"h": h, "conv": conv_window[:, 1:, :]}
+    else:
+        u = _conv1d(u_raw, p["conv_w"], p["conv_b"],
+                    state=cache["conv"] if cache else None)
+        a, gated = _gates(p, u)
+        # associative scan: (a, b) o (a', b') = (a*a', a'*b + b')
+        def combine(x1, x2):
+            a1, b1 = x1
+            a2, b2 = x2
+            return a1 * a2, a2 * b1 + b2
+        aa, hh = jax.lax.associative_scan(combine, (a, gated), axis=1)
+        y = hh
+        if mode == "prefill":
+            k = p["conv_w"].shape[0]
+            new_cache = {"h": hh[:, -1, :],
+                         "conv": u_raw[:, -(k - 1):, :].astype(jnp.float32)}
+        else:
+            new_cache = None
+
+    y = y.astype(x.dtype) * jax.nn.gelu(x @ p["w_gate"])
+    return y @ p["w_out"], new_cache

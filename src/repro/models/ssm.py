@@ -1,0 +1,183 @@
+"""Mamba2 SSD (state-space duality) mixer — chunked parallel form + step form.
+
+The chunked jnp implementation is also the oracle for the ssd_scan Pallas
+kernel (repro/kernels/ssd_scan).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamSpec
+from repro.models.layers import rms_norm
+
+
+def ssm_dims(cfg: ModelConfig):
+    din = cfg.ssm_expand * cfg.d_model
+    nh = din // cfg.ssm_head_dim
+    conv_dim = din + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return din, nh, conv_dim
+
+
+def ssm_spec(cfg: ModelConfig):
+    d = cfg.d_model
+    din, nh, conv_dim = ssm_dims(cfg)
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    return {
+        "in_proj": ParamSpec((d, 2 * din + 2 * g * n + nh), ("embed", "ssm_inner"),
+                             init="fan_in"),
+        "conv_w": ParamSpec((cfg.ssm_conv_width, conv_dim), (None, "ssm_inner"),
+                            init="fan_in"),
+        "conv_b": ParamSpec((conv_dim,), ("ssm_inner",), init="zeros"),
+        "dt_bias": ParamSpec((nh,), ("ssm_heads",), init="zeros", dtype="float32"),
+        "a_log": ParamSpec((nh,), ("ssm_heads",), init="alog", dtype="float32"),
+        "d_skip": ParamSpec((nh,), ("ssm_heads",), init="ones", dtype="float32"),
+        "gate_norm": ParamSpec((din,), ("ssm_inner",), init="zeros",
+                               dtype="float32"),
+        "out_proj": ParamSpec((din, d), ("ssm_inner", "embed"), init="fan_in"),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj):
+    din, nh, _ = ssm_dims(cfg)
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    z = proj[..., :din]
+    xbc = proj[..., din:din + din + 2 * g * n]
+    dt = proj[..., -nh:]
+    return z, xbc, dt
+
+
+def ssd_chunked(x, b_mat, c_mat, dt, a, chunk: int, bf16_intra: bool = False):
+    """SSD parallel scan.
+
+    x: (B, S, H, P); b_mat/c_mat: (B, S, G, N); dt: (B, S, H) (post-softplus);
+    a: (H,) negative reals. Returns y: (B, S, H, P), final state (B, H, P, N).
+    bf16_intra: store the O(Q^2) intra-chunk decay/score tensors in bf16
+    (halves the dominant HBM traffic; cumsums/exponents stay f32).
+    """
+    B, S, H, P = x.shape
+    G, N = b_mat.shape[2], b_mat.shape[3]
+    rep = H // G
+    Q = min(chunk, S)
+    if S % Q:
+        Q = S
+    nc = S // Q
+
+    xc = x.reshape(B, nc, Q, H, P)
+    bc = b_mat.reshape(B, nc, Q, G, N)
+    cc = c_mat.reshape(B, nc, Q, G, N)
+    dtc = dt.reshape(B, nc, Q, H).astype(jnp.float32)
+    da = dtc * a[None, None, None, :]                     # (B,nc,Q,H)
+    cum = jnp.cumsum(da, axis=2)                          # (B,nc,Q,H)
+
+    # intra-chunk: S[i,j,h] = (C_i . B_j) * exp(cum_i - cum_j) * dt_j, j<=i
+    cb = jnp.einsum("bcqgn,bckgn->bcgqk", cc, bc,
+                    preferred_element_type=jnp.float32)   # (B,nc,G,Q,Q)
+    cb = jnp.repeat(cb, rep, axis=2)                      # (B,nc,H,Q,Q)
+    ii, jj = jnp.arange(Q)[:, None], jnp.arange(Q)[None, :]
+    # mask the exponent BEFORE exp: i<j entries would overflow to +inf and
+    # poison gradients through the where
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]            # (B,nc,Q,Q,H)
+    diff = jnp.where((ii >= jj)[None, None, :, :, None], diff, -jnp.inf)
+    decay = jnp.exp(diff)
+    dt_k = dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]    # (B,nc,H,1,Q)
+    s_mat = cb * decay.transpose(0, 1, 4, 2, 3) * dt_k    # (B,nc,H,Q,Q)
+    if bf16_intra:
+        s_mat = s_mat.astype(jnp.bfloat16)
+        y_intra = jnp.einsum("bchqk,bckhp->bcqhp", s_mat,
+                             xc.astype(jnp.bfloat16),
+                             preferred_element_type=jnp.float32)
+    else:
+        y_intra = jnp.einsum("bchqk,bckhp->bcqhp", s_mat,
+                             xc.astype(jnp.float32))
+
+    # chunk-final states: sum_j exp(cum_last - cum_j) dt_j B_j x_j
+    bc_h = jnp.repeat(bc, rep, axis=3).astype(jnp.float32)  # (B,nc,Q,H,N)
+    dec_last = jnp.exp(cum[:, :, -1:, :] - cum)           # (B,nc,Q,H)
+    dtx = (dec_last * dtc)[..., None] * xc.astype(jnp.float32)   # (B,nc,Q,H,P)
+    states = jnp.einsum("bcqhn,bcqhp->bchpn", bc_h, dtx)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[:, :, -1, :])               # (B,nc,H)
+
+    def scan_fn(h_prev, inp):
+        st, dec = inp                                     # (B,H,P,N), (B,H)
+        h = h_prev * dec[..., None, None] + st
+        return h, h_prev
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    h_final, h_prevs = jax.lax.scan(
+        scan_fn, h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)            # (B,nc,H,P,N)
+
+    # inter-chunk contribution: C_i . (exp(cum_i) * h_prev)
+    c_rep = jnp.repeat(cc, rep, axis=3) if G != H else cc
+    y_inter = jnp.einsum("bcqhn,bchpn->bcqhp", c_rep.astype(jnp.float32),
+                         h_prevs) * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    return y, h_final
+
+
+def _conv1d(xbc, w, bias):
+    """Causal depthwise conv along seq. xbc: (B,S,C); w: (K,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(k))
+    return out + bias
+
+
+def ssm_apply(cfg: ModelConfig, p, x, *, mode: str, cache=None):
+    """Returns (y, new_cache). cache = {"conv": (B,K-1,C), "state": (B,H,P,N)}."""
+    din, nh, conv_dim = ssm_dims(cfg)
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    P = cfg.ssm_head_dim
+    B = x.shape[0]
+    a = -jnp.exp(p["a_log"])
+
+    from repro.sharding.partition import constrain
+    proj = constrain(x @ p["in_proj"], ("batch", "seq", "ssm_inner"))
+    z, xbc_raw, dt = _split_proj(cfg, proj)
+    xbc = xbc_raw
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+
+    if mode == "decode":
+        # single step
+        conv_st = cache["conv"]                           # (B, K-1, C)
+        window = jnp.concatenate([conv_st, xbc], axis=1)  # (B, K, C)
+        xbc_t = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+        xbc_t = jax.nn.silu(xbc_t)[:, None, :]
+        new_conv = window[:, 1:, :]
+        xs = xbc_t[..., :din].reshape(B, 1, nh, P)
+        bm = xbc_t[..., din:din + g * n].reshape(B, 1, g, n)
+        cm = xbc_t[..., din + g * n:].reshape(B, 1, g, n)
+        da = jnp.exp(dt[:, 0, :] * a)                     # (B,H)
+        # broadcast groups to heads
+        bm_h = jnp.repeat(bm[:, 0], nh // g, axis=1).astype(jnp.float32)
+        cm_h = jnp.repeat(cm[:, 0], nh // g, axis=1).astype(jnp.float32)
+        dbx = dt[:, 0, :, None, None] * bm_h[:, :, None, :] * \
+            xs[:, 0, :, :, None].astype(jnp.float32)      # (B,H,P,N)
+        state = cache["state"] * da[..., None, None] + dbx
+        y = jnp.einsum("bhpn,bhn->bhp", state, cm_h)
+        y = y + p["d_skip"][None, :, None] * xs[:, 0].astype(jnp.float32)
+        y = y.reshape(B, 1, din)
+        new_cache = {"conv": new_conv, "state": state}
+    else:
+        xbc = jax.nn.silu(_conv1d(xbc, p["conv_w"], p["conv_b"]))
+        xs = xbc[..., :din].reshape(B, -1, nh, P)
+        bm = xbc[..., din:din + g * n].reshape(B, -1, g, n)
+        cm = xbc[..., din + g * n:].reshape(B, -1, g, n)
+        y, h_final = ssd_chunked(xs, bm, cm, dt, a, cfg.ssm_chunk,
+                                 bf16_intra=cfg.ssm_bf16_intra)
+        y = y + p["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+        y = y.reshape(B, x.shape[1], din)
+        if mode == "prefill":
+            k = cfg.ssm_conv_width
+            new_cache = {"conv": xbc_raw[:, -(k - 1):, :], "state": h_final}
+        else:
+            new_cache = None
+
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(x.dtype), p["gate_norm"])
+    return y @ p["out_proj"], new_cache

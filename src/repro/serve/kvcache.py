@@ -1,0 +1,145 @@
+"""KV-cache utilities: capacity padding, int8 page quantization, paged pool.
+
+The model emits seq-sized caches at prefill; serving needs capacity-sized
+buffers (ring-buffer layout for sliding-window layers). Page-granular int8
+quantization + HBM/host tier placement (Sibyl hook) live here too.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import Model
+
+
+def pad_caches(model: Model, caches, capacity: int, prefix_len: int):
+    """Expand prefill caches to decode capacity.
+
+    Sequence-bearing leaves (logical axis "kv_seq") are padded to `capacity`
+    (sliding-window layers: last `window` entries, ring-aligned since our
+    shapes satisfy prefix_len % window == 0). O(1) state leaves pass through.
+    """
+    abs_tree, log_tree = model.cache_spec(batch=1, capacity=capacity)
+
+    def fix(leaf, logical, target):
+        logical = tuple(logical)
+        if "kv_seq" not in logical:
+            return leaf
+        ax = logical.index("kv_seq")
+        tgt = target.shape[ax]
+        cur = leaf.shape[ax]
+        if cur == tgt:
+            return leaf
+        if cur > tgt:  # sliding window: keep the last tgt entries
+            idx = [slice(None)] * leaf.ndim
+            idx[ax] = slice(cur - tgt, cur)
+            return leaf[tuple(idx)]
+        pad = [(0, 0)] * leaf.ndim
+        pad[ax] = (0, tgt - cur)
+        return jnp.pad(leaf, pad)
+
+    return jax.tree.map(fix, caches, log_tree, abs_tree,
+                        is_leaf=lambda x: not isinstance(x, dict))
+
+
+# ---------------------------------------------------------------------------
+# int8 page quantization (data-centric: "reduce the memory footprint")
+# ---------------------------------------------------------------------------
+def quantize_page(page: np.ndarray):
+    """Symmetric per-row int8 quantization. page: (tokens, heads, hd)."""
+    amax = np.abs(page).astype(np.float32).max(axis=-1, keepdims=True)
+    scale = np.where(amax > 0, amax / 127.0, 1.0)
+    q = np.clip(np.rint(page.astype(np.float32) / scale), -127, 127)
+    return q.astype(np.int8), scale.astype(np.float32)
+
+
+def dequantize_page(q: np.ndarray, scale: np.ndarray, dtype=np.float32):
+    return (q.astype(np.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Paged KV pool with two tiers (HBM "fast" / host "slow") — Sibyl's substrate
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Page:
+    page_id: int
+    seq_id: int
+    tier: str          # "fast" | "slow"
+    quantized: bool
+    access_count: int = 0
+    last_access: int = 0
+    data: Optional[tuple] = None   # (k, v) or ((kq, ks), (vq, vs))
+
+
+class PagedKVPool:
+    """Page-granular KV store with tier placement decided by a policy object
+    (heuristic or Sibyl RL agent). Host tier stores pages int8-quantized.
+    """
+
+    def __init__(self, page_tokens: int = 128, fast_capacity_pages: int = 1024,
+                 placement_policy=None):
+        self.page_tokens = page_tokens
+        self.fast_capacity = fast_capacity_pages
+        self.policy = placement_policy
+        self.pages: dict[int, Page] = {}
+        self.clock = 0
+        self.next_id = 0
+        self.stats = {"fast_hits": 0, "slow_hits": 0, "evictions": 0,
+                      "fast_bytes": 0, "slow_bytes": 0}
+
+    def _fast_pages(self):
+        return [p for p in self.pages.values() if p.tier == "fast"]
+
+    def put(self, seq_id: int, k: np.ndarray, v: np.ndarray) -> int:
+        self.clock += 1
+        pid = self.next_id
+        self.next_id += 1
+        feats = self._features(seq_id)
+        tier = "fast"
+        if self.policy is not None:
+            tier = self.policy.place(feats)
+        page = Page(pid, seq_id, tier, quantized=(tier == "slow"),
+                    last_access=self.clock)
+        if tier == "slow":
+            page.data = (quantize_page(k), quantize_page(v))
+        else:
+            page.data = (k, v)
+        self.pages[pid] = page
+        self._maybe_evict()
+        return pid
+
+    def get(self, pid: int):
+        self.clock += 1
+        page = self.pages[pid]
+        page.access_count += 1
+        page.last_access = self.clock
+        if page.tier == "fast":
+            self.stats["fast_hits"] += 1
+            return page.data
+        self.stats["slow_hits"] += 1
+        (kq, ks), (vq, vs) = page.data
+        return dequantize_page(kq, ks), dequantize_page(vq, vs)
+
+    def _maybe_evict(self):
+        fast = self._fast_pages()
+        while len(fast) > self.fast_capacity:
+            victim = min(fast, key=lambda p: p.last_access)  # LRU demote
+            k, v = victim.data
+            victim.data = (quantize_page(k), quantize_page(v))
+            victim.tier, victim.quantized = "slow", True
+            self.stats["evictions"] += 1
+            fast = self._fast_pages()
+
+    def _features(self, seq_id: int) -> np.ndarray:
+        """Sibyl-style state features (Table 7.1 analogue)."""
+        n_fast = len(self._fast_pages())
+        return np.array([
+            n_fast / max(1, self.fast_capacity),            # fast fill ratio
+            len(self.pages) / max(1, self.fast_capacity),   # total pressure
+            seq_id % 16 / 16.0,                             # request stream id
+            (self.clock % 4096) / 4096.0,                   # phase
+        ], np.float32)

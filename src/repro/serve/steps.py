@@ -1,0 +1,42 @@
+"""Serving step functions (prefill / decode) for jit + dry-run lowering."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.models import Model
+from repro.sharding.partition import with_shardings
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        logits, caches = model.forward_prefill(params, batch)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tokens, caches
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, caches, batch, pos):
+        logits, new_caches = model.forward_decode(params, batch, caches, pos)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tokens, new_caches
+    return decode_step
+
+
+def abstract_params_sharded(model: Model, mesh: Optional[Mesh], rules=None):
+    a = model.abstract_params()
+    if mesh is None:
+        return a
+    return with_shardings(a, model.logical(), mesh, rules)
+
+
+def abstract_caches_sharded(model: Model, batch: int, capacity: int,
+                            mesh: Optional[Mesh], rules=None):
+    a, log = model.cache_spec(batch, capacity)
+    if mesh is None:
+        return a
+    return with_shardings(a, log, mesh, rules)

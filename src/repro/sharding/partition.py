@@ -1,0 +1,170 @@
+"""Logical-axis → mesh-axis partitioning rules (FSDP × TP × EP, pod-aware).
+
+Every parameter/cache/batch leaf carries a tuple of logical axis names; the
+rules engine maps them to mesh axes with divisibility checks and
+no-mesh-axis-reuse per leaf. Non-divisible cases (36 heads on a 16-way model
+axis, 40 experts, kv=8) degrade gracefully to the next candidate/replication —
+the roofline table then shows the honest cost of that choice.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# candidates per logical axis, in priority order; entries are mesh-axis
+# tuples (a tuple means "shard over the product of those axes").
+DEFAULT_RULES: dict = {
+    "batch": [("pod", "data"), ("data",)],
+    "vocab": [("model",)],
+    "heads": [("model",)],
+    "kv_heads": [("model",)],
+    "ffn": [("model",)],
+    "experts": [("model",)],
+    "ssm_inner": [("model",)],
+    "ssm_heads": [("model",)],
+    "lru": [("model",)],
+    "kv_lora": [("model",)],
+    "q_lora": [("model",)],
+    "embed": [("pod", "data"), ("data",)],     # FSDP
+    "kv_seq": [("model",)],                    # fallback cache sharding
+    "seq": [],
+    "head_dim": [],
+    "layers": [],
+    "lru_out": [],
+    "capacity": [],
+}
+
+# axes resolved before others (so e.g. kv_heads grabs "model" before kv_seq)
+PRIORITY = [
+    "vocab", "heads", "kv_heads", "ffn", "experts", "ssm_inner", "ssm_heads",
+    "lru", "kv_lora", "q_lora", "embed", "batch", "kv_seq",
+]
+
+
+def _mesh_sizes(mesh) -> dict:
+    try:  # AbstractMesh (deviceless) and Mesh both expose axis_sizes
+        return dict(zip(mesh.axis_names, mesh.axis_sizes))
+    except (AttributeError, ValueError):
+        return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def spec_for(shape: Sequence[int], logical: Sequence[Optional[str]],
+             mesh: Mesh, rules: Optional[dict] = None) -> P:
+    rules = rules or DEFAULT_RULES
+    sizes = _mesh_sizes(mesh)
+    assign: dict[int, tuple] = {}
+    used: set = set()
+
+    def prio(item):
+        name = item[1]
+        return PRIORITY.index(name) if name in PRIORITY else len(PRIORITY)
+
+    order = sorted(((i, ln) for i, ln in enumerate(logical) if ln),
+                   key=prio)
+    for i, ln in order:
+        for cand in rules.get(ln, []):
+            cand = tuple(ax for ax in cand if ax in sizes)
+            if not cand or any(ax in used for ax in cand):
+                continue
+            prod = math.prod(sizes[ax] for ax in cand)
+            if shape[i] % prod == 0 and shape[i] >= prod:
+                assign[i] = cand if len(cand) > 1 else cand
+                used.update(cand)
+                break
+    entries = []
+    for i in range(len(shape)):
+        if i in assign:
+            cand = assign[i]
+            entries.append(cand if len(cand) > 1 else cand[0])
+        else:
+            entries.append(None)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def tree_shardings(abstract_tree, logical_tree, mesh: Mesh,
+                   rules: Optional[dict] = None):
+    """NamedSharding tree matching an abstract (ShapeDtypeStruct) tree."""
+    def f(a, lg):
+        return NamedSharding(mesh, spec_for(a.shape, tuple(lg), mesh, rules))
+    return jax.tree.map(f, abstract_tree, logical_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+def with_shardings(abstract_tree, logical_tree, mesh, rules=None):
+    """ShapeDtypeStructs with shardings attached (for jit .lower inputs)."""
+    sh = tree_shardings(abstract_tree, logical_tree, mesh, rules)
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        abstract_tree, sh)
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    return tuple(ax for ax in ("pod", "data") if ax in mesh.axis_names)
+
+
+# ---------------------------------------------------------------------------
+# Ambient activation-sharding context (MaxText-style logical constraints).
+# Models call constrain(x, logical) everywhere; it is a no-op unless a mesh
+# has been installed (so CPU tests and single-device runs are unaffected).
+# ---------------------------------------------------------------------------
+import contextlib
+import contextvars
+
+_ACT_MESH: contextvars.ContextVar = contextvars.ContextVar(
+    "activation_mesh", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, rules: Optional[dict] = None):
+    tok = _ACT_MESH.set((mesh, rules))
+    try:
+        yield
+    finally:
+        _ACT_MESH.reset(tok)
+
+
+def constrain(x, logical: tuple):
+    """Apply a with_sharding_constraint derived from logical axes (ambient)."""
+    ctx = _ACT_MESH.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = spec_for(x.shape, tuple(logical), mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def batch_logical(cfg, kind: str) -> dict:
+    """Logical axes for the input batch of a given step kind."""
+    if kind == "train":
+        out = {"labels": ("batch", "seq")}
+        if cfg.external_embed:
+            out["embeds"] = ("batch", "seq", None)
+        else:
+            out["tokens"] = ("batch", "seq")
+        if cfg.n_img_tokens:
+            out["image_embeds"] = ("batch", None, None)
+        return out
+    if kind == "prefill":
+        out = {}
+        if cfg.external_embed:
+            out["embeds"] = ("batch", "seq", None)
+        else:
+            out["tokens"] = ("batch", "seq")
+        if cfg.n_img_tokens:
+            out["image_embeds"] = ("batch", None, None)
+        return out
+    if kind == "decode":
+        out = {}
+        if cfg.external_embed:
+            out["embeds"] = ("batch", None, None)
+        else:
+            out["tokens"] = ("batch", None)
+        return out
+    raise ValueError(kind)

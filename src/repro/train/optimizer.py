@@ -1,0 +1,113 @@
+"""AdamW with fp32 master weights + moments, fully sharded (ZeRO-style: every
+optimizer leaf inherits its parameter's sharding, which is itself FSDP x TP)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    use_master: bool = True
+
+
+def lr_at(oc: OptimizerConfig, step):
+    step = step.astype(jnp.float32)
+    warm = oc.lr * (step + 1) / max(oc.warmup_steps, 1)
+    t = jnp.clip((step - oc.warmup_steps) /
+                 max(oc.total_steps - oc.warmup_steps, 1), 0.0, 1.0)
+    cos = oc.lr * (0.1 + 0.9 * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < oc.warmup_steps, warm, cos)
+
+
+def init_opt_state(params, oc: OptimizerConfig):
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(f32, params),
+        "v": jax.tree.map(f32, params),
+    }
+    if oc.use_master:
+        # jnp.array copies — params may already be f32 and astype would
+        # alias (breaking buffer donation)
+        state["master"] = jax.tree.map(
+            lambda p: jnp.array(p, dtype=jnp.float32), params)
+    return state
+
+
+def abstract_opt_state(abstract_params, oc: OptimizerConfig):
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    state = {
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+        "m": jax.tree.map(f32, abstract_params),
+        "v": jax.tree.map(f32, abstract_params),
+    }
+    if oc.use_master:
+        state["master"] = jax.tree.map(f32, abstract_params)
+    return state
+
+
+def opt_state_logical(params_logical, oc: OptimizerConfig):
+    state = {
+        "step": (),
+        "m": params_logical,
+        "v": params_logical,
+    }
+    if oc.use_master:
+        state["master"] = params_logical
+    return state
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, opt_state, oc: OptimizerConfig):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"]
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, oc.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = lr_at(oc, step)
+    b1, b2 = oc.beta1, oc.beta2
+    bc1 = 1 - b1 ** (step.astype(jnp.float32) + 1)
+    bc2 = 1 - b2 ** (step.astype(jnp.float32) + 1)
+
+    src = opt_state.get("master", params)
+
+    def upd(p_master, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh, vh = m / bc1, v / bc2
+        pm = p_master.astype(jnp.float32)
+        pm = pm - lr * (mh / (jnp.sqrt(vh) + oc.eps) + oc.weight_decay * pm)
+        return pm, m, v
+
+    flat_p, treedef = jax.tree.flatten(src)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_master = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+
+    new_params = jax.tree.map(lambda nm, p: nm.astype(p.dtype),
+                              new_master, params)
+    new_state = {"step": step + 1, "m": new_m, "v": new_v}
+    if "master" in opt_state:
+        new_state["master"] = new_master
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, metrics

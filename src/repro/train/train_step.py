@@ -1,0 +1,136 @@
+"""Training step: loss, grads (optionally microbatched), AdamW update.
+
+The step is pure and jit-friendly; shardings are carried by the input
+ShapeDtypeStructs/arrays (see launch/dryrun.py and train/trainer.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig
+from repro.models import Model
+from repro.sharding.partition import batch_logical, with_shardings
+from repro.train.optimizer import (OptimizerConfig, abstract_opt_state,
+                                   adamw_update, init_opt_state,
+                                   opt_state_logical)
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -ll.mean()
+
+
+def make_loss_fn(model: Model, mesh: Optional[Mesh] = None):
+    from repro.sharding.partition import constrain
+
+    def loss_fn(params, batch):
+        logits, aux = model.forward_train(params, batch)
+        # respects the ambient activation_sharding ctx (mesh + rules);
+        # no-op on single-device runs
+        logits = constrain(logits, ("batch", "seq", "vocab"))
+        loss = cross_entropy(logits, batch["labels"])
+        total = loss + AUX_LOSS_WEIGHT * aux
+        return total, {"loss": loss, "aux_loss": aux}
+
+    return loss_fn
+
+
+def make_train_step(model: Model, oc: OptimizerConfig,
+                    mesh: Optional[Mesh] = None, num_microbatches: int = 1,
+                    grad_transform: Optional[Callable] = None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params": pytree, "opt": opt_state}.
+    grad_transform: optional gradient hook (e.g. int8 error-feedback
+    compression); signature (grads, state) -> (grads, extra_state).
+    """
+    loss_fn = make_loss_fn(model, mesh)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if num_microbatches <= 1:
+            (total, mets), grads = grad_fn(params, batch)
+            return total, mets, grads
+
+        def slice_mb(i, x):
+            mb = x.shape[0] // num_microbatches
+            return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+        def body(carry, i):
+            acc, tot = carry
+            mbatch = jax.tree.map(partial(slice_mb, i), batch)
+            (t, mets), g = grad_fn(params, mbatch)
+            acc = jax.tree.map(jnp.add, acc, g)
+            return (acc, tot + t), mets
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (acc, tot), mets = jax.lax.scan(body, (zeros, 0.0),
+                                        jnp.arange(num_microbatches))
+        grads = jax.tree.map(lambda g: g / num_microbatches, acc)
+        mets = jax.tree.map(lambda m: m[-1], mets)
+        return tot / num_microbatches, mets, grads
+
+    def train_step(state, batch):
+        params = state["params"]
+        total, mets, grads = compute_grads(params, batch)
+        comp_state = state.get("grad_comp")
+        if grad_transform is not None:
+            grads, comp_state = grad_transform(grads, comp_state)
+        new_params, new_opt, opt_mets = adamw_update(params, grads,
+                                                     state["opt"], oc)
+        new_state = {"params": new_params, "opt": new_opt}
+        if comp_state is not None:
+            new_state["grad_comp"] = comp_state
+        metrics = {"total_loss": total, **mets, **opt_mets}
+        return new_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# State construction (concrete + abstract-with-shardings for dry-run)
+# ---------------------------------------------------------------------------
+def init_state(model: Model, oc: OptimizerConfig, key):
+    params = model.init(key)
+    return {"params": params, "opt": init_opt_state(params, oc)}
+
+
+def abstract_state(model: Model, oc: OptimizerConfig, mesh: Optional[Mesh],
+                   rules=None):
+    a_params = model.abstract_params()
+    a_opt = abstract_opt_state(a_params, oc)
+    abstract = {"params": a_params, "opt": a_opt}
+    if mesh is None:
+        return abstract
+    log = {"params": model.logical(),
+           "opt": opt_state_logical(model.logical(), oc)}
+    return with_shardings(abstract, log, mesh, rules)
+
+
+def abstract_batch(model: Model, seq: int, global_batch: int,
+                   mesh: Optional[Mesh], kind: str = "train", rules=None):
+    cfg = model.cfg
+    shapes = {}
+    if kind == "train":
+        shapes["labels"] = jax.ShapeDtypeStruct((global_batch, seq), jnp.int32)
+    s_in = 1 if kind == "decode" else seq
+    if cfg.external_embed:
+        shapes["embeds"] = jax.ShapeDtypeStruct(
+            (global_batch, s_in, cfg.d_model), jnp.dtype(cfg.compute_dtype))
+    else:
+        shapes["tokens"] = jax.ShapeDtypeStruct((global_batch, s_in), jnp.int32)
+    if cfg.n_img_tokens and kind != "decode":
+        shapes["image_embeds"] = jax.ShapeDtypeStruct(
+            (global_batch, cfg.n_img_tokens, cfg.d_model),
+            jnp.dtype(cfg.compute_dtype))
+    if mesh is None:
+        return shapes
+    return with_shardings(shapes, batch_logical(cfg, kind), mesh, rules)

@@ -1,0 +1,127 @@
+"""Training loop: jit'd step + checkpoint/restart + straggler monitoring +
+prefetching data pipeline. Runs identically on the host mesh (tests,
+examples) and, unchanged, on a production mesh (dry-run proven)."""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from pathlib import Path
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import Prefetcher, TokenPipeline
+from repro.ft.straggler import StragglerMonitor
+from repro.models import Model
+from repro.sharding.partition import activation_sharding
+from repro.train.grad_compression import make_error_feedback_compressor
+from repro.train.optimizer import OptimizerConfig
+from repro.train.train_step import init_state, make_train_step
+
+log = logging.getLogger("repro.trainer")
+
+
+@dataclasses.dataclass
+class TrainJobConfig:
+    steps: int = 100
+    seq_len: int = 128
+    global_batch: int = 8
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    async_checkpoint: bool = True
+    grad_compression: bool = False
+    num_microbatches: int = 1
+    seed: int = 0
+    log_every: int = 10
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, oc: OptimizerConfig,
+                 job: TrainJobConfig, mesh=None,
+                 failure_hook: Optional[Callable] = None):
+        self.cfg = cfg
+        self.oc = oc
+        self.job = job
+        self.mesh = mesh
+        self.model = Model(cfg)
+        self.failure_hook = failure_hook
+        gt = (make_error_feedback_compressor()
+              if job.grad_compression else None)
+        self._step_fn = make_train_step(self.model, oc, mesh=mesh,
+                                        num_microbatches=job.num_microbatches,
+                                        grad_transform=gt)
+        self._jitted = jax.jit(self._step_fn, donate_argnums=0)
+        self.ckpt = (Checkpointer(job.checkpoint_dir)
+                     if job.checkpoint_dir else None)
+        self.monitor = StragglerMonitor(n_hosts=jax.process_count())
+        self.metrics_history: list[dict] = []
+
+    # ------------------------------------------------------------------
+    def _init_or_restore(self):
+        pipe = TokenPipeline(self.cfg, self.job.seq_len,
+                             self.job.global_batch, seed=self.job.seed)
+        if self.ckpt is not None and self.ckpt.latest_step() is not None:
+            from repro.train.train_step import abstract_state
+            abstract = abstract_state(self.model, self.oc, self.mesh)
+            state, meta = self.ckpt.restore(abstract)
+            start = meta["step"]
+            pipe.restore(meta["extra"]["pipeline"])
+            log.info("restored checkpoint at step %d", start)
+        else:
+            state = init_state(self.model, self.oc,
+                               jax.random.PRNGKey(self.job.seed))
+            start = 0
+        return state, start, pipe
+
+    def run(self) -> dict:
+        state, start, pipe = self._init_or_restore()
+
+        def batches():   # explicit step indexing — prefetch-safe & resumable
+            for s in range(start, self.job.steps):
+                yield pipe.batch_at(s)
+
+        pf = Prefetcher(batches())
+        ctx = activation_sharding(self.mesh) if self.mesh is not None else None
+        last_metrics = {}
+        try:
+            for step in range(start, self.job.steps):
+                t0 = time.time()
+                if self.failure_hook is not None:
+                    self.failure_hook(step)
+                batch = next(pf)
+                if ctx is not None:
+                    with self.mesh, ctx:
+                        state, metrics = self._jitted(state, batch)
+                else:
+                    state, metrics = self._jitted(state, batch)
+                metrics = {k: float(v) for k, v in metrics.items()}
+                dt = time.time() - t0
+                self.monitor.record(jax.process_index(), dt)
+                metrics["step_time_s"] = dt
+                metrics["step"] = step
+                self.metrics_history.append(metrics)
+                last_metrics = metrics
+                if step % self.job.log_every == 0:
+                    log.info("step %d loss %.4f (%.2fs)", step,
+                             metrics["loss"], dt)
+                pipe.step = step + 1
+                if self.ckpt is not None and \
+                        (step + 1) % self.job.checkpoint_every == 0:
+                    self.ckpt.save(step + 1, state,
+                                   extra={"pipeline": pipe.state()},
+                                   blocking=not self.job.async_checkpoint)
+            if self.ckpt is not None:
+                self.ckpt.save(self.job.steps, state,
+                               extra={"pipeline": pipe.state()},
+                               blocking=True)
+        finally:
+            pf.close()
+            if self.ckpt is not None:
+                self.ckpt.wait()
+        return {"state": state, "final_metrics": last_metrics,
+                "history": self.metrics_history,
+                "stragglers": self.monitor.stragglers()}

@@ -1,0 +1,173 @@
+"""Tests for the data-driven substrate: NAPEL forest/DoE, LEAPER transfer,
+Sibyl env/agent, KV pool, autotuner."""
+import numpy as np
+import pytest
+
+from repro.core.napel.forest import (RandomForest, mean_relative_error,
+                                     tune_hyperparameters)
+
+
+def test_random_forest_fits_nonlinear_function(rng):
+    x = rng.uniform(-2, 2, size=(400, 3))
+    y = np.sin(x[:, 0] * 2) + x[:, 1] ** 2 - 0.5 * x[:, 2]
+    rf = RandomForest(n_trees=40, max_depth=10, min_samples_leaf=2,
+                      max_features=3).fit(x[:300], y[:300])
+    pred = rf.predict(x[300:])
+    mae = np.abs(pred - y[300:]).mean()
+    base = np.abs(y[300:] - y[:300].mean()).mean()
+    assert mae < 0.45 * base, (mae, base)
+    assert rf.feature_importances_.sum() > 0
+
+
+def test_forest_beats_constant():
+    rng = np.random.default_rng(1)
+    x = rng.uniform(0, 1, size=(200, 2))
+    y = 3 * x[:, 0] + np.sin(6 * x[:, 1])
+    rf = RandomForest(n_trees=30, max_features=2).fit(x, y)
+    pred = rf.predict(x)
+    assert np.abs(pred - y).mean() < np.abs(y - y.mean()).mean() * 0.5
+
+
+def test_hyperparameter_tuning_returns_valid():
+    rng = np.random.default_rng(2)
+    x = rng.uniform(0, 1, (60, 3))
+    y = x.sum(1)
+    kw, err = tune_hyperparameters(x, y)
+    assert set(kw) == {"n_trees", "max_depth", "min_samples_leaf"}
+    assert np.isfinite(err)
+
+
+def test_mlp_baseline_fits_linear():
+    from repro.core.napel.baselines import MLPRegressor
+    rng = np.random.default_rng(3)
+    x = rng.uniform(-1, 1, (200, 4))
+    y = x @ np.array([1.0, -2.0, 0.5, 3.0])
+    mlp = MLPRegressor(epochs=300, seed=0).fit(x, y)
+    assert np.abs(mlp.predict(x) - y).mean() < 0.2
+
+
+def test_leaper_platform_ordering():
+    from repro.core.leaper.transfer import PLATFORMS
+    # same cell must be faster on bigger iron
+    t = {name: p.step_time(1e15, 1e12, 1e10)
+         for name, p in PLATFORMS.items()}
+    assert t["tpu_v5p"] < t["tpu_v5e"]
+    assert t["tpu_v4"] < t["tpu_v5e"]
+
+
+def test_leaper_transfer_beats_scratch_on_synthetic():
+    from repro.core.leaper.transfer import evaluate_transfer
+    from repro.core.napel.model import CellRecord
+    rng = np.random.default_rng(0)
+    cells = []
+    for i in range(48):
+        f = 10.0 ** rng.uniform(11, 16)
+        b = f / 10 ** rng.uniform(1.0, 2.5)
+        c = b / 10 ** rng.uniform(0.5, 2.0)
+        cells.append(CellRecord("codeqwen1.5-7b", "train_4k", (16, 16),
+                                f, b, c))
+    feats = rng.standard_normal((48, 8))
+    res = evaluate_transfer(cells, feats, "tpu_v4", shots_list=(5, 10),
+                            seed=0)
+    for shots, row in res.items():
+        assert row["leaper_acc_pct"] > row["scratch_acc_pct"], (shots, row)
+        assert row["leaper_acc_pct"] > 55
+
+
+def test_sibyl_env_mechanics():
+    from repro.core.sibyl.env import HssEnv, hss_config
+    env = HssEnv(hss_config("H&L", fast_cap=4))
+    lat, r = env.step(1, 8.0, True, action=0)
+    assert lat > 0 and r <= 0
+    # fill past capacity -> eviction to slow
+    for lba in range(2, 10):
+        env.step(lba, 8.0, True, action=0)
+    assert env.dev_counts[0] <= 4
+    assert env.migrations > 0
+    obs = env.observe(1, 8.0, False)
+    assert obs.shape == (10,) and np.isfinite(obs).all()
+
+
+def test_sibyl_agent_learns_to_avoid_catastrophe():
+    """Env where action 1 (slow) is always 100x worse: Q-learning should
+    drive slow-placement frequency to ~epsilon."""
+    from repro.core.sibyl.agent import SibylAgent, SibylConfig
+    agent = SibylAgent(SibylConfig(seed=0, eps=0.3, eps_final=0.0,
+                                   eps_decay_steps=600))
+    rng = np.random.default_rng(0)
+    picks = []
+    for t in range(900):
+        obs = rng.uniform(0, 1, 10).astype(np.float32)
+        a = agent.act(obs, 2)
+        picks.append(a)
+        agent.feedback(-0.01 if a == 0 else -1.0, next_obs=obs)
+    late = np.mean(picks[-200:])
+    assert late < 0.1, late
+
+
+def test_sibyl_explain_shapes():
+    from repro.core.sibyl.agent import SibylAgent, SibylConfig
+    from repro.core.sibyl.env import N_FEATURES
+    agent = SibylAgent(SibylConfig(seed=0))
+    rng = np.random.default_rng(0)
+    for _ in range(64):
+        obs = rng.uniform(0, 1, N_FEATURES).astype(np.float32)
+        agent.act(obs, 2)
+        agent.feedback(-0.5, next_obs=obs)
+    imp = agent.explain()
+    assert imp.shape == (N_FEATURES,) and np.isfinite(imp).all()
+
+
+def test_trace_generator_deterministic():
+    from repro.core.sibyl.traces import WORKLOADS, generate
+    a = generate(WORKLOADS["rsrch_0"], 500, seed=3)
+    b = generate(WORKLOADS["rsrch_0"], 500, seed=3)
+    assert a == b
+    c = generate(WORKLOADS["rsrch_0"], 500, seed=4)
+    assert a != c
+
+
+def test_kv_pool_quantization_roundtrip(rng):
+    from repro.serve.kvcache import dequantize_page, quantize_page
+    page = rng.standard_normal((16, 4, 8)).astype(np.float32)
+    q, s = quantize_page(page)
+    deq = dequantize_page(q, s)
+    assert np.abs(deq - page).max() < np.abs(page).max() / 100
+
+
+def test_kv_pool_tiering():
+    from repro.serve.kvcache import PagedKVPool
+    pool = PagedKVPool(page_tokens=4, fast_capacity_pages=2)
+    rng = np.random.default_rng(0)
+    ids = [pool.put(0, rng.standard_normal((4, 2, 8)).astype(np.float32),
+                    rng.standard_normal((4, 2, 8)).astype(np.float32))
+           for _ in range(5)]
+    fast = sum(1 for p in pool.pages.values() if p.tier == "fast")
+    assert fast <= 2 and pool.stats["evictions"] >= 3
+    k, v = pool.get(ids[0])     # demoted page dequantizes on access
+    assert k.shape == (4, 2, 8)
+
+
+def test_autotuner_pareto_depends_on_precision():
+    from repro.core.autotune import autotune, stencil_cost
+    space = {"block_z": [1, 2, 4, 8, 16, 32, 64]}
+    r32 = autotune(stencil_cost, (64, 256, 256), space, dtype_bytes=4,
+                   flops_per_point=30)
+    r16 = autotune(stencil_cost, (64, 256, 256), space, dtype_bytes=2,
+                   flops_per_point=30)
+    assert r32["pareto"] and r16["pareto"]
+    # thesis Fig 3-6: the Pareto-optimal window changes with precision
+    assert (r16["knee"].vmem_bytes != r32["knee"].vmem_bytes or
+            r16["knee"].params != r32["knee"].params)
+
+
+def test_napel_predicts_cell():
+    from pathlib import Path
+    from repro.core.napel.model import Napel, load_dryrun_records
+    recs = load_dryrun_records(
+        Path(__file__).resolve().parents[1] / "experiments" / "dryrun")
+    if len(recs) < 16:
+        pytest.skip("no dry-run corpus present")
+    napel = Napel(tune=False).fit(recs[: len(recs) // 2])
+    pred = napel.predict_cell("codeqwen1.5-7b", "train_4k", (16, 16))
+    assert pred["step_time_s"] > 0 and pred["energy_j"] > 0

@@ -1,0 +1,41 @@
+"""PreciseFPGA (Appendix B) automated fixed-point search tests."""
+import numpy as np
+
+from repro.core.precision_search import (energy_model, required_integer_bits,
+                                         search_fixed_point)
+
+
+def f(src):
+    return 0.5 * src + 0.25 * np.roll(src, 1, axis=-1)
+
+
+def test_interval_analysis_covers_range():
+    x = np.array([3.9, -7.5, 0.1])
+    i = required_integer_bits(x)
+    assert 2.0 ** i >= 7.5
+
+
+def test_energy_monotone_in_width():
+    es = [energy_model(w, 1e6) for w in (8, 16, 24, 32)]
+    assert all(a < b for a, b in zip(es, es[1:]))
+
+
+def test_search_finds_cheap_config(rng):
+    x = rng.normal(0, 1, size=(32, 32))
+    res = search_fixed_point(f, {"src": x}, target_err=0.01)
+    ch = res["chosen"]
+    assert ch is not None
+    assert ch.rel_err <= 0.01
+    # cheaper than fp32-equivalent energy
+    assert ch.energy < energy_model(32, 1e6)
+    # pruned search beats exhaustive
+    assert res["configs_evaluated"] < res["exhaustive_equivalent"]
+
+
+def test_pareto_monotone(rng):
+    x = rng.normal(0, 1, size=(16, 16))
+    res = search_fixed_point(f, {"src": x})
+    errs = [p.rel_err for p in res["pareto"]]
+    energies = [p.energy for p in res["pareto"]]
+    assert all(a >= b for a, b in zip(errs, errs[1:]))       # err falls
+    assert all(a <= b for a, b in zip(energies, energies[1:]))  # energy rises
