@@ -1,9 +1,11 @@
-"""NERO benchmarks (thesis Ch. 3, Figs 3-6/3-7, Table 3.2).
+"""NERO benchmarks (thesis Ch. 3, Figs 3-6/3-7, Table 3.2), generalized
+over the KernelSpec registry.
 
 - Fig 3-6: window ("tile") auto-tune Pareto per precision — the knee moves
-  with dtype, exactly the thesis observation.
-- Fig 3-7 analogue: wall-clock scaling of the jnp reference on this host +
-  the roofline-model throughput of the Pallas kernel per tile.
+  with dtype, exactly the thesis observation. Now computed for *every*
+  registered kernel from its spec's cost model; no per-kernel wiring here.
+- Fig 3-7 analogue: wall-clock of each kernel's jnp reference on this host
+  + the roofline-model scaling of hdiff sharded over chips.
 """
 from __future__ import annotations
 
@@ -13,18 +15,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.cosmo_stencil import cosmo_grid
-from repro.core.autotune import autotune, stencil_cost, vadvc_cost
-from repro.kernels.hdiff import ref as hdiff_ref
-from repro.kernels.vadvc import ref as vadvc_ref
-
-FLOPS_PER_POINT_HDIFF = 30.0
-FLOPS_PER_POINT_VADVC = 25.0
+from repro.core.autotune import autotune_kernel
+from repro.kernels import api, registry
 
 
 def _time(fn, *args, iters=3):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    jax.block_until_ready(fn(*args))
     t0 = time.time()
     for _ in range(iters):
         jax.block_until_ready(fn(*args))
@@ -33,52 +29,44 @@ def _time(fn, *args, iters=3):
 
 def run() -> list[tuple]:
     rows = []
-    g = cosmo_grid()
-    shape = (g.nz, g.ny, g.nx)
-    key = jax.random.PRNGKey(0)
-    x = jax.random.normal(key, shape, jnp.float32)
 
-    # reference wall time on this host (CPU) — measured, honest
-    hd = jax.jit(hdiff_ref.hdiff)
-    t = _time(hd, x)
-    pts = np.prod(shape)
-    rows.append(("nero.hdiff_ref_cpu", t * 1e6,
-                 f"{pts * FLOPS_PER_POINT_HDIFF / t / 1e9:.2f}GFLOPs"))
+    # reference wall time on this host (CPU) — measured, honest — for every
+    # registered kernel at its default (smoke) shape
+    for spec in registry.all_kernels():
+        args = [jnp.asarray(v) for v in spec.example_inputs().values()]
+        t = _time(lambda *a, _n=spec.name: api.run(_n, *a, backend="ref"),
+                  *args)
+        gflops = spec.flops(spec.grid_of(*args)) / t / 1e9
+        rows.append((f"nero.{spec.name}_ref_cpu", t * 1e6,
+                     f"{gflops:.2f}GFLOPs"))
 
-    ks = jax.random.split(key, 5)
-    fields = [jax.random.normal(k, shape) for k in ks[:4]]
-    wcon = jax.random.normal(ks[4], (g.nz + 1, g.ny, g.nx + 1)) * 0.3
-    va = jax.jit(vadvc_ref.vadvc)
-    t = _time(va, *fields, wcon)
-    rows.append(("nero.vadvc_ref_cpu", t * 1e6,
-                 f"{pts * FLOPS_PER_POINT_VADVC / t / 1e9:.2f}GFLOPs"))
-
-    # Fig 3-6: auto-tuned window Pareto, fp32 vs bf16 (target = TPU v5e)
-    space = {"block_z": [1, 2, 4, 8, 16, 32, 64]}
-    for dtype, nbytes in (("fp32", 4), ("bf16", 2)):
-        r = autotune(stencil_cost, shape, space, dtype_bytes=nbytes,
-                     flops_per_point=FLOPS_PER_POINT_HDIFF)
-        knee = r["knee"]
-        gflops = pts * FLOPS_PER_POINT_HDIFF / knee.est_time_s / 1e9
-        rows.append((f"nero.hdiff_autotune_{dtype}", knee.est_time_s * 1e6,
-                     f"knee_bz{knee.params['block_z']}"
-                     f"_vmem{knee.vmem_bytes // 1024}KiB_{gflops:.0f}GFLOPs"))
-    vspace = {"tile_y": [1, 2, 4, 8, 16, 32]}
-    for dtype, nbytes in (("fp32", 4), ("bf16", 2)):
-        r = autotune(vadvc_cost, shape, vspace, dtype_bytes=nbytes)
-        knee = r["knee"]
-        gflops = pts * FLOPS_PER_POINT_VADVC / knee.est_time_s / 1e9
-        rows.append((f"nero.vadvc_autotune_{dtype}", knee.est_time_s * 1e6,
-                     f"knee_ty{knee.params['tile_y']}"
-                     f"_vmem{knee.vmem_bytes // 1024}KiB_{gflops:.0f}GFLOPs"))
+    # Fig 3-6: auto-tuned window Pareto per precision (target = TPU v5e),
+    # at each kernel's production bench shape
+    for spec in registry.all_kernels():
+        grid = spec.grid_from_shape(spec.bench_shape)
+        pts_flops = spec.flops(grid)
+        for dtype in ("float32", "bfloat16"):
+            r = autotune_kernel(spec, grid, dtype=dtype)
+            knee = r["knee"]
+            gflops = pts_flops / knee.est_time_s / 1e9
+            tiles = "_".join(f"{k}{v}" for k, v in sorted(knee.params.items()))
+            rows.append((f"nero.{spec.name}_autotune_{dtype}",
+                         knee.est_time_s * 1e6,
+                         f"knee_{tiles}"
+                         f"_vmem{knee.vmem_bytes // 1024}KiB_{gflops:.0f}"
+                         f"GFLOPs"))
 
     # PE-scaling analogue (Fig 3-7): grid sharded over N chips, per-chip
-    # roofline time from the analytic model (halo bytes included)
+    # roofline time from the registry's cost model (halo bytes included)
+    spec = registry.get("hdiff")
+    g = spec.bench_shape
+    grid = spec.grid_from_shape(g)
+    pts = float(np.prod(grid))
+    flops = spec.flops(grid)
     for chips in (1, 2, 4, 8, 16):
-        per = stencil_cost((g.nz, g.ny // 1, g.nx), {"block_z": 8}, 4,
-                           flops_per_point=FLOPS_PER_POINT_HDIFF)
-        halo_bytes = 2 * 2 * g.nz * g.nx * 4 * chips   # 2 halo rows/cut
+        per = spec.cost_fn(grid, {"block_z": 8}, 4)
+        halo_bytes = 2 * 2 * g["nz"] * g["nx"] * 4 * chips  # 2 halo rows/cut
         t_c = per[1] / chips + halo_bytes / chips / 50e9
         rows.append((f"nero.hdiff_scaling_{chips}chips", t_c * 1e6,
-                     f"{pts * FLOPS_PER_POINT_HDIFF / t_c / 1e9:.0f}GFLOPs"))
+                     f"{flops / t_c / 1e9:.0f}GFLOPs"))
     return rows

@@ -1,6 +1,8 @@
 """Precision-exploration benchmarks (thesis Ch. 4, Fig 4-4 / Table 4.2):
-accuracy of 7-point, 25-point, and hdiff stencils across fixed-point /
-dynamic-float / posit formats, with the thesis' 2-norm error metric."""
+accuracy across fixed-point / dynamic-float / posit formats with the
+thesis' 2-norm error metric — for the thesis' synthetic 7/25-point star
+stencils AND every kernel in the KernelSpec registry (each swept through
+its own `example_inputs`; no per-kernel wiring here)."""
 from __future__ import annotations
 
 import time
@@ -8,7 +10,8 @@ import time
 import numpy as np
 
 from repro.core import precision as prec
-from repro.kernels.hdiff import ref as hdiff_ref
+from repro.core.precision_search import search_kernel
+from repro.kernels import registry
 
 
 def stencil_7pt(src):
@@ -39,11 +42,6 @@ def stencil_25pt(src):
     return out
 
 
-def hdiff_np(src):
-    import jax.numpy as jnp
-    return np.asarray(hdiff_ref.hdiff(jnp.asarray(src, jnp.float32)))
-
-
 FORMATS = [
     prec.FP32, prec.BF16, prec.FP16,
     prec.fmt_float(5, 6), prec.fmt_float(4, 3),
@@ -54,34 +52,53 @@ FORMATS = [
 ]
 
 
+def _report_sweep(rows, name: str, res: list[dict], dt_us: float):
+    """Thesis headline: the smallest non-native format within 1% accuracy."""
+    ok = [r for r in res if r["accuracy_pct"] >= 99.0
+          and r["kind"] != "native"]
+    best = min(ok, key=lambda r: r["bits"]) if ok else res[0]
+    rows.append((f"precision.{name}_best99", dt_us,
+                 f"{best['format']}_{best['bits']}bits_"
+                 f"acc{best['accuracy_pct']:.2f}pct"))
+    for r in res:
+        rows.append((f"precision.{name}.{r['format']}", 0.0,
+                     f"acc{max(r['accuracy_pct'], 0):.3f}pct"))
+
+
 def run() -> list[tuple]:
     rng = np.random.default_rng(0)
     grid = rng.normal(0, 1, size=(16, 48, 48))   # Gaussian input (thesis)
     rows = []
 
-    # Appendix B (PreciseFPGA): automated fixed-point search, Pareto curve
+    # Appendix B (PreciseFPGA): automated fixed-point search, Pareto curve —
+    # the thesis' synthetic stencil plus every registered kernel
     from repro.core.precision_search import search_fixed_point
-    import time as _t
-    t0 = _t.time()
+    t0 = time.time()
     res = search_fixed_point(stencil_7pt, {"src": grid}, target_err=0.01)
     ch = res["chosen"]
-    rows.append(("precisefpga.7pt_auto", (_t.time() - t0) * 1e6,
+    rows.append(("precisefpga.7pt_auto", (time.time() - t0) * 1e6,
                  f"{ch.label}_err{ch.rel_err:.4f}_"
                  f"{res['configs_evaluated']}of"
                  f"{res['exhaustive_equivalent']}configs"))
-    for name, fn in (("7pt", stencil_7pt), ("25pt", stencil_25pt),
-                     ("hdiff", hdiff_np)):
+    for spec in registry.all_kernels():
+        t0 = time.time()
+        res = search_kernel(spec, target_err=0.01)
+        ch = res["chosen"] or min(res["points"], key=lambda p: p.rel_err)
+        rows.append((f"precisefpga.{spec.name}_auto",
+                     (time.time() - t0) * 1e6,
+                     f"{ch.label}_err{ch.rel_err:.4f}_"
+                     f"{res['configs_evaluated']}of"
+                     f"{res['exhaustive_equivalent']}configs"))
+
+    # Fig 4-4 / Table 4.2: format sweeps — synthetic stencils...
+    for name, fn in (("7pt", stencil_7pt), ("25pt", stencil_25pt)):
         t0 = time.time()
         res = prec.precision_sweep(fn, {"src": grid}, FORMATS)
-        dt_us = (time.time() - t0) * 1e6 / len(FORMATS)
-        # report the smallest format within 1% accuracy (thesis headline)
-        ok = [r for r in res if r["accuracy_pct"] >= 99.0
-              and r["kind"] != "native"]
-        best = min(ok, key=lambda r: r["bits"]) if ok else res[0]
-        rows.append((f"precision.{name}_best99", dt_us,
-                     f"{best['format']}_{best['bits']}bits_"
-                     f"acc{best['accuracy_pct']:.2f}pct"))
-        for r in res:
-            rows.append((f"precision.{name}.{r['format']}", 0.0,
-                         f"acc{max(r['accuracy_pct'], 0):.3f}pct"))
+        _report_sweep(rows, name, res, (time.time() - t0) * 1e6 / len(FORMATS))
+    # ...and every registered kernel at its default (smoke) shape
+    for spec in registry.all_kernels():
+        t0 = time.time()
+        res = prec.precision_sweep_kernel(spec, FORMATS)
+        _report_sweep(rows, spec.name, res,
+                      (time.time() - t0) * 1e6 / len(FORMATS))
     return rows

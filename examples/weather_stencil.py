@@ -1,60 +1,50 @@
-"""NERO end-to-end: COSMO weather stencils through the Pallas kernels with
-window auto-tuning and a precision sweep — the thesis' Ch. 3+4 flow.
+"""NERO end-to-end: COSMO weather stencils through the KernelSpec registry
+with window auto-tuning and a precision sweep — the thesis' Ch. 3+4 flow.
 
     PYTHONPATH=src python examples/weather_stencil.py
 """
-import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.configs.cosmo_stencil import cosmo_grid, smoke_grid
 from repro.core import precision as prec
-from repro.core.autotune import autotune, stencil_cost, vadvc_cost
-from repro.kernels.hdiff import ref as hdiff_ref
-from repro.kernels.hdiff.ops import hdiff
-from repro.kernels.vadvc import ref as vadvc_ref
-from repro.kernels.vadvc.ops import vadvc
+from repro.core.autotune import autotune_kernel
+from repro.kernels import api, registry
 
 
 def main():
     g = smoke_grid()   # kernel validation at smoke size (interpret=True)
-    key = jax.random.PRNGKey(0)
-    x = jax.random.normal(key, (g.nz, g.ny, g.nx), jnp.float32)
+    shape = {"nz": g.nz, "ny": g.ny, "nx": g.nx}
 
-    # 1) run the Pallas hdiff kernel (interpret mode on CPU) vs reference
-    out_k = hdiff(x, use_kernel=True, block_z=2, interpret=True)
-    out_r = hdiff_ref.hdiff(x)
-    print(f"hdiff kernel max|err| vs ref: "
-          f"{float(jnp.max(jnp.abs(out_k - out_r))):.2e}")
+    # 1) run the Pallas kernels (interpret mode on CPU) vs their oracles,
+    #    all through the single registry dispatch
+    for name, tile in (("hdiff", {"block_z": 2}), ("vadvc", {"tile_y": 2})):
+        spec = registry.get(name)
+        args = [jnp.asarray(v, jnp.float32)
+                for v in spec.example_inputs(shape=shape).values()]
+        out_k = api.run(name, *args, backend="pallas", tile=tile)
+        out_r = api.run(name, *args, backend="ref")
+        print(f"{name} kernel max|err| vs ref: "
+              f"{float(jnp.max(jnp.abs(out_k - out_r))):.2e}")
 
-    ks = jax.random.split(key, 5)
-    fields = [jax.random.normal(k, (g.nz, g.ny, g.nx)) for k in ks[:4]]
-    wcon = jax.random.normal(ks[4], (g.nz + 1, g.ny, g.nx + 1)) * 0.3
-    va_k = vadvc(*fields, wcon, use_kernel=True, tile_y=2, interpret=True)
-    va_r = vadvc_ref.vadvc(*fields, wcon)
-    print(f"vadvc kernel max|err| vs ref: "
-          f"{float(jnp.max(jnp.abs(va_k - va_r))):.2e}")
-
-    # 2) NERO window auto-tune at production size (roofline model, v5e)
+    # 2) NERO window auto-tune at production size (roofline model, v5e) —
+    #    generic over the registry; backend="auto" applies the same knee
     G = cosmo_grid()
-    shape = (G.nz, G.ny, G.nx)
-    for dtype, nb in (("fp32", 4), ("bf16", 2)):
-        r = autotune(stencil_cost, shape, {"block_z": [1, 2, 4, 8, 16, 32]},
-                     dtype_bytes=nb, flops_per_point=30)
-        k = r["knee"]
-        print(f"hdiff autotuned window ({dtype}): block_z="
-              f"{k.params['block_z']} vmem={k.vmem_bytes // 1024}KiB "
-              f"est={k.est_time_s * 1e6:.0f}us")
+    grid = (G.nz, G.ny, G.nx)
+    for name in ("hdiff", "vadvc"):
+        spec = registry.get(name)
+        for dtype in ("float32", "bfloat16"):
+            r = autotune_kernel(spec, grid, dtype=dtype)
+            k = r["knee"]
+            tiles = " ".join(f"{p}={v}" for p, v in sorted(k.params.items()))
+            print(f"{name} autotuned window ({dtype}): {tiles} "
+                  f"vmem={k.vmem_bytes // 1024}KiB "
+                  f"est={k.est_time_s * 1e6:.0f}us")
 
-    # 3) precision sweep (thesis Fig. 4-4)
-    grid_np = np.asarray(x, np.float64)
+    # 3) precision sweep (thesis Fig. 4-4), via the spec's example_inputs
     fmts = [prec.fmt_fixed(16, 4), prec.fmt_float(5, 10),
             prec.fmt_posit(16, 2), prec.fmt_posit(12, 2)]
-    res = prec.precision_sweep(
-        lambda src: np.asarray(hdiff_ref.hdiff(jnp.asarray(src,
-                                                           jnp.float32))),
-        {"src": grid_np}, fmts)
-    for r in res:
+    for r in prec.precision_sweep_kernel("hdiff", fmts, shape=shape):
         print(f"hdiff @ {r['format']:12s}: accuracy "
               f"{r['accuracy_pct']:.3f}%")
 

@@ -9,18 +9,37 @@ traffic/compute model per candidate — exactly the kind of model NAPEL
 would otherwise learn — and the tuner returns the Pareto front + the
 knee point. The thesis' key observation reproduces here: the Pareto-
 optimal window depends on the datatype precision.
+
+This module is kernel-agnostic: per-kernel cost models live on each
+``KernelSpec`` (repro.kernels.<name>.spec), and ``autotune_kernel``
+searches any registered kernel's tune_space through that spec.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Callable, Sequence
+from typing import Callable
+
+import numpy as np
 
 VMEM_BYTES = 16 * 2 ** 20          # per-core VMEM budget (v5e-class)
 GRID_STEP_OVERHEAD_S = 2e-6        # per grid-step dispatch/DMA latency
 HBM_BW = 819e9
+PEAK_FLOPS = 197e12                # v5e MXU peak (bf16; fp32 ~half — the
+                                   # compute term is a model, not a spec)
 LANE = 128                          # TPU lane width
 SUBLANE = 8
+
+_DTYPE_BYTES = {"float64": 8, "float32": 4, "float16": 2, "bfloat16": 2,
+                "int8": 1, "fp32": 4, "bf16": 2}
+
+
+def dtype_nbytes(dtype) -> int:
+    """Bytes per element for a dtype given as str / np / jnp dtype."""
+    name = getattr(dtype, "name", None) or str(dtype)
+    if name in _DTYPE_BYTES:
+        return _DTYPE_BYTES[name]
+    return int(np.dtype(name).itemsize)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,43 +52,6 @@ class Candidate:
     @property
     def gflops(self):
         return self.params.get("_gflops", 0.0)
-
-
-def stencil_cost(grid_shape, tile: dict, dtype_bytes: int,
-                 flops_per_point: float, fields: int = 1) -> tuple:
-    """Analytic cost for a z-batched plane stencil (hdiff-style).
-
-    tile = {"block_z": bz}; VMEM = bz*ny*nx*dtype*(in+out); time =
-    traffic/BW + grid_steps * overhead, with an alignment penalty when nx
-    is not lane-aligned.
-    """
-    nz, ny, nx = grid_shape
-    bz = tile["block_z"]
-    if nz % bz:
-        return None
-    vmem = bz * ny * nx * dtype_bytes * (fields + 1) * 2   # double buffered
-    traffic = nz * ny * nx * dtype_bytes * (fields + 1)
-    steps = nz // bz
-    align = 1.0 if nx % LANE == 0 else 1.0 + (LANE - nx % LANE) / LANE
-    time = traffic * align / HBM_BW + steps * GRID_STEP_OVERHEAD_S
-    return vmem, time
-
-
-def vadvc_cost(grid_shape, tile: dict, dtype_bytes: int) -> tuple:
-    nz, ny, nx = grid_shape
-    ty = tile["tile_y"]
-    if ny % ty:
-        return None
-    fields = 5          # ustage/upos/utens/utens_stage/wcon
-    scratch = 2         # ccol/dcol
-    vmem = nz * ty * (nx + 1) * dtype_bytes * (fields + scratch + 1)
-    traffic = nz * ny * nx * dtype_bytes * (fields + 1)
-    steps = ny // ty
-    align = 1.0 if nx % LANE == 0 else 1.0 + (LANE - nx % LANE) / LANE
-    # sequential z-sweep limits pipelining for small slabs
-    seq_penalty = 1.0 + 0.2 / max(ty, 1)
-    time = traffic * align * seq_penalty / HBM_BW + steps * GRID_STEP_OVERHEAD_S
-    return vmem, time
 
 
 def autotune(cost_fn: Callable, grid_shape, space: dict, dtype_bytes: int,
@@ -85,6 +67,9 @@ def autotune(cost_fn: Callable, grid_shape, space: dict, dtype_bytes: int,
             continue
         vmem, t = res
         cands.append(Candidate(tile, vmem, t, vmem <= vmem_budget))
+    if not cands:
+        raise ValueError(f"no tile in space {space} divides grid "
+                         f"{tuple(grid_shape)}")
     feas = [c for c in cands if c.feasible] or cands
     # Pareto: minimize (vmem, time)
     front = []
@@ -98,3 +83,12 @@ def autotune(cost_fn: Callable, grid_shape, space: dict, dtype_bytes: int,
                key=lambda c: c.est_time_s, default=best)
     return {"candidates": cands, "pareto": front, "fastest": best,
             "knee": knee}
+
+
+def autotune_kernel(spec, grid_shape, dtype="float32", *,
+                    vmem_budget: int = VMEM_BYTES, space=None) -> dict:
+    """Registry-generic autotune: search ``spec.tune_space`` with
+    ``spec.cost_fn`` for any KernelSpec (or anything shaped like one)."""
+    space = {k: list(v) for k, v in (space or spec.tune_space).items()}
+    return autotune(spec.cost_fn, tuple(grid_shape), space,
+                    dtype_bytes=dtype_nbytes(dtype), vmem_budget=vmem_budget)

@@ -85,8 +85,8 @@ def main():
     out_dir = Path(args.out)
     out_dir.mkdir(parents=True, exist_ok=True)
     md, mm = (int(x) for x in args.mesh.split("x"))
-    mesh = jax.make_mesh((md, mm), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh_compat
+    mesh = make_mesh_compat((md, mm), ("data", "model"))
 
     points = central_composite(DOE_PARAMS)
     for tag, plist in (("doe", points), ("test", TEST_POINTS)):

@@ -170,3 +170,14 @@ def precision_sweep(run_fn: Callable, inputs: dict, formats,
                      "bits": fmt.total_bits, "rel_err": err,
                      "accuracy_pct": 100.0 * (1.0 - err)})
     return rows
+
+
+def precision_sweep_kernel(kernel, formats, *, shape=None,
+                           seed: int = 0) -> list[dict]:
+    """`precision_sweep` over any registered kernel (name or KernelSpec):
+    inputs come from the spec's `example_inputs`, the oracle from its
+    `ref_fn` — no per-kernel wiring at the call site."""
+    from repro.kernels import api
+    spec = api.as_spec(kernel)
+    inputs = spec.example_inputs(shape=shape, dtype=np.float64, seed=seed)
+    return precision_sweep(api.ref_numpy_fn(spec), inputs, formats)

@@ -76,3 +76,18 @@ def search_fixed_point(run_fn: Callable, inputs: dict, *,
             "integer_bits": i_bits,
             "configs_evaluated": len(points),
             "exhaustive_equivalent": len(points) * (max(widths) - 2)}
+
+
+def search_kernel(kernel, *, shape=None, widths: Sequence[int] | None = None,
+                  target_err: float = 0.01, seed: int = 0) -> dict:
+    """`search_fixed_point` over any registered kernel (name or KernelSpec):
+    inputs from the spec's `example_inputs`, the energy model's op count
+    from its `flops` — no per-kernel wiring at the call site."""
+    from repro.kernels import api
+    spec = api.as_spec(kernel)
+    inputs = spec.example_inputs(shape=shape, dtype=np.float64, seed=seed)
+    grid = spec.grid_of(*(inputs[n] for n in spec.arg_names))
+    kw = {"widths": widths} if widths else {}
+    return search_fixed_point(api.ref_numpy_fn(spec), inputs,
+                              ops=float(spec.flops(grid)),
+                              target_err=target_err, **kw)

@@ -1,3 +1,9 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel layer, organized as a KernelSpec registry.
+
+Each kernel package holds <name>.py (the Pallas implementation), ref.py
+(the jnp oracle), spec.py (its KernelSpec: tune space, cost model,
+example inputs — self-registered), and ops.py (deprecated shim over the
+registry dispatch). See README.md in this package for how to add one.
+"""
+from repro.kernels import registry  # noqa: F401
+from repro.kernels.api import KernelCase, KernelSpec, run  # noqa: F401

@@ -1,33 +1,4 @@
-"""Public entry point: flash attention with custom-vjp (Pallas fwd, XLA bwd
-via the reference formulation — recompute, no residuals)."""
-from __future__ import annotations
-
-from functools import partial
-
-import jax
-
-from repro.kernels.flash_attention import ref
-from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
-
-
-@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
-def flash_attention(q, k, v, causal=True, window=0, block_q=128, block_k=128,
-                    interpret=True):
-    return flash_attention_pallas(q, k, v, causal=causal, window=window,
-                                  block_q=block_q, block_k=block_k,
-                                  interpret=interpret)
-
-
-def _fwd(q, k, v, causal, window, block_q, block_k, interpret):
-    out = flash_attention(q, k, v, causal, window, block_q, block_k, interpret)
-    return out, (q, k, v)
-
-
-def _bwd(causal, window, block_q, block_k, interpret, res, g):
-    q, k, v = res
-    _, vjp = jax.vjp(lambda q, k, v: ref.attention(q, k, v, causal=causal,
-                                                   window=window), q, k, v)
-    return vjp(g)
-
-
-flash_attention.defvjp(_fwd, _bwd)
+"""DEPRECATED shim — the differentiable custom-vjp entry now lives on the
+kernel's spec module; prefer ``repro.kernels.api.run("flash_attention", ...)``
+(which dispatches through it, so gradients flow either way)."""
+from repro.kernels.flash_attention.spec import flash_attention  # noqa: F401

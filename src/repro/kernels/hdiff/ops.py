@@ -1,22 +1,17 @@
-"""Public jit'd entry point for horizontal diffusion."""
+"""DEPRECATED shim — use ``repro.kernels.api.run("hdiff", ...)``.
+
+Kept so existing imports keep working; the flags map 1:1 onto the
+registry dispatch (`use_kernel` -> backend, `block_z` -> tile).
+"""
 from __future__ import annotations
 
-from functools import partial
-
-import jax
-
-from repro.kernels.hdiff import ref
-from repro.kernels.hdiff.hdiff import hdiff_pallas
+from repro.kernels import api
 
 
-@partial(jax.jit, static_argnames=("use_kernel", "block_z", "interpret"))
 def hdiff(src, *, use_kernel: bool = True, block_z: int = 1,
           interpret: bool = True):
-    """Horizontal diffusion over a (nz, ny, nx) grid.
-
-    use_kernel=True runs the Pallas TPU kernel (interpret=True executes the
-    kernel body on CPU for validation); False runs the jnp reference.
-    """
-    if use_kernel:
-        return hdiff_pallas(src, block_z=block_z, interpret=interpret)
-    return ref.hdiff(src)
+    """Horizontal diffusion over a (nz, ny, nx) grid."""
+    if not use_kernel:
+        return api.run("hdiff", src, backend="ref")
+    return api.run("hdiff", src, backend="pallas",
+                   tile={"block_z": block_z}, interpret=interpret)

@@ -1,0 +1,68 @@
+"""KernelSpec for COSMO horizontal diffusion (NERO, thesis Ch. 3)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.cosmo_stencil import cosmo_grid
+from repro.core.autotune import GRID_STEP_OVERHEAD_S, HBM_BW, LANE
+from repro.kernels import registry
+from repro.kernels.api import KernelCase, KernelSpec
+from repro.kernels.hdiff import ref
+from repro.kernels.hdiff.hdiff import hdiff_pallas
+
+FLOPS_PER_POINT = 30.0
+DEFAULT_SHAPE = {"nz": 8, "ny": 32, "nx": 48}
+_G = cosmo_grid()                                # COSMO production grid
+BENCH_SHAPE = {"nz": _G.nz, "ny": _G.ny, "nx": _G.nx}
+
+
+def hdiff_cost(grid_shape, tile: dict, dtype_bytes: int,
+               fields: int = 1) -> tuple | None:
+    """Analytic cost for the z-batched plane stencil.
+
+    tile = {"block_z": bz}; VMEM = bz*ny*nx*dtype*(in+out); time =
+    traffic/BW + grid_steps * overhead, with an alignment penalty when nx
+    is not lane-aligned.
+    """
+    nz, ny, nx = grid_shape
+    bz = tile["block_z"]
+    if nz % bz:
+        return None
+    vmem = bz * ny * nx * dtype_bytes * (fields + 1) * 2   # double buffered
+    traffic = nz * ny * nx * dtype_bytes * (fields + 1)
+    steps = nz // bz
+    align = 1.0 if nx % LANE == 0 else 1.0 + (LANE - nx % LANE) / LANE
+    time = traffic * align / HBM_BW + steps * GRID_STEP_OVERHEAD_S
+    return vmem, time
+
+
+def example_inputs(shape=None, dtype=np.float32, seed: int = 0) -> dict:
+    s = {**DEFAULT_SHAPE, **(shape or {})}
+    rng = np.random.default_rng(seed)
+    return {"src": rng.normal(size=(s["nz"], s["ny"], s["nx"])).astype(dtype)}
+
+
+SPEC = registry.register(KernelSpec(
+    name="hdiff",
+    pallas_fn=hdiff_pallas,
+    ref_fn=ref.hdiff,
+    arg_names=("src",),
+    shape_keys=("nz", "ny", "nx"),
+    tune_space={"block_z": (1, 2, 4, 8, 16, 32, 64)},
+    cost_fn=hdiff_cost,
+    example_inputs=example_inputs,
+    flops=lambda g: FLOPS_PER_POINT * g[0] * g[1] * g[2],
+    grid_of=lambda src: tuple(src.shape),
+    default_shape=DEFAULT_SHAPE,
+    bench_shape=BENCH_SHAPE,
+    vjp_mode="jit",
+    dtypes=("float32", "bfloat16"),
+    tol={"float32": 1e-5, "bfloat16": 0.12},
+    cases=(
+        KernelCase({"nz": 4, "ny": 16, "nx": 24}, {"block_z": 1}),
+        KernelCase({"nz": 8, "ny": 32, "nx": 48}, {"block_z": 2}),
+        KernelCase({"nz": 8, "ny": 24, "nx": 128}, {"block_z": 4}),
+        KernelCase({"nz": 4, "ny": 16, "nx": 24}, {"block_z": 2},
+                   dtype="bfloat16"),
+    ),
+))

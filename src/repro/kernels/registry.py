@@ -1,0 +1,55 @@
+"""KernelSpec registry: the single source of truth for which kernels
+exist and what the data-driven layers may assume about them.
+
+Kernel packages self-register at import of their ``spec`` module; the
+builtin five are loaded lazily on first lookup so importing
+``repro.kernels`` stays cheap and cycle-free. Adding a kernel is one
+file: ``repro/kernels/<name>/spec.py`` calling ``register(KernelSpec(...))``
+(see repro/kernels/README.md) — autotuning, precision search, the
+benchmarks and the conformance tests pick it up with no further edits.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.kernels import api
+from repro.kernels.api import KernelSpec
+
+_REGISTRY: dict[str, KernelSpec] = {}
+_BUILTIN = ("flash_attention", "hdiff", "rglru_scan", "ssd_scan", "vadvc")
+_loaded = False
+
+
+def register(spec: KernelSpec) -> KernelSpec:
+    """Register (or re-register, e.g. on module reload) a kernel spec."""
+    if not isinstance(spec, KernelSpec):
+        raise TypeError(f"expected KernelSpec, got {type(spec)}")
+    _REGISTRY[spec.name] = spec
+    api.invalidate_caches()     # a reloaded spec must not serve stale fns
+    return spec
+
+
+def _ensure_builtin():
+    global _loaded
+    if not _loaded:
+        for pkg in _BUILTIN:
+            importlib.import_module(f"repro.kernels.{pkg}.spec")
+        _loaded = True          # only once every spec imported cleanly
+
+
+def get(name: str) -> KernelSpec:
+    _ensure_builtin()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"no kernel {name!r} registered "
+                       f"(available: {names()})") from None
+
+
+def names() -> list[str]:
+    _ensure_builtin()
+    return sorted(_REGISTRY)
+
+
+def all_kernels() -> list[KernelSpec]:
+    return [_REGISTRY[n] for n in names()]

@@ -1,17 +1,12 @@
-"""Public entry point for the RG-LRU linear recurrence."""
+"""DEPRECATED shim — use ``repro.kernels.api.run("rglru_scan", ...)``."""
 from __future__ import annotations
 
-from functools import partial
-
-import jax
-
-from repro.kernels.rglru_scan import ref
-from repro.kernels.rglru_scan.rglru_scan import rglru_scan_pallas
+from repro.kernels import api
 
 
-@partial(jax.jit, static_argnames=("use_kernel", "chunk", "interpret"))
 def lru_scan(a, b, *, use_kernel: bool = True, chunk: int = 256,
              interpret: bool = True):
-    if use_kernel:
-        return rglru_scan_pallas(a, b, chunk=chunk, interpret=interpret)
-    return ref.lru_scan(a, b)
+    if not use_kernel:
+        return api.run("rglru_scan", a, b, backend="ref")
+    return api.run("rglru_scan", a, b, backend="pallas",
+                   tile={"chunk": chunk}, interpret=interpret)

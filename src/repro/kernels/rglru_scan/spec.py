@@ -1,0 +1,65 @@
+"""KernelSpec for the RG-LRU chunked linear recurrence."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.autotune import GRID_STEP_OVERHEAD_S, HBM_BW, LANE
+from repro.kernels import registry
+from repro.kernels.api import KernelCase, KernelSpec
+from repro.kernels.rglru_scan import ref
+from repro.kernels.rglru_scan.rglru_scan import rglru_scan_pallas
+
+DEFAULT_SHAPE = {"B": 2, "S": 128, "W": 32}
+BENCH_SHAPE = {"B": 8, "S": 4096, "W": 2560}
+SEQ_ROW_S = 5e-8      # VPU latency per sequential recurrence row
+
+
+def rglru_cost(grid_shape, tile: dict, dtype_bytes: int) -> tuple | None:
+    """tile = {"chunk": q}. HBM sees every element once in / once out; the
+    recurrence itself is latency-bound (sequential rows), so the window
+    only trades grid-step overhead against VMEM residency."""
+    B, S, W = grid_shape
+    q = tile["chunk"]
+    if S % q:
+        return None
+    vmem = 3 * q * W * dtype_bytes * 2 + W * 4      # a/b/h blocks + state
+    traffic = 3 * B * S * W * dtype_bytes
+    steps = B * (S // q)
+    align = 1.0 if W % LANE == 0 else 1.0 + (LANE - W % LANE) / LANE
+    time = traffic * align / HBM_BW + B * S * SEQ_ROW_S \
+        + steps * GRID_STEP_OVERHEAD_S
+    return vmem, time
+
+
+def example_inputs(shape=None, dtype=np.float32, seed: int = 0) -> dict:
+    s = {**DEFAULT_SHAPE, **(shape or {})}
+    B, S, W = s["B"], s["S"], s["W"]
+    rng = np.random.default_rng(seed)
+    return {
+        "a": rng.uniform(0.85, 0.999, size=(B, S, W)).astype(dtype),
+        "b": (rng.normal(size=(B, S, W)) * 0.1).astype(dtype),
+    }
+
+
+SPEC = registry.register(KernelSpec(
+    name="rglru_scan",
+    pallas_fn=rglru_scan_pallas,
+    ref_fn=ref.lru_scan,
+    arg_names=("a", "b"),
+    shape_keys=("B", "S", "W"),
+    tune_space={"chunk": (32, 64, 128, 256, 512)},
+    cost_fn=rglru_cost,
+    example_inputs=example_inputs,
+    flops=lambda g: 2.0 * g[0] * g[1] * g[2],
+    grid_of=lambda a, b: tuple(a.shape),
+    default_shape=DEFAULT_SHAPE,
+    bench_shape=BENCH_SHAPE,
+    vjp_mode="jit",
+    dtypes=("float32",),
+    tol={"float32": 1e-5},
+    cases=(
+        KernelCase({"B": 2, "S": 64, "W": 32}, {"chunk": 16}),
+        KernelCase({"B": 1, "S": 128, "W": 64}, {"chunk": 64}),
+        KernelCase({"B": 3, "S": 96, "W": 16}, {"chunk": 32}),
+    ),
+))

@@ -1,18 +1,13 @@
-"""Public entry point for the SSD scan."""
+"""DEPRECATED shim — use ``repro.kernels.api.run("ssd_scan", ...)``."""
 from __future__ import annotations
 
-from functools import partial
-
-import jax
-
-from repro.kernels.ssd_scan import ref
-from repro.kernels.ssd_scan.ssd_scan import ssd_scan_pallas
+from repro.kernels import api
 
 
-@partial(jax.jit, static_argnames=("use_kernel", "chunk", "interpret"))
 def ssd_scan(x, b_mat, c_mat, dt, a, *, use_kernel: bool = True,
              chunk: int = 128, interpret: bool = True):
-    if use_kernel:
-        return ssd_scan_pallas(x, b_mat, c_mat, dt, a, chunk=chunk,
-                               interpret=interpret)
-    return ref.ssd(x, b_mat, c_mat, dt, a)[0]
+    args = (x, b_mat, c_mat, dt, a)
+    if not use_kernel:
+        return api.run("ssd_scan", *args, backend="ref")
+    return api.run("ssd_scan", *args, backend="pallas",
+                   tile={"chunk": chunk}, interpret=interpret)

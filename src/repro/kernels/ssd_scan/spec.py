@@ -1,0 +1,89 @@
+"""KernelSpec for the Mamba2 SSD chunked scan."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.autotune import (GRID_STEP_OVERHEAD_S, HBM_BW, LANE,
+                                 PEAK_FLOPS)
+from repro.kernels import registry
+from repro.kernels.api import KernelCase, KernelSpec
+from repro.kernels.ssd_scan import ref
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan_pallas
+
+DEFAULT_SHAPE = {"B": 2, "S": 64, "H": 4, "P": 16, "G": 1, "N": 8}
+BENCH_SHAPE = {"B": 8, "S": 4096, "H": 24, "P": 64, "G": 1, "N": 128}
+
+
+def _ref(x, b_mat, c_mat, dt, a):
+    return ref.ssd(x, b_mat, c_mat, dt, a)[0]
+
+
+def ssd_cost(grid_shape, tile: dict, dtype_bytes: int) -> tuple | None:
+    """tile = {"chunk": q}. Larger chunks amortize grid-step overhead but
+    grow the (q, q) intra-chunk score/decay tiles quadratically — the
+    data-movement tradeoff this kernel exists to exploit (those tiles stay
+    in VMEM; the XLA path materializes them to HBM)."""
+    B, S, H, P, G, N = grid_shape
+    q = tile["chunk"]
+    if S % q:
+        return None
+    # x/y (q,P) + b/c (q,N) + dt blocks, double buffered, plus fp32 state
+    # (N,P) and three (q,q) intra-chunk tiles (cb, decay, s)
+    vmem = (2 * q * P + 2 * q * N + q) * dtype_bytes * 2 \
+        + (N * P + 3 * q * q) * 4
+    # b/c are re-streamed per head of the group (grid is batch x head)
+    traffic = B * H * S * (2 * P + 2 * N + 1) * dtype_bytes
+    flops = 2.0 * B * H * S * (q * (N + P) + 2 * N * P)
+    steps = B * H * (S // q)
+    align = 1.0 if P % LANE == 0 else 1.0 + (LANE - P % LANE) / LANE
+    time = max(traffic * align / HBM_BW, flops / PEAK_FLOPS) \
+        + steps * GRID_STEP_OVERHEAD_S
+    return vmem, time
+
+
+def example_inputs(shape=None, dtype=np.float32, seed: int = 0) -> dict:
+    s = {**DEFAULT_SHAPE, **(shape or {})}
+    B, S, H, P, G, N = (s[k] for k in ("B", "S", "H", "P", "G", "N"))
+    rng = np.random.default_rng(seed)
+    return {
+        "x": rng.normal(size=(B, S, H, P)).astype(dtype),
+        "b_mat": (rng.normal(size=(B, S, G, N)) * 0.5).astype(dtype),
+        "c_mat": (rng.normal(size=(B, S, G, N)) * 0.5).astype(dtype),
+        "dt": np.log1p(np.exp(rng.normal(size=(B, S, H)))).astype(dtype),
+        "a": (-np.exp(rng.uniform(0.0, 1.0, size=(H,)))).astype(dtype),
+    }
+
+
+def _grid_of(x, b_mat, *rest):
+    B, S, H, P = x.shape
+    G, N = b_mat.shape[2], b_mat.shape[3]
+    return B, S, H, P, G, N
+
+
+SPEC = registry.register(KernelSpec(
+    name="ssd_scan",
+    pallas_fn=ssd_scan_pallas,
+    ref_fn=_ref,
+    arg_names=("x", "b_mat", "c_mat", "dt", "a"),
+    shape_keys=("B", "S", "H", "P", "G", "N"),
+    tune_space={"chunk": (16, 32, 64, 128, 256)},
+    cost_fn=ssd_cost,
+    example_inputs=example_inputs,
+    # chunk-independent useful work (intra-chunk term taken at q=64)
+    flops=lambda g: 2.0 * g[0] * g[2] * g[1] * (64 * (g[5] + g[3])
+                                                + 2 * g[5] * g[3]),
+    grid_of=_grid_of,
+    default_shape=DEFAULT_SHAPE,
+    bench_shape=BENCH_SHAPE,
+    vjp_mode="jit",
+    dtypes=("float32",),
+    tol={"float32": 2e-4},
+    cases=(
+        KernelCase({"B": 2, "S": 64, "H": 4, "P": 16, "G": 1, "N": 8},
+                   {"chunk": 16}),
+        KernelCase({"B": 1, "S": 128, "H": 4, "P": 32, "G": 2, "N": 16},
+                   {"chunk": 32}),
+        KernelCase({"B": 2, "S": 64, "H": 6, "P": 8, "G": 3, "N": 8},
+                   {"chunk": 64}),
+    ),
+))

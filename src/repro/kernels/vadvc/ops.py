@@ -1,18 +1,13 @@
-"""Public jit'd entry point for vertical advection."""
+"""DEPRECATED shim — use ``repro.kernels.api.run("vadvc", ...)``."""
 from __future__ import annotations
 
-from functools import partial
-
-import jax
-
-from repro.kernels.vadvc import ref
-from repro.kernels.vadvc.vadvc import vadvc_pallas
+from repro.kernels import api
 
 
-@partial(jax.jit, static_argnames=("use_kernel", "tile_y", "interpret"))
 def vadvc(ustage, upos, utens, utens_stage, wcon, *, use_kernel: bool = True,
           tile_y: int = 4, interpret: bool = True):
-    if use_kernel:
-        return vadvc_pallas(ustage, upos, utens, utens_stage, wcon,
-                            tile_y=tile_y, interpret=interpret)
-    return ref.vadvc(ustage, upos, utens, utens_stage, wcon)
+    args = (ustage, upos, utens, utens_stage, wcon)
+    if not use_kernel:
+        return api.run("vadvc", *args, backend="ref")
+    return api.run("vadvc", *args, backend="pallas",
+                   tile={"tile_y": tile_y}, interpret=interpret)

@@ -1,0 +1,73 @@
+"""KernelSpec for COSMO vertical advection (NERO, thesis Ch. 3)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.cosmo_stencil import cosmo_grid
+from repro.core.autotune import GRID_STEP_OVERHEAD_S, HBM_BW, LANE
+from repro.kernels import registry
+from repro.kernels.api import KernelCase, KernelSpec
+from repro.kernels.vadvc import ref
+from repro.kernels.vadvc.vadvc import vadvc_pallas
+
+FLOPS_PER_POINT = 25.0
+DEFAULT_SHAPE = {"nz": 16, "ny": 8, "nx": 32}
+_G = cosmo_grid()                                # COSMO production grid
+BENCH_SHAPE = {"nz": _G.nz, "ny": _G.ny, "nx": _G.nx}
+
+
+def vadvc_cost(grid_shape, tile: dict, dtype_bytes: int) -> tuple | None:
+    """tile = {"tile_y": ty}; the z-sweep keeps whole (nz, ty, nx) columns
+    of all five fields + two scratch columns resident in VMEM."""
+    nz, ny, nx = grid_shape
+    ty = tile["tile_y"]
+    if ny % ty:
+        return None
+    fields = 5          # ustage/upos/utens/utens_stage/wcon
+    scratch = 2         # ccol/dcol
+    vmem = nz * ty * (nx + 1) * dtype_bytes * (fields + scratch + 1)
+    traffic = nz * ny * nx * dtype_bytes * (fields + 1)
+    steps = ny // ty
+    align = 1.0 if nx % LANE == 0 else 1.0 + (LANE - nx % LANE) / LANE
+    # sequential z-sweep limits pipelining for small slabs
+    seq_penalty = 1.0 + 0.2 / max(ty, 1)
+    time = traffic * align * seq_penalty / HBM_BW + steps * GRID_STEP_OVERHEAD_S
+    return vmem, time
+
+
+def example_inputs(shape=None, dtype=np.float32, seed: int = 0) -> dict:
+    s = {**DEFAULT_SHAPE, **(shape or {})}
+    nz, ny, nx = s["nz"], s["ny"], s["nx"]
+    rng = np.random.default_rng(seed)
+    return {
+        "ustage": rng.normal(size=(nz, ny, nx)).astype(dtype),
+        "upos": rng.normal(size=(nz, ny, nx)).astype(dtype),
+        "utens": (rng.normal(size=(nz, ny, nx)) * 0.1).astype(dtype),
+        "utens_stage": (rng.normal(size=(nz, ny, nx)) * 0.1).astype(dtype),
+        "wcon": (rng.normal(size=(nz + 1, ny, nx + 1)) * 0.3).astype(dtype),
+    }
+
+
+SPEC = registry.register(KernelSpec(
+    name="vadvc",
+    pallas_fn=vadvc_pallas,
+    ref_fn=ref.vadvc,
+    arg_names=("ustage", "upos", "utens", "utens_stage", "wcon"),
+    shape_keys=("nz", "ny", "nx"),
+    tune_space={"tile_y": (1, 2, 4, 8, 16, 32)},
+    cost_fn=vadvc_cost,
+    example_inputs=example_inputs,
+    flops=lambda g: FLOPS_PER_POINT * g[0] * g[1] * g[2],
+    grid_of=lambda ustage, *rest: tuple(ustage.shape),
+    default_shape=DEFAULT_SHAPE,
+    bench_shape=BENCH_SHAPE,
+    vjp_mode="jit",
+    dtypes=("float32",),
+    tol={"float32": 5e-5},
+    cases=(
+        KernelCase({"nz": 8, "ny": 4, "nx": 16}, {"tile_y": 1}),
+        KernelCase({"nz": 16, "ny": 8, "nx": 32}, {"tile_y": 2}),
+        KernelCase({"nz": 16, "ny": 8, "nx": 32}, {"tile_y": 4}),
+        KernelCase({"nz": 32, "ny": 4, "nx": 24}, {"tile_y": 2}),
+    ),
+))

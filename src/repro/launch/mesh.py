@@ -1,24 +1,45 @@
-"""Production meshes.
+"""Production meshes + jax version-compat constructors.
 
 Defined as functions (never module-level constants) so importing this module
 never touches jax device state. The dry-run launcher sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
 import; everything else sees the real device count.
+
+The compat helpers paper over two jax API breaks:
+ - ``jax.sharding.AxisType`` (and ``jax.make_mesh(..., axis_types=)``) does
+   not exist on 0.4.x — fall back to plain ``jax.make_mesh``.
+ - ``AbstractMesh`` took a single tuple-of-(name, size) pairs on 0.4.x but
+   ``(axis_sizes, axis_names)`` on newer releases.
 """
 from __future__ import annotations
 
 import jax
 
 
+def make_mesh_compat(shape, axes):
+    """`jax.make_mesh` that requests Auto axis types only where supported."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(tuple(shape), tuple(axes),
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_abstract_mesh(shape, axes):
+    """Deviceless `AbstractMesh` across the 0.4.x -> 0.5+ signature change."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(shape), tuple(axes))
+    except TypeError:                       # 0.4.x: tuple of (name, size)
+        return AbstractMesh(tuple(zip(tuple(axes), tuple(shape))))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_host_mesh():
     """Whatever devices exist locally (tests/examples): 1D data mesh."""
-    n = len(jax.devices())
-    return jax.make_mesh((n,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return make_mesh_compat((len(jax.devices()),), ("data",))

@@ -149,12 +149,11 @@ def test_kv_pool_tiering():
 
 
 def test_autotuner_pareto_depends_on_precision():
-    from repro.core.autotune import autotune, stencil_cost
-    space = {"block_z": [1, 2, 4, 8, 16, 32, 64]}
-    r32 = autotune(stencil_cost, (64, 256, 256), space, dtype_bytes=4,
-                   flops_per_point=30)
-    r16 = autotune(stencil_cost, (64, 256, 256), space, dtype_bytes=2,
-                   flops_per_point=30)
+    from repro.core.autotune import autotune_kernel
+    from repro.kernels import registry
+    spec = registry.get("hdiff")
+    r32 = autotune_kernel(spec, (64, 256, 256), dtype="float32")
+    r16 = autotune_kernel(spec, (64, 256, 256), dtype="bfloat16")
     assert r32["pareto"] and r16["pareto"]
     # thesis Fig 3-6: the Pareto-optimal window changes with precision
     assert (r16["knee"].vmem_bytes != r32["knee"].vmem_bytes or

@@ -1,7 +1,9 @@
 """Property-based tests (hypothesis) for system invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import precision as prec
 from repro.core.hlo_cost import _shape_elems_bytes

@@ -4,17 +4,17 @@ cache, and batch shardings must construct with valid divisibility."""
 import jax
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
 
 from repro.configs import SHAPES, get_config, list_archs, shapes_for
+from repro.launch.mesh import make_abstract_mesh
 from repro.models import Model
 from repro.sharding.partition import spec_for, tree_shardings
 from repro.train.optimizer import OptimizerConfig, opt_state_logical
 from repro.train.train_step import abstract_opt_state
 
 MESHES = [
-    AbstractMesh((16, 16), ("data", "model")),
-    AbstractMesh((2, 16, 16), ("pod", "data", "model")),
+    make_abstract_mesh((16, 16), ("data", "model")),
+    make_abstract_mesh((2, 16, 16), ("pod", "data", "model")),
 ]
 
 

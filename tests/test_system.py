@@ -154,9 +154,9 @@ def test_hlo_cost_counts_scan_trip():
 
 
 def test_compressed_psum_matches_plain():
+    from repro.launch.mesh import make_mesh_compat
     from repro.train.grad_compression import data_parallel_mean_compressed
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh_compat((1,), ("data",))
     x = {"g": jnp.asarray(np.random.default_rng(0).standard_normal((8, 8)),
                           jnp.float32)}
     out = data_parallel_mean_compressed(x, mesh)
