@@ -55,9 +55,12 @@ class Candidate:
 
 
 def autotune(cost_fn: Callable, grid_shape, space: dict, dtype_bytes: int,
-             vmem_budget: int = VMEM_BYTES, **cost_kwargs) -> dict:
+             vmem_budget: int = VMEM_BYTES, knee_slack: float = 4.0,
+             **cost_kwargs) -> dict:
     """Exhaustive multi-objective search (the thesis used OpenTuner in
-    exhaustive mode for the same spaces). Returns Pareto front + knee."""
+    exhaustive mode for the same spaces). Returns Pareto front + knee: the
+    fastest front config whose VMEM stays within ``knee_slack`` x the
+    smallest front footprint."""
     names = sorted(space)
     cands = []
     for combo in itertools.product(*(space[n] for n in names)):
@@ -77,18 +80,21 @@ def autotune(cost_fn: Callable, grid_shape, space: dict, dtype_bytes: int,
         if not front or c.vmem_bytes < front[-1].vmem_bytes:
             front.append(c)
     best = min(feas, key=lambda c: c.est_time_s)
-    # knee: fastest config whose VMEM is within 2x of the smallest on front
+    # knee: fastest config whose VMEM is within knee_slack x the smallest
+    # on the front
     min_vmem = min(c.vmem_bytes for c in front)
-    knee = min((c for c in front if c.vmem_bytes <= 4 * min_vmem),
+    knee = min((c for c in front if c.vmem_bytes <= knee_slack * min_vmem),
                key=lambda c: c.est_time_s, default=best)
     return {"candidates": cands, "pareto": front, "fastest": best,
             "knee": knee}
 
 
 def autotune_kernel(spec, grid_shape, dtype="float32", *,
-                    vmem_budget: int = VMEM_BYTES, space=None) -> dict:
+                    vmem_budget: int = VMEM_BYTES, knee_slack: float = 4.0,
+                    space=None) -> dict:
     """Registry-generic autotune: search ``spec.tune_space`` with
     ``spec.cost_fn`` for any KernelSpec (or anything shaped like one)."""
     space = {k: list(v) for k, v in (space or spec.tune_space).items()}
     return autotune(spec.cost_fn, tuple(grid_shape), space,
-                    dtype_bytes=dtype_nbytes(dtype), vmem_budget=vmem_budget)
+                    dtype_bytes=dtype_nbytes(dtype), vmem_budget=vmem_budget,
+                    knee_slack=knee_slack)

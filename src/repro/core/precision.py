@@ -152,17 +152,23 @@ BF16 = fmt_float(8, 7)
 FP16 = fmt_float(5, 10)
 
 
+def _is_data(v) -> bool:
+    """Number formats apply to data, not indices: integer inputs (page
+    tables, lengths, int8 pools) are structural and never quantized."""
+    return not np.issubdtype(np.asarray(v).dtype, np.integer)
+
+
 def precision_sweep(run_fn: Callable, inputs: dict, formats,
                     exact_out=None) -> list[dict]:
     """Run `run_fn(**quantized_inputs)` per format; track 2-norm error vs the
     fp64/fp32 exact output (thesis Fig. 4-2 flow: instrument -> explore ->
-    error tracking)."""
+    error tracking). Integer-dtype inputs pass through unquantized."""
     if exact_out is None:
-        exact_out = run_fn(**{k: np.asarray(v, np.float64)
-                              for k, v in inputs.items()})
+        exact_out = run_fn(**{k: np.asarray(v, np.float64) if _is_data(v)
+                              else v for k, v in inputs.items()})
     rows = []
     for fmt in formats:
-        qin = {k: fmt(v) for k, v in inputs.items()}
+        qin = {k: fmt(v) if _is_data(v) else v for k, v in inputs.items()}
         out = run_fn(**qin)
         out = fmt(out)          # storage quantization of the result
         err = relative_error_2norm(out, exact_out)

@@ -50,17 +50,22 @@ def search_fixed_point(run_fn: Callable, inputs: dict, *,
 
     Unlike a full (w x i) grid, integer bits are fixed by interval analysis
     over inputs and the exact output (the thesis' pruning step), so the
-    search is linear in the number of widths.
+    search is linear in the number of widths. Integer-dtype inputs are
+    structural (indices, lengths) and are neither quantized nor counted in
+    the interval analysis.
     """
-    exact = run_fn(**{k: np.asarray(v, np.float64) for k, v in inputs.items()})
+    exact = run_fn(**{k: np.asarray(v, np.float64) if prec._is_data(v)
+                      else v for k, v in inputs.items()})
+    data = [v for v in inputs.values() if prec._is_data(v)]
     i_bits = max(required_integer_bits(exact),
-                 *(required_integer_bits(v) for v in inputs.values()))
+                 *(required_integer_bits(v) for v in data))
     points = []
     for w in widths:
         if w - 1 - i_bits < 1:
             continue
         fmt = prec.fmt_fixed(w, i_bits)
-        out = fmt(run_fn(**{k: fmt(v) for k, v in inputs.items()}))
+        out = fmt(run_fn(**{k: fmt(v) if prec._is_data(v) else v
+                            for k, v in inputs.items()}))
         err = prec.relative_error_2norm(out, exact)
         points.append(SearchPoint(w, i_bits, err, energy_model(w, ops)))
     # Pareto: minimize (energy, err)

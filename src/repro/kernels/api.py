@@ -95,19 +95,28 @@ def _freeze(kw: dict) -> tuple:
 
 
 def run(name: str, *args, backend: str = "pallas", tile=None,
-        interpret: bool = True, **kwargs):
+        interpret: bool | None = None, **kwargs):
     """Single entry point over every registered kernel.
 
-    backend="pallas" runs the Pallas kernel (interpret=True executes the
-    kernel body on CPU for validation); "ref" runs the jnp oracle;
-    "auto" runs Pallas with tile=None resolved to the knee point of the
-    spec's cost model over its tune_space (repro.core.autotune).
+    backend="pallas" runs the Pallas kernel (interpret, default True,
+    executes the kernel body on CPU for validation); "ref" runs the jnp
+    oracle; "auto" runs Pallas with tile=None resolved to the knee point
+    of the spec's cost model over its tune_space (repro.core.autotune).
+    tile=/interpret= are Pallas-only: passing either with backend="ref"
+    raises, so a typoed benchmark call can't silently measure the oracle.
     """
     if backend not in BACKENDS:
         raise ValueError(f"backend {backend!r} not in {BACKENDS}")
     spec = as_spec(name)
     if backend == "ref":
+        if tile is not None or interpret is not None:
+            raise ValueError(
+                f"{spec.name}: tile={tile!r} / interpret={interpret!r} "
+                f"have no effect with backend='ref' — the jnp oracle takes "
+                f"no tile parameters; drop them or use backend='pallas'")
         return _jitted(spec.name, "ref", _freeze(kwargs))(*args)
+    if interpret is None:
+        interpret = True
     if tile is None:
         tile = resolve_tile(spec, args) if backend == "auto" else {}
     tile = dict(tile)
@@ -151,13 +160,20 @@ def invalidate_caches():
 # ---------------------------------------------------------------------------
 def ref_numpy_fn(kernel, **fixed) -> Callable:
     """fn(**inputs) running the jnp oracle on numpy inputs (fp32 compute,
-    numpy out) — the shape `precision_sweep` / `search_fixed_point` expect."""
+    numpy out) — the shape `precision_sweep` / `search_fixed_point` expect.
+    Integer inputs (page tables, lengths, int8 pools) keep their dtype;
+    only inexact inputs are cast to fp32."""
     spec = as_spec(kernel)
 
     def fn(**inputs):
         import jax.numpy as jnp
-        args = [jnp.asarray(np.asarray(inputs[n], np.float32))
-                for n in spec.arg_names]
+
+        def cast(v):
+            v = np.asarray(v)
+            return v if np.issubdtype(v.dtype, np.integer) \
+                else np.asarray(v, np.float32)
+
+        args = [jnp.asarray(cast(inputs[n])) for n in spec.arg_names]
         return np.asarray(run(spec.name, *args, backend="ref", **fixed))
 
     return fn

@@ -1,0 +1,138 @@
+"""Pallas TPU kernel: single-token paged decode attention (GQA).
+
+The KV cache lives in a page pool rather than per-sequence dense buffers:
+``{k,v}_pages`` (float, "fast"/HBM tier) and ``{k,v}_quant`` + ``{k,v}_scale``
+(int8 + per-row scale, "slow" tier) share one page-id space, and each
+sequence names its pages through ``page_table``. Pages are gathered by the
+BlockSpec index maps from the scalar-prefetched page table (the TPU paged-
+attention idiom: the table is known before the kernel body runs, so each
+grid step DMAs exactly the pages it needs — no dense gather in HBM).
+
+Grid: (batch, kv-head blocks, page blocks); the page axis is innermost so
+the (m, l, acc) online-softmax state lives in VMEM scratch across page
+steps. ``pages_per_block`` pages are fetched per step (each as its own
+block, indexed off the page table), ``head_block`` kv heads — and all
+their ``g = hq // hkv`` query heads — are reduced together. Slow-tier
+content dequantizes on load: fast pages store zeros in the quant pool and
+vice versa, so ``k = k_pages + k_quant * k_scale`` is exact either way.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(pt_ref, len_ref, q_ref, *refs, ppb: int, t: int,
+                  scale: float):
+    ins = refs[:-4]
+    o_ref, m_ref, l_ref, acc_ref = refs[-4:]
+    bi = pl.program_id(0)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+    length = len_ref[bi]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # skip page blocks entirely past this sequence's KV length
+    @pl.when(ki * ppb * t < length)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale            # (hb, g, d)
+        for j in range(ppb):
+            kf, kq, ks, vf, vq, vs = ins[6 * j:6 * j + 6]
+            k = (kf[0].astype(jnp.float32)                  # (t, hb, d)
+                 + kq[0].astype(jnp.float32)
+                 * ks[0].astype(jnp.float32)[..., None])
+            v = (vf[0].astype(jnp.float32)
+                 + vq[0].astype(jnp.float32)
+                 * vs[0].astype(jnp.float32)[..., None])
+            s = jax.lax.dot_general(q, k, (((2,), (2,)), ((0,), (1,))),
+                                    preferred_element_type=jnp.float32)
+            pos = (ki * ppb + j) * t + jax.lax.broadcasted_iota(
+                jnp.int32, (1, 1, t), 2)
+            s = jnp.where(pos < length, s, NEG_INF)         # (hb, g, t)
+
+            m_prev = m_ref[...]                             # (hb, g, 1)
+            m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            corr = jnp.exp(m_prev - m_new)
+            l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+            m_ref[...] = m_new
+            pv = jax.lax.dot_general(p, v, (((2,), (0,)), ((0,), (1,))),
+                                     preferred_element_type=jnp.float32)
+            acc_ref[...] = acc_ref[...] * corr + pv
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_attention_pallas(q, k_pages, v_pages, k_quant, v_quant, k_scale,
+                           v_scale, page_table, lengths, *,
+                           pages_per_block: int = 4, head_block: int = 1,
+                           softmax_scale=None, interpret: bool = False):
+    """q: (b, hq, d); {k,v}_pages / {k,v}_quant: (P, T, hkv, d);
+    {k,v}_scale: (P, T, hkv); page_table: (b, slots) int32; lengths: (b,)
+    int32 (>= 1 per sequence). Returns (b, hq, d)."""
+    b, hq, d = q.shape
+    _, t, hkv, _ = k_pages.shape
+    slots = page_table.shape[1]
+    g = hq // hkv
+    ppb = min(pages_per_block, slots)
+    hb = min(head_block, hkv)
+    assert slots % ppb == 0 and hkv % hb == 0, (slots, ppb, hkv, hb)
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(d)
+
+    qg = q.reshape(b, hkv, g, d)
+    grid = (b, hkv // hb, slots // ppb)
+
+    def q_map(bi, hi, ki, pt, ln):
+        return (bi, hi, 0, 0)
+
+    def pool_spec(j):
+        return pl.BlockSpec(
+            (1, t, hb, d),
+            lambda bi, hi, ki, pt, ln: (pt[bi, ki * ppb + j], 0, hi, 0))
+
+    def scale_spec(j):
+        return pl.BlockSpec(
+            (1, t, hb),
+            lambda bi, hi, ki, pt, ln: (pt[bi, ki * ppb + j], 0, hi))
+
+    in_specs = [pl.BlockSpec((1, hb, g, d), q_map)]
+    operands = [qg]
+    for j in range(ppb):
+        in_specs += [pool_spec(j), pool_spec(j), scale_spec(j),
+                     pool_spec(j), pool_spec(j), scale_spec(j)]
+        operands += [k_pages, k_quant, k_scale, v_pages, v_quant, v_scale]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, hb, g, d), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((hb, g, 1), jnp.float32),
+            pltpu.VMEM((hb, g, 1), jnp.float32),
+            pltpu.VMEM((hb, g, d), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_paged_kernel, ppb=ppb, t=t, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32), qg, *operands[1:])
+    return out.reshape(b, hq, d)

@@ -1,0 +1,50 @@
+"""jnp oracle for paged decode attention.
+
+Dequantizes the page pool (fast pages live in the float pool, slow pages
+as int8 + per-row scale), gathers each sequence's pages through its page
+table, and runs a plain masked softmax over the valid KV positions of the
+single decode token. This is the semantics the Pallas kernel must match.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def dequantize_pool(pages, quant, scale):
+    """Uniform dequant: fast pages carry (pages, 0, 0), slow pages carry
+    (0, q, s) — so ``pages + q * scale`` is exact on fast pages and the
+    int8 dequantization on slow ones."""
+    return (pages.astype(jnp.float32)
+            + quant.astype(jnp.float32) * scale.astype(jnp.float32)[..., None])
+
+
+def paged_attention(q, k_pages, v_pages, k_quant, v_quant, k_scale, v_scale,
+                    page_table, lengths, *, softmax_scale=None):
+    """q: (b, hq, d); {k,v}_pages: (P, T, hkv, d) float; {k,v}_quant:
+    (P, T, hkv, d) int8; {k,v}_scale: (P, T, hkv) float; page_table:
+    (b, slots) int32; lengths: (b,) int32. Returns (b, hq, d)."""
+    b, hq, d = q.shape
+    _, t, hkv, _ = k_pages.shape
+    slots = page_table.shape[1]
+    g = hq // hkv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(d)
+
+    k = dequantize_pool(k_pages, k_quant, k_scale)
+    v = dequantize_pool(v_pages, v_quant, v_scale)
+    # gather: (b, slots, T, hkv, d) -> (b, S, hkv, d), S = slots * T
+    ks = k[page_table].reshape(b, slots * t, hkv, d)
+    vs = v[page_table].reshape(b, slots * t, hkv, d)
+
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32) * scale
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, ks)
+    pos = jnp.arange(slots * t)
+    s = jnp.where(pos[None, None, None, :] < lengths[:, None, None, None],
+                  s, NEG_INF)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, vs)
+    return out.reshape(b, hq, d).astype(q.dtype)

@@ -1,0 +1,128 @@
+"""KernelSpec for paged decode attention (serving hot path).
+
+The tune space is (pages_per_block, head_block): more pages / kv heads per
+grid step cut dispatch overhead at the price of VMEM for the fetched page
+blocks — the same window-vs-resource trade NERO searches (thesis §3.3.1),
+here on the serving side. ``example_inputs`` builds a mixed-tier pool
+(odd page ids are "slow": int8 + per-row scale, zeros in the float pool)
+so every consumer — conformance tests, precision sweeps, bench_nero —
+exercises the dequant-on-load path by default.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.autotune import (GRID_STEP_OVERHEAD_S, HBM_BW, LANE,
+                                 PEAK_FLOPS)
+from repro.kernels import registry
+from repro.kernels.api import KernelCase, KernelSpec
+from repro.kernels.paged_attention import ref
+from repro.kernels.paged_attention.paged_attention import paged_attention_pallas
+from repro.kernels.paged_attention.quant import quantize_page
+
+DEFAULT_SHAPE = {"b": 2, "pages": 16, "page_tokens": 16, "slots": 4,
+                 "hq": 4, "hkv": 2, "d": 32}
+BENCH_SHAPE = {"b": 16, "pages": 512, "page_tokens": 64, "slots": 32,
+               "hq": 32, "hkv": 8, "d": 128}
+
+
+def paged_cost(grid_shape, tile: dict, dtype_bytes: int) -> tuple | None:
+    """tile = {"pages_per_block": ppb, "head_block": hb}. Decode is
+    traffic-bound: the whole paged KV streams once per kv head (fast float
+    + int8 + scale are all fetched; tier saving shows up as the int8 pool
+    being the only populated one for slow pages), while q/out are a single
+    token. Larger blocks amortize the per-step dispatch latency against
+    VMEM for the fetched pages."""
+    b, pages, t, slots, hq, hkv, d = grid_shape
+    ppb, hb = tile["pages_per_block"], tile["head_block"]
+    if slots % ppb or hkv % hb:
+        return None
+    g = hq // hkv
+    # bytes of one (page, head-block) row set: float pool + int8 + scale
+    row = t * hb * (d * (dtype_bytes + 1) + dtype_bytes)
+    # q + out blocks, k + v page blocks (double buffered), fp32 (m, l, acc)
+    vmem = (2 * hb * g * d * dtype_bytes + 2 * 2 * ppb * row
+            + hb * g * (d + 2) * 4)
+    traffic = (2 * b * hq * d * dtype_bytes                 # q + out
+               + 2 * b * hkv * slots * (row // hb))         # k + v pages
+    flops = 4 * b * hq * slots * t * d
+    steps = b * (hkv // hb) * (slots // ppb)
+    align = 1.0 if d % LANE == 0 else 1.0 + (LANE - d % LANE) / LANE
+    time = max(traffic * align / HBM_BW, flops / PEAK_FLOPS) \
+        + steps * GRID_STEP_OVERHEAD_S
+    return vmem, time
+
+
+def example_inputs(shape=None, dtype=np.float32, seed: int = 0) -> dict:
+    """Mixed-tier pool: odd page ids live in the slow (int8) tier, even in
+    the fast (float) tier; each sequence gets distinct pages and a random
+    valid length (>= 1), so partial-page masking is always exercised."""
+    s = {**DEFAULT_SHAPE, **(shape or {})}
+    b, pages, t, slots = s["b"], s["pages"], s["page_tokens"], s["slots"]
+    hq, hkv, d = s["hq"], s["hkv"], s["d"]
+    assert b * slots <= pages, "each sequence needs distinct pages"
+    rng = np.random.default_rng(seed)
+
+    def pool(raw):
+        slow = (np.arange(pages) % 2 == 1)[:, None, None, None]
+        quant, qscale = quantize_page(raw)     # the serve tier's format
+        fast = np.where(slow, 0.0, raw).astype(dtype)
+        qq = np.where(slow, quant, 0).astype(np.int8)
+        sc = np.where(slow, qscale, 0.0)[..., 0].astype(dtype)
+        return fast, qq, sc
+
+    kf, kq, ks = pool(rng.normal(size=(pages, t, hkv, d)))
+    vf, vq, vs = pool(rng.normal(size=(pages, t, hkv, d)))
+    table = rng.permutation(pages)[:b * slots].reshape(b, slots)
+    return {
+        "q": rng.normal(size=(b, hq, d)).astype(dtype),
+        "k_pages": kf, "v_pages": vf,
+        "k_quant": kq, "v_quant": vq,
+        "k_scale": ks, "v_scale": vs,
+        "page_table": table.astype(np.int32),
+        "lengths": rng.integers(1, slots * t + 1, b).astype(np.int32),
+    }
+
+
+def _grid_of(q, k_pages, v_pages, k_quant, v_quant, k_scale, v_scale,
+             page_table, lengths):
+    b, hq, d = q.shape
+    pages, t, hkv, _ = k_pages.shape
+    return b, pages, t, page_table.shape[1], hq, hkv, d
+
+
+SPEC = registry.register(KernelSpec(
+    name="paged_attention",
+    pallas_fn=paged_attention_pallas,
+    ref_fn=ref.paged_attention,
+    arg_names=("q", "k_pages", "v_pages", "k_quant", "v_quant",
+               "k_scale", "v_scale", "page_table", "lengths"),
+    shape_keys=("b", "pages", "page_tokens", "slots", "hq", "hkv", "d"),
+    tune_space={"pages_per_block": (1, 2, 4, 8),
+                "head_block": (1, 2, 4)},
+    cost_fn=paged_cost,
+    example_inputs=example_inputs,
+    # 2 matmuls x 2 flops over every (q head, kv position) pair
+    flops=lambda g: 4.0 * g[0] * g[4] * g[3] * g[2] * g[6],
+    grid_of=_grid_of,
+    default_shape=DEFAULT_SHAPE,
+    bench_shape=BENCH_SHAPE,
+    vjp_mode="jit",
+    dtypes=("float32", "bfloat16"),
+    tol={"float32": 5e-5, "bfloat16": 0.04},
+    cases=(
+        KernelCase({"b": 2, "pages": 16, "page_tokens": 16, "slots": 4,
+                    "hq": 4, "hkv": 2, "d": 32},
+                   {"pages_per_block": 2, "head_block": 1}),
+        KernelCase({"b": 1, "pages": 32, "page_tokens": 8, "slots": 8,
+                    "hq": 8, "hkv": 4, "d": 64},
+                   {"pages_per_block": 4, "head_block": 2}),
+        KernelCase({"b": 2, "pages": 12, "page_tokens": 16, "slots": 2,
+                    "hq": 4, "hkv": 4, "d": 16},
+                   {"pages_per_block": 1, "head_block": 4}),
+        KernelCase({"b": 2, "pages": 16, "page_tokens": 16, "slots": 4,
+                    "hq": 4, "hkv": 2, "d": 32},
+                   {"pages_per_block": 2, "head_block": 2},
+                   dtype="bfloat16"),
+    ),
+))

@@ -2,7 +2,7 @@
 exist and what the data-driven layers may assume about them.
 
 Kernel packages self-register at import of their ``spec`` module; the
-builtin five are loaded lazily on first lookup so importing
+builtins are loaded lazily on first lookup so importing
 ``repro.kernels`` stays cheap and cycle-free. Adding a kernel is one
 file: ``repro/kernels/<name>/spec.py`` calling ``register(KernelSpec(...))``
 (see repro/kernels/README.md) — autotuning, precision search, the
@@ -16,7 +16,8 @@ from repro.kernels import api
 from repro.kernels.api import KernelSpec
 
 _REGISTRY: dict[str, KernelSpec] = {}
-_BUILTIN = ("flash_attention", "hdiff", "rglru_scan", "ssd_scan", "vadvc")
+_BUILTIN = ("flash_attention", "hdiff", "paged_attention", "rglru_scan",
+            "ssd_scan", "vadvc")
 _loaded = False
 
 

@@ -135,6 +135,25 @@ def _qkv(cfg: ModelConfig, p, x, kv_src):
     return q, k, v
 
 
+def roped_qkv(cfg: ModelConfig, p, x, positions):
+    """Project + (optional) qk-norm + rope at (b, s) `positions` — the
+    shared front half of every self-attention mode."""
+    q, k_new, v_new = _qkv(cfg, p, x, x)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+        k_new = rms_norm(k_new, p["k_norm"])
+    return (apply_rope(q, positions, cfg.rope_theta),
+            apply_rope(k_new, positions, cfg.rope_theta), v_new)
+
+
+def decode_qkv(cfg: ModelConfig, p, x, pos):
+    """`roped_qkv` for the decode-step token(s) at scalar absolute
+    position `pos` — shared by the dense cache path and the serve
+    layer's paged decode path."""
+    b, s, _ = x.shape
+    return roped_qkv(cfg, p, x, jnp.full((b, s), pos, jnp.int32))
+
+
 def attn_apply(cfg: ModelConfig, p, x, *, mode: str, positions=None,
                cache=None, window: int = 0, cross_embeds=None):
     """Returns (y, new_cache).
@@ -161,15 +180,9 @@ def attn_apply(cfg: ModelConfig, p, x, *, mode: str, positions=None,
             new_cache = {"xk": k, "xv": v} if mode == "prefill" else None
         y = attention_core(q, k, v, causal=False)
     else:
-        q, k_new, v_new = _qkv(cfg, p, x, x)
-        if "q_norm" in p:
-            q = rms_norm(q, p["q_norm"])
-            k_new = rms_norm(k_new, p["k_norm"])
         if mode == "decode":
             pos = positions  # scalar: current absolute position
-            q = apply_rope(q, jnp.full((b, s), pos, jnp.int32), cfg.rope_theta)
-            k_new = apply_rope(k_new, jnp.full((b, s), pos, jnp.int32),
-                               cfg.rope_theta)
+            q, k_new, v_new = decode_qkv(cfg, p, x, pos)
             if window:
                 # ring buffer of size window; slot = pos % window. RoPE is
                 # absolute so slot order is irrelevant under masking.
@@ -191,8 +204,7 @@ def attn_apply(cfg: ModelConfig, p, x, *, mode: str, positions=None,
                 y = attention_core(q, k, v, causal=False, q_offset=pos,
                                    kv_valid_len=pos + 1)
         else:
-            q = apply_rope(q, positions, cfg.rope_theta)
-            k_new = apply_rope(k_new, positions, cfg.rope_theta)
+            q, k_new, v_new = roped_qkv(cfg, p, x, positions)
             y = attention_core(q, k_new, v_new, causal=True, window=window)
             new_cache = ({"k": k_new, "v": v_new} if mode == "prefill" else None)
 

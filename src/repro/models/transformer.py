@@ -51,11 +51,28 @@ def layer_spec(cfg: ModelConfig, mixer: str, mlp: str):
     return s
 
 
+def mlp_tail(cfg: ModelConfig, kind, p, x):
+    """Post-mixer half of a layer (norm2 + dense/MoE MLP residual) —
+    shared by `layer_apply` and the serve layer's paged decode path.
+    Returns (x, aux)."""
+    mixer, mlp = kind
+    aux = jnp.zeros((), jnp.float32)
+    if mlp != MLP_NONE:
+        h = rms_norm(x, p["norm2"])
+        if mlp == MLP_MOE:
+            y, aux = moe_mod.moe_apply(cfg, p["moe"], h)
+        else:
+            y = mlp_apply(cfg, p["mlp"], h)
+        if mixer == CROSS_ATTN and "gate_ffn" in p["attn"]:
+            y = jnp.tanh(p["attn"]["gate_ffn"]).astype(y.dtype) * y
+        x = constrain(x + y, ("batch", "seq", None))
+    return x, aux
+
+
 def layer_apply(cfg: ModelConfig, kind, p, x, *, mode, positions=None,
                 cache=None, cross_embeds=None):
     """Returns (x, new_cache, aux)."""
     mixer, mlp = kind
-    aux = jnp.zeros((), jnp.float32)
     h = rms_norm(x, p["norm1"])
     if mixer in (ATTN, LOCAL_ATTN, CROSS_ATTN):
         window = cfg.window if mixer == LOCAL_ATTN else 0
@@ -75,16 +92,7 @@ def layer_apply(cfg: ModelConfig, kind, p, x, *, mode, positions=None,
     else:
         raise ValueError(mixer)
     x = constrain(x + y, ("batch", "seq", None))
-
-    if mlp != MLP_NONE:
-        h = rms_norm(x, p["norm2"])
-        if mlp == MLP_MOE:
-            y, aux = moe_mod.moe_apply(cfg, p["moe"], h)
-        else:
-            y = mlp_apply(cfg, p["mlp"], h)
-        if mixer == CROSS_ATTN and "gate_ffn" in p["attn"]:
-            y = jnp.tanh(p["attn"]["gate_ffn"]).astype(y.dtype) * y
-        x = constrain(x + y, ("batch", "seq", None))
+    x, aux = mlp_tail(cfg, kind, p, x)
     return x, new_cache, aux
 
 

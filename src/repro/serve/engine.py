@@ -1,5 +1,7 @@
 """Batched serving engine: prefill + decode with capacity-padded caches,
-int8-paged KV tiering (Sibyl hook), greedy or temperature sampling."""
+or — when a `PagedKVPool` is attached — decode attention served from real
+KV pages through the registry's paged-attention kernel (tiered int8 slow
+pages included), greedy or temperature sampling."""
 from __future__ import annotations
 
 import dataclasses
@@ -13,6 +15,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import Model
 from repro.serve.kvcache import PagedKVPool, pad_caches
+from repro.serve.paged_decode import (PagedKVState, extract_prefill_pages,
+                                      paged_decode_step, supports_paged)
 
 
 @dataclasses.dataclass
@@ -33,6 +37,7 @@ class ServeEngine:
         self.params = params if params is not None else \
             self.model.init(jax.random.PRNGKey(seed))
         self.kv_pool = kv_pool
+        self._next_seq = 0           # pool seq ids are engine-lifetime unique
         self._decode = jax.jit(self.model.forward_decode,
                                donate_argnums=2)
         self._prefill = jax.jit(self.model.forward_prefill)
@@ -51,7 +56,25 @@ class ServeEngine:
         t0 = time.time()
         logits, caches = self._prefill(self.params,
                                        {"tokens": jnp.asarray(prompts)})
-        caches = pad_caches(self.model, caches, cap, plen)
+        paged = self.kv_pool is not None
+        state = None
+        if paged:
+            if not supports_paged(self.cfg):
+                raise NotImplementedError(
+                    f"{self.cfg.name}: paged serving needs a "
+                    f"global-attention stack")
+            # write the real prefill K/V into the pool (seq id = request
+            # index offset by the engine-lifetime counter, so repeated
+            # generate() calls never alias an earlier call's pages): full
+            # pages placed by the pool's tier policy, the partial
+            # remainder buffered until decode fills it
+            seq_ids = list(range(self._next_seq, self._next_seq + b))
+            self._next_seq += b
+            state = PagedKVState(self.kv_pool, cap, self.cfg.num_kv_heads,
+                                 self.cfg.head_dim)
+            extract_prefill_pages(self.model, caches, state, seq_ids)
+        else:
+            caches = pad_caches(self.model, caches, cap, plen)
         self.stats["prefill_s"] += time.time() - t0
 
         key = jax.random.PRNGKey(seed)
@@ -63,20 +86,20 @@ class ServeEngine:
         t0 = time.time()
         for step in range(max_new - 1):
             pos = plen + step
-            logits, caches = self._decode(
-                self.params, {"tokens": tok[:, None]}, caches,
-                jnp.int32(pos))
+            if paged:
+                logits = paged_decode_step(self.model, self.params,
+                                           np.asarray(tok), state,
+                                           seq_ids, pos)
+            else:
+                logits, caches = self._decode(
+                    self.params, {"tokens": tok[:, None]}, caches,
+                    jnp.int32(pos))
             key, sub = jax.random.split(key)
             tok = self._sample(logits, greedy, temperature, sub)
             for i in range(b):
                 outs[i].append(int(tok[i]))
-            if self.kv_pool is not None and (pos % self.kv_pool.page_tokens
-                                             == 0):
-                # page-out decision for the page that just filled
-                k = np.zeros((self.kv_pool.page_tokens, 1, 1), np.float32)
-                self.kv_pool.put(seq_id=step % 16, k=k, v=k)
         self.stats["decode_s"] += time.time() - t0
-        self.stats["tokens"] += b * max_new
+        self.stats["tokens"] += sum(r.max_new_tokens for r in requests)
         return [np.array(o[:r.max_new_tokens])
                 for o, r in zip(outs, requests)]
 

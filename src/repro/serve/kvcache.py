@@ -47,18 +47,11 @@ def pad_caches(model: Model, caches, capacity: int, prefix_len: int):
 
 
 # ---------------------------------------------------------------------------
-# int8 page quantization (data-centric: "reduce the memory footprint")
+# int8 page quantization (data-centric: "reduce the memory footprint") —
+# the format is shared with the paged-attention kernel's example inputs
 # ---------------------------------------------------------------------------
-def quantize_page(page: np.ndarray):
-    """Symmetric per-row int8 quantization. page: (tokens, heads, hd)."""
-    amax = np.abs(page).astype(np.float32).max(axis=-1, keepdims=True)
-    scale = np.where(amax > 0, amax / 127.0, 1.0)
-    q = np.clip(np.rint(page.astype(np.float32) / scale), -127, 127)
-    return q.astype(np.int8), scale.astype(np.float32)
-
-
-def dequantize_page(q: np.ndarray, scale: np.ndarray, dtype=np.float32):
-    return (q.astype(np.float32) * scale).astype(dtype)
+from repro.kernels.paged_attention.quant import (  # noqa: E402,F401
+    dequantize_page, quantize_page)
 
 
 # ---------------------------------------------------------------------------
@@ -70,6 +63,7 @@ class Page:
     seq_id: int
     tier: str          # "fast" | "slow"
     quantized: bool
+    layer: int = 0     # model layer the page belongs to
     access_count: int = 0
     last_access: int = 0
     data: Optional[tuple] = None   # (k, v) or ((kq, ks), (vq, vs))
@@ -86,6 +80,7 @@ class PagedKVPool:
         self.fast_capacity = fast_capacity_pages
         self.policy = placement_policy
         self.pages: dict[int, Page] = {}
+        self._by_seq: dict[tuple, list[int]] = {}   # (seq, layer) -> pids
         self.clock = 0
         self.next_id = 0
         self.stats = {"fast_hits": 0, "slow_hits": 0, "evictions": 0,
@@ -94,7 +89,8 @@ class PagedKVPool:
     def _fast_pages(self):
         return [p for p in self.pages.values() if p.tier == "fast"]
 
-    def put(self, seq_id: int, k: np.ndarray, v: np.ndarray) -> int:
+    def put(self, seq_id: int, k: np.ndarray, v: np.ndarray,
+            layer: int = 0) -> int:
         self.clock += 1
         pid = self.next_id
         self.next_id += 1
@@ -103,26 +99,39 @@ class PagedKVPool:
         if self.policy is not None:
             tier = self.policy.place(feats)
         page = Page(pid, seq_id, tier, quantized=(tier == "slow"),
-                    last_access=self.clock)
+                    layer=layer, last_access=self.clock)
         if tier == "slow":
             page.data = (quantize_page(k), quantize_page(v))
         else:
             page.data = (k, v)
         self.pages[pid] = page
+        self._by_seq.setdefault((seq_id, layer), []).append(pid)
         self._maybe_evict()
         return pid
 
-    def get(self, pid: int):
+    def touch(self, pid: int) -> Page:
+        """Record an access (hit stats, LRU recency) and return the page
+        without dequantizing — the paged-attention gather wants the raw
+        tier representation (the kernel dequantizes slow pages on load)."""
         self.clock += 1
         page = self.pages[pid]
         page.access_count += 1
         page.last_access = self.clock
+        key = "fast_hits" if page.tier == "fast" else "slow_hits"
+        self.stats[key] += 1
+        return page
+
+    def get(self, pid: int):
+        page = self.touch(pid)
         if page.tier == "fast":
-            self.stats["fast_hits"] += 1
             return page.data
-        self.stats["slow_hits"] += 1
         (kq, ks), (vq, vs) = page.data
         return dequantize_page(kq, ks), dequantize_page(vq, vs)
+
+    def seq_pages(self, seq_id: int, layer: int = 0) -> list[int]:
+        """Page ids of (seq_id, layer) in write order — O(1) lookup, not a
+        pool scan (gather calls this per layer per decode step)."""
+        return list(self._by_seq.get((seq_id, layer), ()))
 
     def _maybe_evict(self):
         fast = self._fast_pages()

@@ -1,0 +1,201 @@
+"""Paged decode: per-sequence page gather + registry paged-attention dispatch.
+
+This is where the thesis' two threads meet in the serving hot path: the
+KV cache lives in a tiered `PagedKVPool` (Sibyl's substrate — placement
+policy decides fast float vs. slow int8 per page), and the attention over
+it runs through ``api.run("paged_attention", ..., backend="auto")``, i.e.
+the NERO knee-point autotuner picks the page/head blocking from the
+kernel spec's cost model.
+
+Page lifecycle (see serve/README.md):
+  prefill  -> full pages ``put`` per (sequence, layer), remainder buffered
+  decode   -> each step appends the new token's K/V to the tail buffer;
+              a filled tail becomes a pool ``put`` (tier decided there)
+  attend   -> ``gather`` assembles the page list into pool-shaped arrays
+              (slow pages stay int8 — the kernel dequantizes on load) and
+              the paged kernel consumes them via the page table
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ATTN, MLP_DENSE, MLP_MOE, MLP_NONE
+from repro.kernels import api
+from repro.models.attention import decode_qkv
+from repro.models.layers import lm_head_apply, rms_norm
+from repro.models.transformer import mlp_tail
+from repro.serve.kvcache import PagedKVPool
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+class PagedKVState:
+    """Pool-backed KV state for a decode batch: the pool holds full pages,
+    a per-(sequence, layer) tail buffer holds the < page_tokens newest
+    rows until they fill a page. Gathered arrays are padded to stable
+    shapes (pool pages to a power of two, table width fixed per batch) so
+    the jitted paged kernel recompiles only when the pool actually grows."""
+
+    def __init__(self, pool: PagedKVPool, capacity: int, hkv: int, hd: int):
+        self.pool = pool
+        self.hkv, self.hd = hkv, hd
+        t = pool.page_tokens
+        slots = -(-capacity // t)          # ceil: pages covering capacity
+        self.slots = -(-(slots + 1) // 8) * 8   # +1 tail page, mult. of 8
+        self.tails: dict[tuple, list] = {}
+
+    # -- writes -------------------------------------------------------------
+    def write_prefill(self, layer: int, seq: int, k: np.ndarray,
+                      v: np.ndarray):
+        """k, v: (prefill_len, hkv, hd) — full pages into the pool, the
+        remainder into the tail buffer."""
+        t = self.pool.page_tokens
+        n_full = k.shape[0] // t
+        for p in range(n_full):
+            self.pool.put(seq, k[p * t:(p + 1) * t], v[p * t:(p + 1) * t],
+                          layer=layer)
+        tail = self.tails.setdefault((seq, layer), [])
+        for r in range(n_full * t, k.shape[0]):
+            tail.append((k[r], v[r]))
+
+    def append_token(self, layer: int, seq: int, k_row: np.ndarray,
+                     v_row: np.ndarray):
+        """k_row, v_row: (hkv, hd) for the token being decoded; a filled
+        tail becomes a pool page (tier placement decided by the pool)."""
+        tail = self.tails.setdefault((seq, layer), [])
+        tail.append((k_row, v_row))
+        if len(tail) == self.pool.page_tokens:
+            k = np.stack([r[0] for r in tail])
+            v = np.stack([r[1] for r in tail])
+            self.pool.put(seq, k, v, layer=layer)
+            tail.clear()
+
+    # -- gather -------------------------------------------------------------
+    def gather(self, layer: int, seq_ids) -> tuple:
+        """Build (k_pages, v_pages, k_quant, v_quant, k_scale, v_scale,
+        page_table, lengths) for the batch at this layer, in the kernel's
+        argument order. Slow pages keep their int8 + scale representation;
+        the tail rides along as one zero-padded fast page per sequence."""
+        pool, t = self.pool, self.pool.page_tokens
+        b = len(seq_ids)
+        entries: list = []
+        table = np.zeros((b, self.slots), np.int32)
+        lengths = np.zeros(b, np.int32)
+        for i, seq in enumerate(seq_ids):
+            pids = pool.seq_pages(seq, layer)
+            for n, pid in enumerate(pids):
+                table[i, n] = len(entries)
+                entries.append(pool.touch(pid))
+            tail = self.tails.get((seq, layer), [])
+            if tail:
+                table[i, len(pids)] = len(entries)
+                entries.append(tuple(tail))
+            lengths[i] = len(pids) * t + len(tail)
+            assert len(pids) + bool(tail) <= self.slots
+
+        hkv, hd = self.hkv, self.hd
+        n = max(8, _next_pow2(len(entries)))
+        kf = np.zeros((n, t, hkv, hd), np.float32)
+        vf = np.zeros_like(kf)
+        kq = np.zeros((n, t, hkv, hd), np.int8)
+        vq = np.zeros_like(kq)
+        ks = np.zeros((n, t, hkv), np.float32)
+        vs = np.zeros_like(ks)
+        for e, entry in enumerate(entries):
+            if isinstance(entry, tuple):               # tail: partial page
+                kf[e, :len(entry)] = np.stack([r[0] for r in entry])
+                vf[e, :len(entry)] = np.stack([r[1] for r in entry])
+            elif entry.tier == "fast":
+                kf[e], vf[e] = entry.data
+            else:                                      # slow: stays int8
+                (pkq, pks), (pvq, pvs) = entry.data
+                kq[e], ks[e] = pkq, pks[..., 0]
+                vq[e], vs[e] = pvq, pvs[..., 0]
+        return kf, vf, kq, vq, ks, vs, table, lengths
+
+
+def paged_attention_over_pool(q, state: PagedKVState, layer: int, seq_ids,
+                              backend: str = "auto"):
+    """q: (b, hq, hd) for the single decode token -> (b, hq, hd), attending
+    over every pooled page + tail row of each sequence at this layer."""
+    view = state.gather(layer, seq_ids)
+    return api.run("paged_attention", q, *[jnp.asarray(a) for a in view],
+                   backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# Full decode step over the layer stack, attention via the paged kernel
+# ---------------------------------------------------------------------------
+def supports_paged(cfg) -> bool:
+    """The paged path covers global-attention stacks (ATTN mixer, any MLP);
+    sliding-window / MLA / SSM layers keep their dense decode caches."""
+    return all(mixer == ATTN and mlp in (MLP_DENSE, MLP_MOE, MLP_NONE)
+               for mixer, mlp in cfg.layer_kinds())
+
+
+def _iter_layers(model, params):
+    """Yield (global layer index, kind, per-layer params), unstacking the
+    scan groups the same order the dense stack applies them."""
+    gs = len(model.group_kinds)
+    for g in range(model.n_groups):
+        for i, kind in enumerate(model.group_kinds):
+            yield (g * gs + i, kind,
+                   jax.tree.map(lambda a: a[g], params["groups"][f"l{i}"]))
+    for i, kind in enumerate(model.tail_kinds):
+        yield model.n_groups * gs + i, kind, params["tail"][f"t{i}"]
+
+
+def extract_prefill_pages(model, caches, state: PagedKVState, seq_ids):
+    """Write the (unpadded) prefill caches into the pool as real pages —
+    one write_prefill per (layer, sequence)."""
+    gs = len(model.group_kinds)
+    for g in range(model.n_groups):
+        for i, _ in enumerate(model.group_kinds):
+            c = caches["groups"][f"l{i}"]
+            k = np.asarray(c["k"][g])          # (b, plen, hkv, hd)
+            v = np.asarray(c["v"][g])
+            for bi, seq in enumerate(seq_ids):
+                state.write_prefill(g * gs + i, seq, k[bi], v[bi])
+    for i, _ in enumerate(model.tail_kinds):
+        c = caches["tail"][f"t{i}"]
+        for bi, seq in enumerate(seq_ids):
+            state.write_prefill(model.n_groups * gs + i, seq,
+                                np.asarray(c["k"][bi]), np.asarray(c["v"][bi]))
+
+
+def paged_decode_step(model, params, tokens, state: PagedKVState, seq_ids,
+                      pos: int, backend: str = "auto"):
+    """One decode step with every attention layer served from the page
+    pool. tokens: (b,) int32; returns logits (b, V). Appends the step's
+    K/V rows to the tails (filling pages as they complete), so the pool is
+    the only KV storage this path touches."""
+    cfg = model.cfg
+    if not supports_paged(cfg):
+        raise NotImplementedError(
+            f"paged decode needs a global-attention stack, got "
+            f"{cfg.layer_kinds()}")
+    x = model._embed_in(params, {"tokens": jnp.asarray(tokens)[:, None]})
+
+    for layer, kind, p in _iter_layers(model, params):
+        h = rms_norm(x, p["norm1"])
+        ap = p["attn"]
+        q, k_new, v_new = decode_qkv(cfg, ap, h, pos)
+        kn = np.asarray(k_new[:, 0], np.float32)       # (b, hkv, hd)
+        vn = np.asarray(v_new[:, 0], np.float32)
+        for bi, seq in enumerate(seq_ids):
+            state.append_token(layer, seq, kn[bi], vn[bi])
+        y = paged_attention_over_pool(q[:, 0], state, layer, seq_ids,
+                                      backend=backend)
+        y = jnp.einsum("bhk,hkd->bd", y.astype(x.dtype), ap["wo"])[:, None]
+        x = x + y
+        x, _ = mlp_tail(cfg, kind, p, x)
+
+    x = rms_norm(x, params["final_norm"])
+    return lm_head_apply(cfg, params["embed"], x)[:, 0]

@@ -14,7 +14,10 @@ IDS = [s.name for s in SPECS]
 
 
 def _args(spec, dtype=jnp.float32):
-    return [jnp.asarray(v, dtype) for v in spec.example_inputs().values()]
+    def cast(v):
+        v = jnp.asarray(v)
+        return v if jnp.issubdtype(v.dtype, jnp.integer) else v.astype(dtype)
+    return [cast(v) for v in spec.example_inputs().values()]
 
 
 @pytest.mark.parametrize("spec", SPECS, ids=IDS)
@@ -68,8 +71,8 @@ def test_spec_is_complete(spec):
 
 
 def test_registry_contents_and_errors():
-    assert registry.names() == ["flash_attention", "hdiff", "rglru_scan",
-                                "ssd_scan", "vadvc"]
+    assert registry.names() == ["flash_attention", "hdiff", "paged_attention",
+                                "rglru_scan", "ssd_scan", "vadvc"]
     with pytest.raises(KeyError, match="no kernel"):
         registry.get("nope")
     x = jnp.zeros((4, 16, 24), jnp.float32)
@@ -77,6 +80,11 @@ def test_registry_contents_and_errors():
         api.run("hdiff", x, backend="xla")
     with pytest.raises(ValueError, match="unknown tile"):
         api.run("hdiff", x, tile={"bogus": 1})
+    # tile=/interpret= are meaningless for the jnp oracle: fail loudly
+    with pytest.raises(ValueError, match="backend='ref'"):
+        api.run("hdiff", x, backend="ref", tile={"block_z": 2})
+    with pytest.raises(ValueError, match="backend='ref'"):
+        api.run("hdiff", x, backend="ref", interpret=True)
     # a grid no tune-space tile divides fails loudly, not with a bare min()
     with pytest.raises(ValueError, match="divides grid"):
         autotune_kernel(registry.get("rglru_scan"), (1, 48, 16))

@@ -16,6 +16,13 @@ CASES = [(spec, case) for spec in registry.all_kernels()
          for case in spec.cases]
 
 
+def _cast(v, dtype):
+    """Cast float inputs to the target dtype; integer inputs (page tables,
+    int8 pools) are structural and keep their native dtype."""
+    v = jnp.asarray(v)
+    return v if jnp.issubdtype(v.dtype, jnp.integer) else v.astype(dtype)
+
+
 @pytest.mark.parametrize(
     "spec,case", CASES,
     ids=[f"{spec.name}-{i}-{case.dtype}"
@@ -23,9 +30,9 @@ CASES = [(spec, case) for spec in registry.all_kernels()
          for i, case in enumerate(spec.cases)])
 def test_pallas_matches_ref(spec, case):
     inputs = spec.example_inputs(shape=dict(case.shape))
-    args = [jnp.asarray(v, jnp.float32) for v in inputs.values()]
+    args = [_cast(v, jnp.float32) for v in inputs.values()]
     want = api.run(spec.name, *args, backend="ref", **dict(case.kwargs))
-    argsk = [a.astype(DTYPES[case.dtype]) for a in args]
+    argsk = [_cast(a, DTYPES[case.dtype]) for a in args]
     got = api.run(spec.name, *argsk, backend="pallas", tile=dict(case.tile),
                   interpret=True, **dict(case.kwargs))
     tol = spec.tol[case.dtype]

@@ -1,0 +1,80 @@
+"""PagedKVPool behaviour: LRU demotion under fast-capacity pressure, int8
+quantize/dequantize round-trip error bounds, and hit/eviction stats
+accounting (the features Sibyl's placement policy observes)."""
+import numpy as np
+
+from repro.serve.kvcache import PagedKVPool, dequantize_page, quantize_page
+
+
+def _page(rng, t=4, h=2, d=8):
+    return rng.standard_normal((t, h, d)).astype(np.float32)
+
+
+def test_lru_demotes_least_recently_used(rng):
+    pool = PagedKVPool(page_tokens=4, fast_capacity_pages=2)
+    p0 = pool.put(0, _page(rng), _page(rng))
+    p1 = pool.put(0, _page(rng), _page(rng))
+    pool.touch(p0)                                 # p1 is now the LRU page
+    p2 = pool.put(0, _page(rng), _page(rng))       # overflow -> demote p1
+    assert pool.pages[p1].tier == "slow" and pool.pages[p1].quantized
+    assert pool.pages[p0].tier == "fast"
+    assert pool.pages[p2].tier == "fast"
+    assert pool.stats["evictions"] == 1
+
+
+def test_demotion_cascade_respects_capacity(rng):
+    pool = PagedKVPool(page_tokens=4, fast_capacity_pages=3)
+    for i in range(8):
+        pool.put(i % 2, _page(rng), _page(rng))
+    fast = [p for p in pool.pages.values() if p.tier == "fast"]
+    assert len(fast) == 3
+    assert pool.stats["evictions"] == 5
+    # the surviving fast pages are the most recently written
+    assert sorted(p.page_id for p in fast) == [5, 6, 7]
+
+
+def test_quantize_roundtrip_error_bound(rng):
+    page = rng.standard_normal((16, 4, 8)).astype(np.float32)
+    q, s = quantize_page(page)
+    assert q.dtype == np.int8 and np.abs(q).max() <= 127
+    # symmetric per-row int8: |deq - x| <= scale / 2 = rowmax / 254
+    deq = dequantize_page(q, s)
+    assert np.all(np.abs(deq - page) <= s / 2 + 1e-7)
+
+
+def test_demoted_page_dequantizes_within_bound(rng):
+    pool = PagedKVPool(page_tokens=8, fast_capacity_pages=1)
+    page_k, page_v = _page(rng, t=8), _page(rng, t=8)
+    pid = pool.put(3, page_k, page_v)
+    pool.put(3, _page(rng, t=8), _page(rng, t=8))  # demotes pid
+    k, v = pool.get(pid)
+    for got, want in ((k, page_k), (v, page_v)):
+        bound = np.abs(want).max(axis=-1, keepdims=True) / 254 + 1e-7
+        assert np.all(np.abs(got - want) <= bound)
+
+
+def test_hit_and_eviction_stats_accounting(rng):
+    pool = PagedKVPool(page_tokens=4, fast_capacity_pages=2)
+    ids = [pool.put(i % 2, _page(rng), _page(rng)) for i in range(4)]
+    assert pool.stats["evictions"] == 2            # 2 overflows of cap 2
+    for pid in ids:
+        pool.get(pid)
+    assert pool.stats["fast_hits"] == 2            # the 2 surviving fast
+    assert pool.stats["slow_hits"] == 2            # the 2 demoted
+    assert all(pool.pages[pid].access_count == 1 for pid in ids)
+    # touch() records a hit without dequantizing
+    pool.touch(ids[0])
+    assert pool.stats["slow_hits"] == 3
+    assert pool.pages[ids[0]].access_count == 2
+
+
+def test_seq_pages_ordered_per_sequence_and_layer(rng):
+    pool = PagedKVPool(page_tokens=4)
+    a = pool.put(0, _page(rng), _page(rng), layer=0)
+    b = pool.put(1, _page(rng), _page(rng), layer=0)
+    c = pool.put(0, _page(rng), _page(rng), layer=1)
+    d = pool.put(0, _page(rng), _page(rng), layer=0)
+    assert pool.seq_pages(0, 0) == [a, d]
+    assert pool.seq_pages(0, 1) == [c]
+    assert pool.seq_pages(1, 0) == [b]
+    assert pool.seq_pages(2, 0) == []
