@@ -7,6 +7,8 @@
   bench_leaper     Ch.6  Fig 6-4/T6.6   few-shot cross-platform transfer
   bench_sibyl      Ch.7  Figs 7-10..19  RL data placement vs baselines
   bench_roofline   —     §Dry-run/§Roofline cell table
+  bench_serve      —     serve layer: device vs numpy page gather,
+                         continuous-batching throughput
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only nero,sibyl]
 """
@@ -17,7 +19,8 @@ import sys
 import time
 import traceback
 
-SUITES = ("roofline", "nero", "precision", "napel", "leaper", "sibyl")
+SUITES = ("roofline", "nero", "precision", "napel", "leaper", "sibyl",
+          "serve")
 
 
 def main() -> None:

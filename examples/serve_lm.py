@@ -1,46 +1,63 @@
-"""Batched serving with paged KV tiering driven by the Sibyl agent
-(the data-driven placement policy applied to a production subsystem).
+"""Continuous-batching serving with paged KV tiering driven by the Sibyl
+agent — the data-driven placement policy applied to a production
+subsystem, learning from *real* serving feedback (observed page-gather
+latency + slow-tier hit penalty), with the decode-time pool workload
+recorded as a trace and replayed through the Ch. 7 HSS simulator.
 
     PYTHONPATH=src python examples/serve_lm.py
 """
 import numpy as np
 
 from repro.configs import smoke_config
-from repro.core.sibyl.agent import SibylAgent, SibylConfig
+from repro.core.sibyl.agent import SibylAgent, run_policy
+from repro.core.sibyl.env import HssEnv, hss_config
+from repro.core.sibyl.traces import DecodeTraceRecorder
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.kvcache import PagedKVPool
-
-
-class SibylPlacement:
-    """Adapts the Sibyl DQN to the KV-pool placement interface."""
-
-    def __init__(self, seed=0):
-        self.agent = SibylAgent(SibylConfig(seed=seed, eps=0.2))
-
-    def place(self, feats: np.ndarray) -> str:
-        obs = np.zeros(10, np.float32)
-        obs[:len(feats)] = feats
-        a = self.agent.act(obs, 2)
-        # reward: keeping HBM headroom is good; proxy = -fill pressure
-        self.agent.feedback(-float(feats[0]), next_obs=obs)
-        return "fast" if a == 0 else "slow"
+from repro.serve.placement import SibylPlacement
 
 
 def main():
     cfg = smoke_config("llama3-405b")   # reduced-config llama-family stack
+    recorder = DecodeTraceRecorder()
     pool = PagedKVPool(page_tokens=8, fast_capacity_pages=16,
-                       placement_policy=SibylPlacement())
+                       placement_policy=SibylPlacement(seed=0))
+    pool.recorder = recorder
     eng = ServeEngine(cfg, kv_pool=pool)
+
     rng = np.random.default_rng(0)
-    reqs = [Request(rng.integers(0, cfg.vocab_size, 24).astype(np.int32),
-                    max_new_tokens=24) for _ in range(4)]
-    outs = eng.generate(reqs)
-    print(f"generated {sum(map(len, outs))} tokens; "
+    shared = rng.integers(0, cfg.vocab_size, 24).astype(np.int32)
+    reqs = [
+        # two identical prompts: their prefill pages are stored once and
+        # ref-counted (prefix cache), freed when the last holder retires
+        Request(shared.copy(), max_new_tokens=16),
+        Request(shared.copy(), max_new_tokens=12),
+        Request(rng.integers(0, cfg.vocab_size, 24).astype(np.int32),
+                max_new_tokens=20),
+        Request(rng.integers(0, cfg.vocab_size, 16).astype(np.int32),
+                max_new_tokens=8),
+    ]
+    # max_active=2 staggers admission: requests join mid-decode as earlier
+    # ones retire at their own lengths and free their pages
+    outs = eng.serve(reqs, max_active=2)
+    print(f"generated {sum(map(len, outs))} tokens over {len(reqs)} "
+          f"requests (peak_active={eng.last_peak_active}); "
           f"prefill {eng.stats['prefill_s']:.2f}s decode "
           f"{eng.stats['decode_s']:.2f}s")
-    print("kv pool:", {k: v for k, v in pool.stats.items()},
-          f"fast_pages={sum(p.tier == 'fast' for p in pool.pages.values())}",
-          f"slow_pages={sum(p.tier == 'slow' for p in pool.pages.values())}")
+    print("kv pool:", pool.stats, f"live_pages={len(pool.pages)}")
+    agent = pool.policy.agent
+    print(f"sibyl: {agent.t} transitions, last_reward="
+          f"{pool.policy.last_reward:.3f}, eps={agent.epsilon:.3f}")
+    assert len(pool.pages) == 0, "retired requests must free their pages"
+    assert pool.stats["shared_puts"] > 0, "identical prompts must share pages"
+
+    # replay the recorded decode-time pool workload through the HSS
+    # simulator (Ch. 7) — same trace schema as the synthetic MSRC set
+    res = run_policy(HssEnv(hss_config("H&M", fast_cap=16)),
+                     recorder.events, SibylAgent())
+    print(f"decode-trace replay ({len(recorder.events)} events): "
+          f"avg {res['avg_latency_us']:.1f}us "
+          f"p99 {res['p99_latency_us']:.1f}us")
 
 
 if __name__ == "__main__":

@@ -112,10 +112,19 @@ class SibylAgent:
         if self._pending is None:
             return
         obs, act = self._pending
-        nobs = next_obs if next_obs is not None else obs
-        self.buffer.append((obs, act, float(np.clip(reward, -50.0, 0.0)),
-                            nobs.copy()))
         self._pending = None
+        self.experience(obs, act, reward,
+                        next_obs if next_obs is not None else obs)
+
+    def experience(self, obs: np.ndarray, act: int, reward: float,
+                   next_obs: np.ndarray):
+        """Append one transition and run the training cadence. This is the
+        deferred-reward entry point: the serve layer's placement policy
+        calls act() several times per decode step and only learns the
+        shared reward (gather latency, slow-hit penalty) afterwards."""
+        self.buffer.append((np.asarray(obs).copy(), int(act),
+                            float(np.clip(reward, -50.0, 0.0)),
+                            np.asarray(next_obs).copy()))
         self.t += 1
         cfg = self.cfg
         if self.t % cfg.train_every == 0 and len(self.buffer) >= cfg.batch_size:

@@ -7,6 +7,7 @@ randomness/hotness axes of thesis Fig. 7-3. Deterministic per seed.
 from __future__ import annotations
 
 import dataclasses
+import time
 import zlib
 
 import numpy as np
@@ -94,6 +95,31 @@ def generate(spec: TraceSpec, n: int, seed: int = 0) -> list[tuple]:
                 dt = float(rng.exponential(spec.inter_arrival_us))
         out.append((lba_req, size, is_write, dt))
     return out
+
+
+class DecodeTraceRecorder:
+    """Capture *real* serve-layer pool events as trace tuples.
+
+    Attach to a `PagedKVPool` (``pool.recorder = DecodeTraceRecorder()``):
+    every page ``put`` records a write, every gather ``touch`` a read, as
+    ``(lba=page_id, size_kb, is_write, inter_arrival_us)`` — the exact
+    schema `generate` emits — so decode-time placement workloads replay
+    through `HssEnv` + `run_policy` next to the synthetic MSRC set
+    (Sibyl trained where the data actually lives, thesis §7.7).
+    """
+
+    def __init__(self, max_events: int = 1_000_000):
+        self.events: list[tuple] = []
+        self.max_events = max_events
+        self._last: float | None = None
+
+    def record(self, lba: int, size_kb: float, is_write: bool):
+        if len(self.events) >= self.max_events:
+            return
+        now = time.monotonic()
+        dt = 0.0 if self._last is None else (now - self._last) * 1e6
+        self._last = now
+        self.events.append((int(lba), float(size_kb), bool(is_write), dt))
 
 
 def mixed(specs: list[TraceSpec], n: int, seed: int = 0) -> list[tuple]:

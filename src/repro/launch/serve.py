@@ -3,6 +3,11 @@ CPU; production shapes via the dry-run).
 
     PYTHONPATH=src python -m repro.launch.serve --arch recurrentgemma-2b \
         --batch 4 --prompt-len 32 --new-tokens 16 --smoke
+
+    # continuous batching over a paged pool (global-attention archs),
+    # Sibyl placement learning from real gather latency:
+    PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-7b \
+        --smoke --paged --continuous --max-active 2 --sibyl
 """
 from __future__ import annotations
 
@@ -13,6 +18,7 @@ import numpy as np
 
 from repro.configs import get_config, list_archs, smoke_config
 from repro.serve.engine import Request, ServeEngine
+from repro.serve.kvcache import PagedKVPool
 
 
 def main():
@@ -22,23 +28,49 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve decode attention from a PagedKVPool")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching (implies --paged)")
+    ap.add_argument("--max-active", type=int, default=4,
+                    help="decode rows for --continuous")
+    ap.add_argument("--page-tokens", type=int, default=16)
+    ap.add_argument("--fast-pages", type=int, default=1024,
+                    help="fast-tier capacity before LRU int8 demotion")
+    ap.add_argument("--sibyl", action="store_true",
+                    help="Sibyl DQN tier placement (reward: gather latency"
+                         " + slow-hit penalty)")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if cfg.external_embed:
         raise SystemExit(f"{args.arch} takes frame embeddings, not tokens; "
                          "see examples/serve_lm.py for the embedding path")
-    eng = ServeEngine(cfg)
+    pool = None
+    if args.paged or args.continuous:
+        policy = None
+        if args.sibyl:
+            from repro.serve.placement import SibylPlacement
+            policy = SibylPlacement()
+        pool = PagedKVPool(page_tokens=args.page_tokens,
+                           fast_capacity_pages=args.fast_pages,
+                           placement_policy=policy)
+    eng = ServeEngine(cfg, kv_pool=pool)
     rng = np.random.default_rng(0)
     reqs = [Request(rng.integers(0, cfg.vocab_size, size=args.prompt_len)
                     .astype(np.int32), args.new_tokens)
             for _ in range(args.batch)]
     t0 = time.time()
-    outs = eng.generate(reqs)
+    if args.continuous:
+        outs = eng.serve(reqs, max_active=args.max_active)
+    else:
+        outs = eng.generate(reqs)
     dt = time.time() - t0
     tok = sum(len(o) for o in outs)
     print(f"generated {tok} tokens in {dt:.2f}s "
           f"({tok / dt:.1f} tok/s); first row: {outs[0][:8]}")
+    if pool is not None:
+        print(f"kv pool: {pool.stats} live_pages={len(pool.pages)}")
 
 
 if __name__ == "__main__":

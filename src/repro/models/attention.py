@@ -147,11 +147,18 @@ def roped_qkv(cfg: ModelConfig, p, x, positions):
 
 
 def decode_qkv(cfg: ModelConfig, p, x, pos):
-    """`roped_qkv` for the decode-step token(s) at scalar absolute
-    position `pos` — shared by the dense cache path and the serve
-    layer's paged decode path."""
+    """`roped_qkv` for the decode-step token(s) at absolute position
+    `pos` — a scalar shared by the batch (lockstep decode) or a (b,)
+    array of per-sequence positions (continuous batching, where admitted
+    requests sit at different depths) — shared by the dense cache path
+    and the serve layer's paged decode path."""
     b, s, _ = x.shape
-    return roped_qkv(cfg, p, x, jnp.full((b, s), pos, jnp.int32))
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        positions = jnp.full((b, s), pos, jnp.int32)
+    else:
+        positions = jnp.broadcast_to(pos[:, None], (b, s))
+    return roped_qkv(cfg, p, x, positions)
 
 
 def attn_apply(cfg: ModelConfig, p, x, *, mode: str, positions=None,

@@ -1,0 +1,211 @@
+"""Device-resident page-pool arrays for the paged-attention gather.
+
+The host `PagedKVPool` owns page *lifecycle* (placement, ref counts, LRU
+demotion, byte stats); this mirror keeps page *contents* resident in
+preallocated jax arrays so the decode-step gather is an index update +
+jitted kernel dispatch instead of re-stacking the whole pool in host
+numpy every step (the thesis' data-movement argument applied to our own
+serving hot path: keep the computation next to the resident data).
+
+Both tier representations share one slot-id space, exactly the layout the
+paged-attention kernel consumes: a fast slot holds float K/V and zeros in
+the int8 + scale arrays, a slow slot the reverse, so ``k = k_pages +
+k_quant * k_scale`` is exact either way. A slot is written in full on
+(re)assignment — a recycled slot can never leak a previous occupant's
+other-tier content into the sum.
+
+Sync is incremental and versioned: a page is rewritten only when it is
+new to the mirror or its `Page.version` changed (LRU demotion bumps it).
+Write batches are padded to the next power of two (duplicate trailing
+slot indices — last write wins on identical data) so jit caches a bounded
+set of scatter shapes as the pool grows.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# The pool arrays are donated on every update: XLA reuses the input
+# buffers, so a write is an in-place index update (O(rows written)), not a
+# full-pool copy (O(capacity)). Callers must always adopt the returned
+# arrays — `DevicePagePool` reassigns `self.arrays` from every call and
+# never touches the donated objects again.
+@functools.lru_cache(maxsize=None)
+def _jit_write_fast():
+    def f(kf, vf, kq, vq, ks, vs, slots, k, v):
+        return (kf.at[slots].set(k), vf.at[slots].set(v),
+                kq.at[slots].set(0), vq.at[slots].set(0),
+                ks.at[slots].set(0.0), vs.at[slots].set(0.0))
+    return jax.jit(f, donate_argnums=(0, 1, 2, 3, 4, 5))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_write_slow():
+    def f(kf, vf, kq, vq, ks, vs, slots, kq_new, ks_new, vq_new, vs_new):
+        return (kf.at[slots].set(0.0), vf.at[slots].set(0.0),
+                kq.at[slots].set(kq_new), vq.at[slots].set(vq_new),
+                ks.at[slots].set(ks_new), vs.at[slots].set(vs_new))
+    return jax.jit(f, donate_argnums=(0, 1, 2, 3, 4, 5))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_write_rows():
+    # single-axis scatter on a flattened (slot, row) index: XLA performs it
+    # in-place on the donated buffer, where the two-axis `.at[slots, rows]`
+    # form lowers to a copying gather-scatter
+    def f(kf, vf, slots, rows, k_rows, v_rows):
+        c, t = kf.shape[0], kf.shape[1]
+        idx = slots * t + rows
+        flat = (c * t,) + kf.shape[2:]
+
+        def upd(a, x):
+            return a.reshape(flat).at[idx].set(x).reshape(a.shape)
+
+        return upd(kf, k_rows), upd(vf, v_rows)
+    return jax.jit(f, donate_argnums=(0, 1))
+
+
+def _pad_pow2(idx: np.ndarray, *stacks):
+    """Pad a write batch to the next power of two by repeating the last
+    entry — duplicate scatter indices with identical payloads are benign
+    and keep the jitted scatter shapes bounded as the pool grows."""
+    n = len(idx)
+    m = 1
+    while m < n:
+        m *= 2
+    if m == n:
+        return (idx, *stacks)
+    reps = m - n
+    idx = np.concatenate([idx, np.repeat(idx[-1:], reps)])
+    return (idx, *(np.concatenate([s, np.repeat(s[-1:], reps, axis=0)])
+                   for s in stacks))
+
+
+class DevicePagePool:
+    """Slot-addressed device arrays mirroring a `PagedKVPool`.
+
+    ``arrays`` is the kernel's pool-argument tuple ``(k_pages, v_pages,
+    k_quant, v_quant, k_scale, v_scale)``; `sync` keeps it current for a
+    set of page ids, `write_rows` streams decode-token rows into tail
+    slots, and released slots are recycled through a free list.
+    """
+
+    def __init__(self, page_tokens: int, hkv: int, hd: int,
+                 init_slots: int = 8, dtype=jnp.float32):
+        self.t, self.hkv, self.hd = page_tokens, hkv, hd
+        self.dtype = dtype
+        self.capacity = 1
+        while self.capacity < max(8, init_slots):
+            self.capacity *= 2
+        c, t = self.capacity, page_tokens
+        self.arrays = (
+            jnp.zeros((c, t, hkv, hd), dtype),      # k_pages (fast float)
+            jnp.zeros((c, t, hkv, hd), dtype),      # v_pages
+            jnp.zeros((c, t, hkv, hd), jnp.int8),   # k_quant (slow int8)
+            jnp.zeros((c, t, hkv, hd), jnp.int8),   # v_quant
+            jnp.zeros((c, t, hkv), dtype),          # k_scale
+            jnp.zeros((c, t, hkv), dtype),          # v_scale
+        )
+        self._free = list(range(c - 1, -1, -1))     # pop() -> lowest first
+        self.slot_of: dict[int, int] = {}           # pool pid -> slot
+        self._synced: dict[int, int] = {}           # pid -> synced version
+        self._dirty: set[int] = set()               # slots ever written
+        self.writes = 0     # device scatter calls (bench/test instrumentation)
+
+    # -- slots ---------------------------------------------------------------
+    def _grow(self):
+        old = self.capacity
+        self.capacity *= 2
+        pad = [(0, old)] + [(0, 0)] * 3
+        self.arrays = tuple(jnp.pad(a, pad[:a.ndim]) for a in self.arrays)
+        self._free.extend(range(self.capacity - 1, old - 1, -1))
+
+    def alloc(self) -> int:
+        if not self._free:
+            self._grow()
+        return self._free.pop()
+
+    def release_slot(self, slot: int):
+        self._free.append(slot)
+
+    def release_pid(self, pid: int):
+        slot = self.slot_of.pop(pid, None)
+        self._synced.pop(pid, None)
+        if slot is not None:
+            self._free.append(slot)
+
+    def adopt(self, pid: int, slot: int, version: int, synced: bool):
+        """Hand an already-written slot (a filled tail page) to `pid`.
+        `synced=False` leaves it dirty so the next sync rewrites in place
+        (e.g. the pool placed the filled page in the slow tier)."""
+        self.slot_of[pid] = slot
+        if synced:
+            self._synced[pid] = version
+
+    # -- content writes ------------------------------------------------------
+    def zero_slot(self, slot: int):
+        """Full-slot clear before streaming tail rows into a recycled slot
+        (stale other-tier content would otherwise alias into the sum).
+        Slots never written since allocation are already zero — skipped."""
+        if slot not in self._dirty:
+            return
+        slots = np.array([slot], np.int32)
+        z = np.zeros((1, self.t, self.hkv, self.hd), np.float32)
+        self.arrays = _jit_write_fast()(*self.arrays, slots, z, z)
+        self._dirty.discard(slot)
+        self.writes += 1
+
+    def write_rows(self, slots: np.ndarray, rows: np.ndarray, k_rows, v_rows):
+        """Batched decode-token append: one scatter per layer per step for
+        the whole active batch (fixed shapes — dead rows target a trash
+        slot so the compiled scatter never changes shape)."""
+        kf, vf = _jit_write_rows()(self.arrays[0], self.arrays[1],
+                                   jnp.asarray(slots), jnp.asarray(rows),
+                                   jnp.asarray(k_rows, self.arrays[0].dtype),
+                                   jnp.asarray(v_rows, self.arrays[0].dtype))
+        self.arrays = (kf, vf) + self.arrays[2:]
+        self._dirty.update(int(s) for s in slots)
+        self.writes += 1
+
+    # -- sync ----------------------------------------------------------------
+    def sync(self, pool, pids):
+        """Bring the mirror current for `pids`: allocate slots for pages new
+        to the mirror, rewrite pages whose version changed (demotions).
+        Batched into at most one fast + one slow scatter call."""
+        fast_w, slow_w = [], []
+        for pid in dict.fromkeys(pids):       # preserve order, dedupe
+            page = pool.pages[pid]
+            slot = self.slot_of.get(pid)
+            if slot is None:
+                slot = self.alloc()
+                self.slot_of[pid] = slot
+            elif self._synced.get(pid) == page.version:
+                continue
+            if page.tier == "fast":
+                k, v = page.data
+                fast_w.append((slot, k, v))
+            else:
+                (kq, ks), (vq, vs) = page.data
+                slow_w.append((slot, kq, ks[..., 0], vq, vs[..., 0]))
+            self._synced[pid] = page.version
+        if fast_w:
+            slots = np.array([w[0] for w in fast_w], np.int32)
+            k = np.stack([w[1] for w in fast_w]).astype(np.float32)
+            v = np.stack([w[2] for w in fast_w]).astype(np.float32)
+            slots, k, v = _pad_pow2(slots, k, v)
+            self.arrays = _jit_write_fast()(*self.arrays, slots, k, v)
+            self._dirty.update(int(s) for s in slots)
+            self.writes += 1
+        if slow_w:
+            slots = np.array([w[0] for w in slow_w], np.int32)
+            stacks = [np.stack([w[i] for w in slow_w]) for i in range(1, 5)]
+            slots, kq, ks, vq, vs = _pad_pow2(slots, *stacks)
+            self.arrays = _jit_write_slow()(*self.arrays, slots, kq,
+                                            ks.astype(np.float32), vq,
+                                            vs.astype(np.float32))
+            self._dirty.update(int(s) for s in slots)
+            self.writes += 1

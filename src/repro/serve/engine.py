@@ -1,10 +1,19 @@
-"""Batched serving engine: prefill + decode with capacity-padded caches,
-or — when a `PagedKVPool` is attached — decode attention served from real
-KV pages through the registry's paged-attention kernel (tiered int8 slow
-pages included), greedy or temperature sampling."""
+"""Serving engines over one model + params:
+
+- `generate` — static-batch fallback: groups requests into a fixed batch,
+  prefills the (left-padded) prompts, then decodes in lockstep. With a
+  `PagedKVPool` attached, decode attention is served from real KV pages
+  through the registry's paged-attention kernel (tiered int8 slow pages
+  included).
+- `serve` — continuous batching: a `Scheduler` admits requests into free
+  decode rows mid-flight (admission gated on pool headroom), each row
+  decodes at its own position/length, and retiring (per-request
+  ``max_new_tokens`` or ``eos_token``) frees the request's pool pages, so
+  the pool tracks the live working set. Greedy tokens are identical to
+  running each request alone through the static-batch paged path.
+"""
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import Optional
 
@@ -14,37 +23,93 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import Model
+from repro.models.layers import lm_head_apply, rms_norm
 from repro.serve.kvcache import PagedKVPool, pad_caches
 from repro.serve.paged_decode import (PagedKVState, extract_prefill_pages,
                                       paged_decode_step, supports_paged)
+from repro.serve.scheduler import (Request, Scheduler,  # noqa: F401 (re-export)
+                                   prefix_page_hashes)
 
 
-@dataclasses.dataclass
-class Request:
-    prompt: np.ndarray           # (prompt_len,) int32
-    max_new_tokens: int = 16
+class _Active:
+    """One occupied decode row of the continuous batch."""
+
+    __slots__ = ("req", "seq", "plen", "outs")
+
+    def __init__(self, req: Request, seq: int, plen: int, outs: list):
+        self.req, self.seq, self.plen, self.outs = req, seq, plen, outs
+
+    @property
+    def pos(self) -> int:
+        """Absolute position of the token being fed this step."""
+        return self.plen + len(self.outs) - 1
+
+    @property
+    def finished(self) -> bool:
+        return (len(self.outs) >= self.req.max_new_tokens
+                or self.outs[-1] == self.req.eos_token)
 
 
 class ServeEngine:
-    """Static-batch engine: groups requests into a fixed batch, prefills the
-    (padded) prompts, then decodes steps in lockstep. Cache capacity =
-    prompt_len + max_new tokens (rounded up)."""
+    """Engine over one model + params; see module docstring for the two
+    decode paths. Cache capacity = prompt_len + max_new tokens."""
 
     def __init__(self, cfg: ModelConfig, params=None, seed: int = 0,
-                 kv_pool: Optional[PagedKVPool] = None):
+                 kv_pool: Optional[PagedKVPool] = None,
+                 device_gather: bool = True):
         self.cfg = cfg
         self.model = Model(cfg)
         self.params = params if params is not None else \
             self.model.init(jax.random.PRNGKey(seed))
         self.kv_pool = kv_pool
+        self.device_gather = device_gather
         self._next_seq = 0           # pool seq ids are engine-lifetime unique
         self._decode = jax.jit(self.model.forward_decode,
                                donate_argnums=2)
         self._prefill = jax.jit(self.model.forward_prefill)
-        self.stats = {"prefill_s": 0.0, "decode_s": 0.0, "tokens": 0}
+        self._prefill_all = jax.jit(self._prefill_all_positions)
+        self.stats = {"prefill_s": 0.0, "decode_s": 0.0, "tokens": 0,
+                      "decode_steps": 0}
 
+    def _prefill_all_positions(self, params, batch):
+        """forward_prefill variant returning logits at *every* position.
+        Continuous admission right-pads prompts to a power-of-two bucket
+        (causal masking keeps prefix K/V and logits exact), so the jitted
+        prefill compiles once per bucket instead of once per distinct
+        prompt length; the caller reads logits[:, prompt_len - 1]."""
+        m = self.model
+        x = m._embed_in(params, batch)
+        b, sl = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(sl, dtype=jnp.int32),
+                                     (b, sl))
+        x, _, caches = m._run_stack(params, x, mode="prefill",
+                                    positions=positions, caches=None,
+                                    cross_embeds=None)
+        x = rms_norm(x, params["final_norm"])
+        return lm_head_apply(self.cfg, params["embed"], x), caches
+
+    def _require_paged(self):
+        if self.kv_pool is None:
+            raise ValueError("continuous serving decodes from a page pool — "
+                             "construct the engine with kv_pool=")
+        if not supports_paged(self.cfg):
+            raise NotImplementedError(
+                f"{self.cfg.name}: paged serving needs a "
+                f"global-attention stack")
+
+    # ------------------------------------------------------------------
+    # Static lockstep batch (fallback path)
+    # ------------------------------------------------------------------
     def generate(self, requests: list[Request], greedy: bool = True,
-                 temperature: float = 1.0, seed: int = 0) -> list[np.ndarray]:
+                 temperature: float = 1.0, seed: int = 0,
+                 free_pages: bool = False) -> list[np.ndarray]:
+        """Static lockstep decode. Per-request ``eos_token`` truncates the
+        returned tokens (eos inclusive, matching `serve`); the lockstep
+        batch still decodes ``max_new_tokens`` steps internally. With a
+        pool attached, the batch's pages stay live after the call by
+        default (inspectable, reusable across calls); pass
+        ``free_pages=True`` for a long-lived engine whose pool must track
+        only in-flight work — `serve` always frees."""
         b = len(requests)
         plen = max(len(r.prompt) for r in requests)
         max_new = max(r.max_new_tokens for r in requests)
@@ -59,10 +124,7 @@ class ServeEngine:
         paged = self.kv_pool is not None
         state = None
         if paged:
-            if not supports_paged(self.cfg):
-                raise NotImplementedError(
-                    f"{self.cfg.name}: paged serving needs a "
-                    f"global-attention stack")
+            self._require_paged()
             # write the real prefill K/V into the pool (seq id = request
             # index offset by the engine-lifetime counter, so repeated
             # generate() calls never alias an earlier call's pages): full
@@ -71,7 +133,9 @@ class ServeEngine:
             seq_ids = list(range(self._next_seq, self._next_seq + b))
             self._next_seq += b
             state = PagedKVState(self.kv_pool, cap, self.cfg.num_kv_heads,
-                                 self.cfg.head_dim)
+                                 self.cfg.head_dim,
+                                 device_resident=self.device_gather,
+                                 batch_hint=b)
             extract_prefill_pages(self.model, caches, state, seq_ids)
         else:
             caches = pad_caches(self.model, caches, cap, plen)
@@ -83,13 +147,22 @@ class ServeEngine:
         for i in range(b):
             outs[i].append(int(tok[i]))
 
+        observe = getattr(self.kv_pool.policy, "observe", None) \
+            if paged else None
         t0 = time.time()
         for step in range(max_new - 1):
             pos = plen + step
             if paged:
+                hits0 = (self.kv_pool.stats["fast_hits"],
+                         self.kv_pool.stats["slow_hits"])
+                g0 = state.gather_s
                 logits = paged_decode_step(self.model, self.params,
                                            np.asarray(tok), state,
                                            seq_ids, pos)
+                if observe is not None:
+                    observe(state.gather_s - g0,
+                            self.kv_pool.stats["fast_hits"] - hits0[0],
+                            self.kv_pool.stats["slow_hits"] - hits0[1])
             else:
                 logits, caches = self._decode(
                     self.params, {"tokens": tok[:, None]}, caches,
@@ -98,10 +171,137 @@ class ServeEngine:
             tok = self._sample(logits, greedy, temperature, sub)
             for i in range(b):
                 outs[i].append(int(tok[i]))
+            self.stats["decode_steps"] += 1
         self.stats["decode_s"] += time.time() - t0
         self.stats["tokens"] += sum(r.max_new_tokens for r in requests)
-        return [np.array(o[:r.max_new_tokens])
-                for o, r in zip(outs, requests)]
+        if paged and free_pages:
+            for seq in seq_ids:
+                state.free_seq(seq)
+
+        def trim(o, r):
+            o = o[:r.max_new_tokens]
+            if r.eos_token is not None and r.eos_token in o:
+                o = o[:o.index(r.eos_token) + 1]   # eos inclusive, as serve
+            return np.array(o)
+
+        return [trim(o, r) for o, r in zip(outs, requests)]
+
+    # ------------------------------------------------------------------
+    # Continuous batching
+    # ------------------------------------------------------------------
+    def serve(self, requests: list[Request], max_active: int = 4,
+              greedy: bool = True, temperature: float = 1.0, seed: int = 0,
+              prefix_cache: bool = True) -> list[np.ndarray]:
+        """Continuous-batching decode: requests join free rows mid-flight
+        and retire at their own lengths; finished requests' pages are
+        freed. Returns outputs in submission order. Greedy outputs match
+        ``generate([request])`` per request token-for-token (absent
+        fast-tier eviction pressure — demotion quantizes shared content).
+        """
+        if not requests:
+            return []
+        self._require_paged()
+        pool, cfg = self.kv_pool, self.cfg
+        sched = Scheduler(pool, cfg.num_layers, max_active=max_active)
+        order = {id(r): i for i, r in enumerate(requests)}
+        if len(order) != len(requests):
+            raise ValueError("duplicate Request objects in one serve() call")
+        for r in requests:
+            sched.submit(r)
+        cap = max(len(r.prompt) + r.max_new_tokens for r in requests)
+        state = PagedKVState(pool, cap, cfg.num_kv_heads, cfg.head_dim,
+                             device_resident=self.device_gather,
+                             batch_hint=max_active)
+        rows: list[Optional[_Active]] = [None] * max_active
+        results: list[Optional[np.ndarray]] = [None] * len(requests)
+        key = jax.random.PRNGKey(seed)
+        observe = getattr(pool.policy, "observe", None)
+
+        def finish(row_i: int, act: _Active):
+            state.free_seq(act.seq)
+            rows[row_i] = None
+            sched.retire(act.req)
+            results[order[id(act.req)]] = \
+                np.array(act.outs[:act.req.max_new_tokens], np.int64)
+
+        def admit(key):
+            # loop: an admitted request finishing at its very first token
+            # frees its row + reservation, unblocking the queue head again
+            while True:
+                batch = sched.admit()
+                if not batch:
+                    return key
+                for req in batch:
+                    seq = self._next_seq
+                    self._next_seq += 1
+                    toks = np.asarray(req.prompt, np.int32)
+                    plen = len(toks)
+                    t0 = time.time()
+                    # right-pad to a power-of-two bucket: bounded compile
+                    # count across prompt lengths, exact prefix under the
+                    # causal mask
+                    bucket = 8
+                    while bucket < plen:
+                        bucket *= 2
+                    padded = np.zeros(bucket, np.int32)
+                    padded[:plen] = toks
+                    logits_all, caches = self._prefill_all(
+                        self.params, {"tokens": jnp.asarray(padded[None])})
+                    logits = logits_all[:, plen - 1]
+                    hashes = ([prefix_page_hashes(toks, pool.page_tokens)]
+                              if prefix_cache else None)
+                    extract_prefill_pages(self.model, caches, state, [seq],
+                                          page_hashes=hashes,
+                                          valid_len=plen)
+                    self.stats["prefill_s"] += time.time() - t0
+                    key, sub = jax.random.split(key)
+                    tok = int(self._sample(logits, greedy, temperature,
+                                           sub)[0])
+                    self.stats["tokens"] += 1
+                    act = _Active(req, seq, plen, [tok])
+                    row_i = rows.index(None)
+                    rows[row_i] = act
+                    if act.finished:
+                        finish(row_i, act)
+
+        while True:
+            key = admit(key)
+            if all(a is None for a in rows):
+                if not sched.done:     # unreachable: admit() raises instead
+                    raise RuntimeError("scheduler stalled with waiting "
+                                       "requests and no active rows")
+                break
+            tokens = np.zeros(max_active, np.int32)
+            pos = np.zeros(max_active, np.int32)
+            seq_ids = [-1] * max_active
+            for i, act in enumerate(rows):
+                if act is None:
+                    continue
+                tokens[i] = act.outs[-1]
+                pos[i] = act.pos
+                seq_ids[i] = act.seq
+            t0 = time.time()
+            hits0 = (pool.stats["fast_hits"], pool.stats["slow_hits"])
+            g0 = state.gather_s
+            logits = paged_decode_step(self.model, self.params, tokens,
+                                       state, seq_ids, pos)
+            self.stats["decode_s"] += time.time() - t0
+            self.stats["decode_steps"] += 1
+            if observe is not None:
+                observe(state.gather_s - g0,
+                        pool.stats["fast_hits"] - hits0[0],
+                        pool.stats["slow_hits"] - hits0[1])
+            key, sub = jax.random.split(key)
+            toks = self._sample(logits, greedy, temperature, sub)
+            for i, act in enumerate(rows):
+                if act is None:
+                    continue
+                act.outs.append(int(toks[i]))
+                self.stats["tokens"] += 1
+                if act.finished:
+                    finish(i, act)
+        self.last_peak_active = sched.peak_active
+        return results
 
     @staticmethod
     def _sample(logits, greedy, temperature, key):

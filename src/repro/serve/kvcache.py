@@ -3,10 +3,19 @@
 The model emits seq-sized caches at prefill; serving needs capacity-sized
 buffers (ring-buffer layout for sliding-window layers). Page-granular int8
 quantization + HBM/host tier placement (Sibyl hook) live here too.
+
+The `PagedKVPool` owns the page *lifecycle*: tier placement per page
+(policy-driven), LRU demotion under fast-tier pressure, reference-counted
+sharing of content-identical pages (prefix caching), and `free(seq_id)`
+when a request retires — so the pool's live page count tracks the working
+set instead of growing monotonically. Page *contents* are additionally
+mirrored into device-resident arrays by `serve.device_pool` for the
+decode-step gather.
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Optional
 
 import jax
@@ -60,38 +69,95 @@ from repro.kernels.paged_attention.quant import (  # noqa: E402,F401
 @dataclasses.dataclass
 class Page:
     page_id: int
-    seq_id: int
+    seq_id: int        # first owner (refs may span several sequences)
     tier: str          # "fast" | "slow"
     quantized: bool
     layer: int = 0     # model layer the page belongs to
     access_count: int = 0
     last_access: int = 0
     data: Optional[tuple] = None   # (k, v) or ((kq, ks), (vq, vs))
+    refs: int = 1                  # holders (prefix-shared pages: > 1)
+    content_hash: Optional[tuple] = None   # (layer, token-prefix hash)
+    version: int = 0               # bumped on tier change (mirror sync key)
+    nbytes: int = 0
+
+
+def _data_nbytes(data) -> int:
+    total = 0
+    for part in data:
+        if isinstance(part, tuple):
+            total += sum(np.asarray(x).nbytes for x in part)
+        else:
+            total += np.asarray(part).nbytes
+    return total
 
 
 class PagedKVPool:
     """Page-granular KV store with tier placement decided by a policy object
     (heuristic or Sibyl RL agent). Host tier stores pages int8-quantized.
+
+    ``capacity_pages`` is the soft total-page budget the serve scheduler's
+    admission gate checks (`headroom()`); the pool itself never refuses a
+    put — overflowing ``fast_capacity_pages`` LRU-demotes to slow instead.
     """
 
     def __init__(self, page_tokens: int = 128, fast_capacity_pages: int = 1024,
-                 placement_policy=None):
+                 placement_policy=None, capacity_pages: Optional[int] = None):
         self.page_tokens = page_tokens
         self.fast_capacity = fast_capacity_pages
+        self.capacity_pages = capacity_pages
         self.policy = placement_policy
         self.pages: dict[int, Page] = {}
         self._by_seq: dict[tuple, list[int]] = {}   # (seq, layer) -> pids
+        self._by_hash: dict[tuple, int] = {}        # (layer, hash) -> pid
+        # fast-tier pages in LRU order (oldest first) — eviction pops the
+        # head in O(1) instead of rescanning every page per victim
+        self._fast_lru: OrderedDict[int, None] = OrderedDict()
         self.clock = 0
         self.next_id = 0
+        self.recorder = None          # optional DecodeTraceRecorder
         self.stats = {"fast_hits": 0, "slow_hits": 0, "evictions": 0,
-                      "fast_bytes": 0, "slow_bytes": 0}
+                      "fast_bytes": 0, "slow_bytes": 0, "freed": 0,
+                      "shared_puts": 0}
 
     def _fast_pages(self):
+        """Inspection helper only — the put/touch/evict hot paths must not
+        rescan the pool (see `_fast_lru`)."""
         return [p for p in self.pages.values() if p.tier == "fast"]
 
+    @property
+    def live_pages(self) -> int:
+        return len(self.pages)
+
+    def headroom(self) -> float:
+        """Pages left under the soft budget (inf when unbounded)."""
+        if self.capacity_pages is None:
+            return float("inf")
+        return self.capacity_pages - len(self.pages)
+
+    def _record(self, page: Page, is_write: bool):
+        if self.recorder is not None:
+            self.recorder.record(page.page_id, page.nbytes / 1024.0, is_write)
+
     def put(self, seq_id: int, k: np.ndarray, v: np.ndarray,
-            layer: int = 0) -> int:
+            layer: int = 0, content_hash=None) -> int:
+        """Store one page for (seq_id, layer). With a `content_hash` (a
+        token-prefix digest), a page already holding identical content is
+        shared instead: its ref count grows and both sequences' page lists
+        name the same page id."""
         self.clock += 1
+        if content_hash is not None:
+            pid = self._by_hash.get((layer, content_hash))
+            if pid is not None:
+                page = self.pages[pid]
+                page.refs += 1
+                page.last_access = self.clock
+                if page.tier == "fast":
+                    self._fast_lru.move_to_end(pid)
+                self._by_seq.setdefault((seq_id, layer), []).append(pid)
+                self.stats["shared_puts"] += 1
+                self._record(page, is_write=False)
+                return pid
         pid = self.next_id
         self.next_id += 1
         feats = self._features(seq_id)
@@ -104,8 +170,16 @@ class PagedKVPool:
             page.data = (quantize_page(k), quantize_page(v))
         else:
             page.data = (k, v)
+        page.nbytes = _data_nbytes(page.data)
+        if content_hash is not None:
+            page.content_hash = (layer, content_hash)
+            self._by_hash[page.content_hash] = pid
         self.pages[pid] = page
         self._by_seq.setdefault((seq_id, layer), []).append(pid)
+        if tier == "fast":
+            self._fast_lru[pid] = None
+        self.stats[f"{tier}_bytes"] += page.nbytes
+        self._record(page, is_write=True)
         self._maybe_evict()
         return pid
 
@@ -117,8 +191,12 @@ class PagedKVPool:
         page = self.pages[pid]
         page.access_count += 1
         page.last_access = self.clock
-        key = "fast_hits" if page.tier == "fast" else "slow_hits"
-        self.stats[key] += 1
+        if page.tier == "fast":
+            self._fast_lru.move_to_end(pid)
+            self.stats["fast_hits"] += 1
+        else:
+            self.stats["slow_hits"] += 1
+        self._record(page, is_write=False)
         return page
 
     def get(self, pid: int):
@@ -133,19 +211,50 @@ class PagedKVPool:
         pool scan (gather calls this per layer per decode step)."""
         return list(self._by_seq.get((seq_id, layer), ()))
 
+    def free(self, seq_id: int) -> list[tuple]:
+        """Release every (seq_id, layer) page reference of a retired
+        request. Pages whose last holder this was are destroyed (byte stats
+        shrink back to the live working set); prefix-shared pages survive
+        until the final holder frees them. Returns destroyed
+        ``(page_id, layer)`` pairs (the layer routes device-slot
+        recycling without scanning every layer's mirror)."""
+        destroyed: list[tuple] = []
+        # key scan is O(live (seq, layer) entries) — bounded by active
+        # requests x layers, not by pool size
+        for key in [k for k in self._by_seq if k[0] == seq_id]:
+            for pid in self._by_seq.pop(key):
+                page = self.pages.get(pid)
+                if page is None:
+                    continue
+                page.refs -= 1
+                if page.refs > 0:
+                    continue
+                del self.pages[pid]
+                self._fast_lru.pop(pid, None)
+                if page.content_hash is not None:
+                    self._by_hash.pop(page.content_hash, None)
+                self.stats[f"{page.tier}_bytes"] -= page.nbytes
+                self.stats["freed"] += 1
+                destroyed.append((pid, page.layer))
+        return destroyed
+
     def _maybe_evict(self):
-        fast = self._fast_pages()
-        while len(fast) > self.fast_capacity:
-            victim = min(fast, key=lambda p: p.last_access)  # LRU demote
+        # O(1) per victim: pop the LRU head instead of rescanning the pool
+        while len(self._fast_lru) > self.fast_capacity:
+            pid, _ = self._fast_lru.popitem(last=False)
+            victim = self.pages[pid]
             k, v = victim.data
+            self.stats["fast_bytes"] -= victim.nbytes
             victim.data = (quantize_page(k), quantize_page(v))
             victim.tier, victim.quantized = "slow", True
+            victim.version += 1            # device mirror must rewrite
+            victim.nbytes = _data_nbytes(victim.data)
+            self.stats["slow_bytes"] += victim.nbytes
             self.stats["evictions"] += 1
-            fast = self._fast_pages()
 
     def _features(self, seq_id: int) -> np.ndarray:
         """Sibyl-style state features (Table 7.1 analogue)."""
-        n_fast = len(self._fast_pages())
+        n_fast = len(self._fast_lru)
         return np.array([
             n_fast / max(1, self.fast_capacity),            # fast fill ratio
             len(self.pages) / max(1, self.fast_capacity),   # total pressure

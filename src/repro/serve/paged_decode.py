@@ -11,11 +11,16 @@ Page lifecycle (see serve/README.md):
   prefill  -> full pages ``put`` per (sequence, layer), remainder buffered
   decode   -> each step appends the new token's K/V to the tail buffer;
               a filled tail becomes a pool ``put`` (tier decided there)
-  attend   -> ``gather`` assembles the page list into pool-shaped arrays
-              (slow pages stay int8 — the kernel dequantizes on load) and
-              the paged kernel consumes them via the page table
+  attend   -> ``gather`` builds the page table over the device-resident
+              pool arrays (`serve.device_pool`) and the paged kernel
+              consumes them; with ``device_resident=False`` it falls back
+              to assembling pool-shaped arrays in host numpy per step
+  retire   -> ``free_seq`` releases the request's pool pages (ref-counted;
+              prefix-shared pages survive) and recycles its device slots
 """
 from __future__ import annotations
+
+import time
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +31,7 @@ from repro.kernels import api
 from repro.models.attention import decode_qkv
 from repro.models.layers import lm_head_apply, rms_norm
 from repro.models.transformer import mlp_tail
+from repro.serve.device_pool import DevicePagePool
 from repro.serve.kvcache import PagedKVPool
 
 
@@ -39,66 +45,227 @@ def _next_pow2(n: int) -> int:
 class PagedKVState:
     """Pool-backed KV state for a decode batch: the pool holds full pages,
     a per-(sequence, layer) tail buffer holds the < page_tokens newest
-    rows until they fill a page. Gathered arrays are padded to stable
-    shapes (pool pages to a power of two, table width fixed per batch) so
-    the jitted paged kernel recompiles only when the pool actually grows."""
+    rows until they fill a page.
 
-    def __init__(self, pool: PagedKVPool, capacity: int, hkv: int, hd: int):
+    With ``device_resident=True`` (the default) page contents live in the
+    preallocated device arrays of a `DevicePagePool`: prefill pages sync
+    in batched index updates, each decode step streams the new token rows
+    into per-sequence tail slots, and `gather` only builds the small int32
+    page table — no per-step numpy stacking. The numpy fallback pads
+    gathered arrays to stable shapes (pool pages to a power of two, table
+    width fixed per batch) so the jitted kernel recompiles only when the
+    pool actually grows.
+
+    Batch rows may carry ``seq_id = -1`` (continuous batching pads retired
+    rows): they write to a scratch slot and attend a zero page.
+    """
+
+    def __init__(self, pool: PagedKVPool, capacity: int, hkv: int, hd: int,
+                 device_resident: bool = True, batch_hint: int = 1):
         self.pool = pool
         self.hkv, self.hd = hkv, hd
         t = pool.page_tokens
         slots = -(-capacity // t)          # ceil: pages covering capacity
         self.slots = -(-(slots + 1) // 8) * 8   # +1 tail page, mult. of 8
         self.tails: dict[tuple, list] = {}
+        self.device_resident = device_resident
+        self.batch_hint = max(1, batch_hint)   # expected live sequences
+        # one DevicePagePool per layer: a gather only ever names one
+        # layer's pages, so per-layer arrays keep the kernel operands (and
+        # every in-place update) num_layers x smaller than one shared pool
+        self._device: dict[int, DevicePagePool] = {}
+        self._trash: dict[int, int] = {}       # layer -> scratch slot
+        self._tail_slot: dict[tuple, int] = {}
+        self.gather_s = 0.0       # host-side gather/assembly time (Sibyl reward)
+
+    def _dev(self, layer: int) -> DevicePagePool:
+        dp = self._device.get(layer)
+        if dp is None:
+            # sized for the whole expected batch: geometric growth works,
+            # but every growth re-specializes the jitted writers on the new
+            # capacity — reserve up front instead
+            dp = DevicePagePool(self.pool.page_tokens, self.hkv, self.hd,
+                                init_slots=self.slots * self.batch_hint)
+            self._device[layer] = dp
+            self._trash[layer] = dp.alloc()
+        return dp
 
     # -- writes -------------------------------------------------------------
     def write_prefill(self, layer: int, seq: int, k: np.ndarray,
-                      v: np.ndarray):
+                      v: np.ndarray, page_hashes=None):
         """k, v: (prefill_len, hkv, hd) — full pages into the pool, the
-        remainder into the tail buffer."""
+        remainder into the tail buffer. `page_hashes[p]` (cumulative token
+        -prefix digests) enables ref-counted page sharing across requests
+        with identical prompt prefixes."""
         t = self.pool.page_tokens
         n_full = k.shape[0] // t
         for p in range(n_full):
+            h = page_hashes[p] if page_hashes is not None else None
             self.pool.put(seq, k[p * t:(p + 1) * t], v[p * t:(p + 1) * t],
-                          layer=layer)
-        tail = self.tails.setdefault((seq, layer), [])
-        for r in range(n_full * t, k.shape[0]):
-            tail.append((k[r], v[r]))
+                          layer=layer, content_hash=h)
+        rows = [(k[r], v[r]) for r in range(n_full * t, k.shape[0])]
+        if rows:
+            key = (seq, layer)
+            tail = self.tails.setdefault(key, [])
+            if self.device_resident:
+                slot = self._ensure_tail_slot(key)
+                start = len(tail)
+                slots = np.full(len(rows), slot, np.int32)
+                idx = np.arange(start, start + len(rows), dtype=np.int32)
+                self._dev(layer).write_rows(slots, idx,
+                                            np.stack([r[0] for r in rows]),
+                                            np.stack([r[1] for r in rows]))
+            tail.extend(rows)
+            self._maybe_fill(key)
+
+    def _ensure_tail_slot(self, key) -> int:
+        slot = self._tail_slot.get(key)
+        if slot is None:
+            dp = self._dev(key[1])
+            slot = dp.alloc()
+            dp.zero_slot(slot)
+            self._tail_slot[key] = slot
+        return slot
+
+    def _maybe_fill(self, key):
+        """A filled tail becomes a pool page (tier placement decided by the
+        pool). Its device tail slot already holds the full float content,
+        so a fast placement adopts the slot as-is; a slow placement leaves
+        it dirty for the next sync to rewrite (int8 + zeroed float)."""
+        tail = self.tails[key]
+        if len(tail) < self.pool.page_tokens:
+            return
+        seq, layer = key
+        k = np.stack([r[0] for r in tail])
+        v = np.stack([r[1] for r in tail])
+        pid = self.pool.put(seq, k, v, layer=layer)
+        tail.clear()
+        if self.device_resident:
+            slot = self._tail_slot.pop(key)
+            page = self.pool.pages[pid]
+            self._dev(layer).adopt(pid, slot, page.version,
+                                   synced=(page.tier == "fast"))
 
     def append_token(self, layer: int, seq: int, k_row: np.ndarray,
                      v_row: np.ndarray):
-        """k_row, v_row: (hkv, hd) for the token being decoded; a filled
-        tail becomes a pool page (tier placement decided by the pool)."""
-        tail = self.tails.setdefault((seq, layer), [])
-        tail.append((k_row, v_row))
-        if len(tail) == self.pool.page_tokens:
-            k = np.stack([r[0] for r in tail])
-            v = np.stack([r[1] for r in tail])
-            self.pool.put(seq, k, v, layer=layer)
-            tail.clear()
+        """Single-sequence convenience wrapper over `append_tokens`."""
+        self.append_tokens(layer, [seq], k_row[None], v_row[None])
+
+    def append_tokens(self, layer: int, seq_ids, k_rows: np.ndarray,
+                      v_rows: np.ndarray):
+        """k_rows, v_rows: (b, hkv, hd) for the decode step's tokens — one
+        batched device row-scatter for the whole step; rows with seq -1
+        target the scratch slot. Filled tails become pool pages."""
+        b = len(seq_ids)
+        dp = self._dev(layer) if self.device_resident else None
+        slots = np.full(b, self._trash.get(layer, 0), np.int32)
+        rows = np.zeros(b, np.int32)
+        filled = []
+        for i, seq in enumerate(seq_ids):
+            if seq < 0:
+                continue
+            key = (seq, layer)
+            tail = self.tails.setdefault(key, [])
+            if dp is not None:
+                slots[i] = self._ensure_tail_slot(key)
+                rows[i] = len(tail)
+            tail.append((k_rows[i], v_rows[i]))
+            if len(tail) == self.pool.page_tokens:
+                filled.append(key)
+        if dp is not None:
+            dp.write_rows(slots, rows, k_rows, v_rows)
+        for key in filled:
+            self._maybe_fill(key)
+
+    # -- retire -------------------------------------------------------------
+    def free_seq(self, seq: int) -> list[int]:
+        """Retire a request: drop its pool page refs (destroying pages whose
+        last holder it was) and recycle its device slots. Returns the
+        destroyed pool (page id, layer) pairs."""
+        destroyed = self.pool.free(seq)
+        for pid, layer in destroyed:
+            dp = self._device.get(layer)
+            if dp is not None:
+                dp.release_pid(pid)
+        for key in [k for k in self.tails if k[0] == seq]:
+            self.tails.pop(key)
+            slot = self._tail_slot.pop(key, None)
+            if slot is not None and self.device_resident:
+                self._dev(key[1]).release_slot(slot)
+        return destroyed
 
     # -- gather -------------------------------------------------------------
+    def _seq_view(self, seq, layer):
+        """(pids, tail) for one live row, with the slot-overflow check."""
+        pids = self.pool.seq_pages(seq, layer)
+        tail = self.tails.get((seq, layer), ())
+        if len(pids) + bool(tail) > self.slots:
+            raise ValueError(
+                f"sequence {seq}: {len(pids)} pages + "
+                f"{'a partial' if tail else 'no'} tail page exceed the "
+                f"page-table capacity of {self.slots} slots "
+                f"({self.slots * self.pool.page_tokens} tokens) at layer "
+                f"{layer}; size the PagedKVState capacity to the longest "
+                f"request")
+        return pids, tail
+
     def gather(self, layer: int, seq_ids) -> tuple:
         """Build (k_pages, v_pages, k_quant, v_quant, k_scale, v_scale,
         page_table, lengths) for the batch at this layer, in the kernel's
         argument order. Slow pages keep their int8 + scale representation;
         the tail rides along as one zero-padded fast page per sequence."""
+        t0 = time.perf_counter()
+        out = (self._gather_device(layer, seq_ids) if self.device_resident
+               else self._gather_numpy(layer, seq_ids))
+        self.gather_s += time.perf_counter() - t0
+        return out
+
+    def _gather_device(self, layer: int, seq_ids) -> tuple:
+        pool, t = self.pool, self.pool.page_tokens
+        dp = self._dev(layer)
+        b = len(seq_ids)
+        table = np.zeros((b, self.slots), np.int32)
+        lengths = np.ones(b, np.int32)
+        views, sync_pids = [], []
+        for seq in seq_ids:
+            if seq < 0:
+                views.append(None)
+                continue
+            pids, tail = self._seq_view(seq, layer)
+            for pid in pids:
+                pool.touch(pid)
+            sync_pids.extend(pids)
+            views.append((pids, tail))
+        dp.sync(pool, sync_pids)
+        slot_of = dp.slot_of
+        for i, view in enumerate(views):
+            if view is None:
+                continue
+            pids, tail = view
+            for n, pid in enumerate(pids):
+                table[i, n] = slot_of[pid]
+            if tail:
+                table[i, len(pids)] = self._tail_slot[(seq_ids[i], layer)]
+            lengths[i] = max(1, len(pids) * t + len(tail))
+        return (*dp.arrays, table, lengths)
+
+    def _gather_numpy(self, layer: int, seq_ids) -> tuple:
         pool, t = self.pool, self.pool.page_tokens
         b = len(seq_ids)
         entries: list = []
         table = np.zeros((b, self.slots), np.int32)
-        lengths = np.zeros(b, np.int32)
+        lengths = np.ones(b, np.int32)
         for i, seq in enumerate(seq_ids):
-            pids = pool.seq_pages(seq, layer)
+            if seq < 0:
+                continue
+            pids, tail = self._seq_view(seq, layer)
             for n, pid in enumerate(pids):
                 table[i, n] = len(entries)
                 entries.append(pool.touch(pid))
-            tail = self.tails.get((seq, layer), [])
             if tail:
                 table[i, len(pids)] = len(entries)
                 entries.append(tuple(tail))
-            lengths[i] = len(pids) * t + len(tail)
-            assert len(pids) + bool(tail) <= self.slots
+            lengths[i] = max(1, len(pids) * t + len(tail))
 
         hkv, hd = self.hkv, self.hd
         n = max(8, _next_pow2(len(entries)))
@@ -152,45 +319,62 @@ def _iter_layers(model, params):
         yield model.n_groups * gs + i, kind, params["tail"][f"t{i}"]
 
 
-def extract_prefill_pages(model, caches, state: PagedKVState, seq_ids):
-    """Write the (unpadded) prefill caches into the pool as real pages —
-    one write_prefill per (layer, sequence)."""
+def extract_prefill_pages(model, caches, state: PagedKVState, seq_ids,
+                          page_hashes=None, valid_len=None):
+    """Write the prefill caches into the pool as real pages — one
+    write_prefill per (layer, sequence). `page_hashes[bi]` is that
+    request's cumulative token-prefix digest list (prefix caching);
+    `valid_len` drops right-padding rows emitted by a bucketed prefill
+    (continuous admission pads prompts to a power-of-two length)."""
     gs = len(model.group_kinds)
+    sl = slice(None, valid_len)
+
+    def hashes(bi):
+        return page_hashes[bi] if page_hashes is not None else None
+
     for g in range(model.n_groups):
         for i, _ in enumerate(model.group_kinds):
             c = caches["groups"][f"l{i}"]
             k = np.asarray(c["k"][g])          # (b, plen, hkv, hd)
             v = np.asarray(c["v"][g])
             for bi, seq in enumerate(seq_ids):
-                state.write_prefill(g * gs + i, seq, k[bi], v[bi])
+                state.write_prefill(g * gs + i, seq, k[bi][sl], v[bi][sl],
+                                    page_hashes=hashes(bi))
     for i, _ in enumerate(model.tail_kinds):
         c = caches["tail"][f"t{i}"]
         for bi, seq in enumerate(seq_ids):
             state.write_prefill(model.n_groups * gs + i, seq,
-                                np.asarray(c["k"][bi]), np.asarray(c["v"][bi]))
+                                np.asarray(c["k"][bi][sl]),
+                                np.asarray(c["v"][bi][sl]),
+                                page_hashes=hashes(bi))
 
 
 def paged_decode_step(model, params, tokens, state: PagedKVState, seq_ids,
-                      pos: int, backend: str = "auto"):
+                      pos, backend: str = "auto"):
     """One decode step with every attention layer served from the page
-    pool. tokens: (b,) int32; returns logits (b, V). Appends the step's
-    K/V rows to the tails (filling pages as they complete), so the pool is
-    the only KV storage this path touches."""
+    pool. tokens: (b,) int32; `pos` is a scalar shared by the batch
+    (static lockstep) or a (b,) int32 array of per-sequence absolute
+    positions (continuous batching); `seq_ids` may carry -1 for padded
+    (retired) rows, whose logits are garbage and must be ignored. Returns
+    logits (b, V). Appends the step's K/V rows to the tails (filling pages
+    as they complete), so the pool is the only KV storage this path
+    touches."""
     cfg = model.cfg
     if not supports_paged(cfg):
         raise NotImplementedError(
             f"paged decode needs a global-attention stack, got "
             f"{cfg.layer_kinds()}")
+    seq_ids = list(seq_ids)
     x = model._embed_in(params, {"tokens": jnp.asarray(tokens)[:, None]})
+    pos_in = jnp.asarray(pos, jnp.int32)
 
     for layer, kind, p in _iter_layers(model, params):
         h = rms_norm(x, p["norm1"])
         ap = p["attn"]
-        q, k_new, v_new = decode_qkv(cfg, ap, h, pos)
+        q, k_new, v_new = decode_qkv(cfg, ap, h, pos_in)
         kn = np.asarray(k_new[:, 0], np.float32)       # (b, hkv, hd)
         vn = np.asarray(v_new[:, 0], np.float32)
-        for bi, seq in enumerate(seq_ids):
-            state.append_token(layer, seq, kn[bi], vn[bi])
+        state.append_tokens(layer, seq_ids, kn, vn)
         y = paged_attention_over_pool(q[:, 0], state, layer, seq_ids,
                                       backend=backend)
         y = jnp.einsum("bhk,hkd->bd", y.astype(x.dtype), ap["wo"])[:, None]

@@ -1,0 +1,57 @@
+"""Sibyl-driven KV-page tier placement with *real* serving rewards.
+
+The pool calls ``place(feats)`` per page write; the continuous engine
+calls ``observe(gather_s, fast_hits, slow_hits)`` after every decode step
+with the observed page-gather latency and the step's tier hit deltas from
+``pool.stats``. Placements made since the previous step share that
+deferred reward (Sibyl's system-feedback loop, thesis §7.5, driven by the
+serving hot path instead of a synthetic trace): low gather latency is
+good, slow-tier hits are penalized in proportion — the
+latency-vs-footprint trade the agent must learn.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.sibyl.agent import SibylAgent, SibylConfig
+from repro.core.sibyl.env import N_FEATURES
+
+
+class SibylPlacement:
+    """Adapts the Sibyl DQN to the KV-pool placement interface.
+
+    Actions: 0 = fast (HBM float), 1 = slow (host int8). Rewards arrive
+    deferred through `observe`; decisions in flight queue up in between.
+    """
+
+    def __init__(self, seed: int = 0, slow_hit_weight: float = 2.0,
+                 agent: SibylAgent | None = None):
+        self.agent = agent if agent is not None else \
+            SibylAgent(SibylConfig(seed=seed, eps=0.2))
+        self.slow_hit_weight = slow_hit_weight
+        self._pending: list[tuple] = []     # (obs, action) awaiting reward
+        self.last_reward = 0.0
+
+    def place(self, feats: np.ndarray) -> str:
+        obs = np.zeros(N_FEATURES, np.float32)
+        obs[:len(feats)] = feats
+        a = self.agent.act(obs, 2)
+        self.agent._pending = None          # rewards arrive via observe()
+        self._pending.append((obs, a))
+        return "fast" if a == 0 else "slow"
+
+    def observe(self, gather_s: float, fast_hits: int, slow_hits: int):
+        """Feed one decode step's outcome back to the agent. Each pending
+        placement becomes a transition whose next-state is the following
+        placement's observation (the decision stream is the episode)."""
+        if not self._pending:
+            return
+        slow_frac = slow_hits / max(fast_hits + slow_hits, 1)
+        reward = -(np.log1p(max(gather_s, 0.0) * 1e3)
+                   + self.slow_hit_weight * slow_frac)
+        self.last_reward = float(reward)
+        for i, (obs, act) in enumerate(self._pending):
+            nobs = self._pending[i + 1][0] if i + 1 < len(self._pending) \
+                else obs
+            self.agent.experience(obs, act, reward, nobs)
+        self._pending.clear()

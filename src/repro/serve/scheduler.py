@@ -1,0 +1,124 @@
+"""Continuous-batching scheduler: admit and retire requests mid-decode.
+
+Admission rules (documented in serve/README.md):
+
+- FIFO, no overtaking: the head of the waiting queue admits first; if it
+  does not fit, nothing behind it is considered (simple and starvation-
+  free — a large request cannot be overtaken forever).
+- A request admits only while a decode row is free (`max_active` bounds
+  the lockstep kernel batch) AND the pool has headroom for its worst-case
+  page need: ``num_layers * (ceil((prompt + max_new) / page_tokens) + 1)``
+  pages (+1 for the partial tail page per layer). Worst-case reservations
+  of all active requests are held until retire, so the total live page
+  count provably stays within ``pool.capacity_pages``; prefix-shared
+  pages make the gate conservative (they are reserved per holder but
+  stored once).
+- The budget excludes pages already live when the serve call started
+  (e.g. left by static batches sharing the pool). A request whose worst
+  case can never fit raises at ``submit`` time, before any admitted
+  request has done work.
+- Retiring (per-request ``max_new_tokens`` reached or ``eos_token``
+  sampled) frees the request's pages and releases its reservation, which
+  unblocks the queue head on the next admission round.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray                 # (prompt_len,) int32
+    max_new_tokens: int = 16
+    eos_token: Optional[int] = None    # stop (inclusive) when sampled
+
+
+def prefix_page_hashes(tokens: np.ndarray, page_tokens: int) -> list[str]:
+    """Cumulative token-prefix digests, one per full prompt page: hash p
+    covers ``tokens[:(p+1)*page_tokens]``, so a page is shared only when
+    the *entire* prefix up to it matches (the prefix-cache key; K/V rows
+    depend only on token and absolute position, so equal prefixes produce
+    bitwise-identical pages under the same params)."""
+    tokens = np.asarray(tokens, np.int32)
+    out = []
+    h = hashlib.sha1()
+    for p in range(len(tokens) // page_tokens):
+        h.update(tokens[p * page_tokens:(p + 1) * page_tokens].tobytes())
+        out.append(h.hexdigest())
+    return out
+
+
+class Scheduler:
+    """Waiting queue + admission gate over a `PagedKVPool`."""
+
+    def __init__(self, pool, num_layers: int, max_active: int = 4):
+        if max_active < 1:
+            raise ValueError(f"max_active must be >= 1, got {max_active}")
+        self.pool = pool
+        self.num_layers = num_layers
+        self.max_active = max_active
+        self.waiting: deque[Request] = deque()
+        self._reserved: dict[int, int] = {}    # id(request) -> page need
+        # pages already live when this serve call started (e.g. left by
+        # static generate() batches sharing the pool) are never freed by
+        # this scheduler's requests, so they shrink the budget throughout
+        self._base_pages = pool.live_pages
+        self.peak_active = 0
+        self.admitted = 0
+
+    def _budget(self):
+        if self.pool.capacity_pages is None:
+            return None
+        return self.pool.capacity_pages - self._base_pages
+
+    def submit(self, req: Request):
+        """Queue a request; raises immediately (before any admitted work)
+        if its worst case can never fit the pool budget."""
+        budget = self._budget()
+        need = self.pages_needed(req)
+        if budget is not None and need > budget:
+            raise ValueError(
+                f"request needs {need} pages worst-case but only {budget} "
+                f"of the pool's capacity_pages="
+                f"{self.pool.capacity_pages} budget are available "
+                f"({self._base_pages} pages already live) — it can never "
+                f"be admitted")
+        self.waiting.append(req)
+
+    @property
+    def n_active(self) -> int:
+        return len(self._reserved)
+
+    def pages_needed(self, req: Request) -> int:
+        t = self.pool.page_tokens
+        cap = len(req.prompt) + req.max_new_tokens
+        return self.num_layers * (-(-cap // t) + 1)
+
+    def admit(self) -> list[Request]:
+        """Pop every waiting request that fits right now (FIFO prefix)."""
+        out: list[Request] = []
+        budget = self._budget()
+        while self.waiting and self.n_active < self.max_active:
+            req = self.waiting[0]
+            need = self.pages_needed(req)
+            reserved = sum(self._reserved.values())
+            if budget is not None and reserved + need > budget:
+                break
+            self.waiting.popleft()
+            self._reserved[id(req)] = need
+            out.append(req)
+            self.admitted += 1
+        self.peak_active = max(self.peak_active, self.n_active)
+        return out
+
+    def retire(self, req: Request):
+        self._reserved.pop(id(req), None)
+
+    @property
+    def done(self) -> bool:
+        return not self.waiting and not self._reserved

@@ -27,6 +27,23 @@ def make_decode_step(model: Model):
     return decode_step
 
 
+def make_paged_decode_step(model: Model, state, backend: str = "auto"):
+    """Paged analogue of `make_decode_step`, closed over a host-side
+    `PagedKVState`. The page tables are data-dependent (they change as
+    pages fill and requests retire), so the step as a whole is not
+    jit-lowerable — the kernel dispatch inside is jitted; this wrapper
+    exists so launch-layer drivers consume one step-function shape for
+    both paths. `pos` may be a scalar (lockstep) or (b,) per-sequence
+    positions; `seq_ids` may carry -1 padding rows."""
+    from repro.serve.paged_decode import paged_decode_step
+
+    def decode_step(params, tokens, seq_ids, pos):
+        logits = paged_decode_step(model, params, tokens, state, seq_ids,
+                                   pos, backend=backend)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), logits
+    return decode_step
+
+
 def abstract_params_sharded(model: Model, mesh: Optional[Mesh], rules=None):
     a = model.abstract_params()
     if mesh is None:
