@@ -140,19 +140,105 @@ def resolve_tile(kernel, args, vmem_budget: int | None = None) -> dict:
     return dict(_resolve_cached(spec.name, grid, dtype, vmem_budget))
 
 
-@functools.lru_cache(maxsize=None)
+# Resolved knees live in a plain dict (not an lru_cache) so they can be
+# persisted next to checkpoints and reloaded at engine construction — a
+# serving restart then skips re-tuning every (kernel, grid, dtype) it
+# already saw (ROADMAP: knee persistence for serving restarts).
+_KNEES: dict[tuple, tuple] = {}     # (name, grid, dtype, vmem) -> frozen tile
+_knees_dirty = False
+
+
 def _resolve_cached(name, grid, dtype, vmem_budget):
-    from repro.core.autotune import VMEM_BYTES, autotune_kernel
-    result = autotune_kernel(as_spec(name), grid, dtype=dtype,
-                             vmem_budget=vmem_budget or VMEM_BYTES)
-    return _freeze(result["knee"].params)
+    global _knees_dirty
+    key = (name, tuple(grid), dtype, vmem_budget)
+    tile = _KNEES.get(key)
+    if tile is None:
+        from repro.core.autotune import VMEM_BYTES, autotune_kernel
+        result = autotune_kernel(as_spec(name), grid, dtype=dtype,
+                                 vmem_budget=vmem_budget or VMEM_BYTES)
+        tile = _freeze(result["knee"].params)
+        _KNEES[key] = tile
+        _knees_dirty = True
+    return tile
+
+
+def knee_cache_path(checkpoint_dir) -> "Path":
+    """Canonical knee-cache location next to a checkpoint directory."""
+    from pathlib import Path
+    return Path(checkpoint_dir) / "knee_cache.json"
+
+
+def save_knee_cache(path) -> int:
+    """Write every knee resolved so far to `path` (JSON), MERGED with any
+    entries already in the file (in-memory knees win) — so a process that
+    only resolved a subset (or whose in-memory store was cleared by
+    `invalidate_caches`) never truncates knees persisted by earlier runs.
+    Returns the entry count. Cheap enough to call after each
+    serve/generate; skipping a no-op rewrite is the caller's choice via
+    `knees_dirty()`."""
+    global _knees_dirty
+    import json
+    from pathlib import Path
+    p = Path(path)
+    merged: dict[tuple, dict] = {}
+    if p.exists():
+        for e in json.loads(p.read_text()):
+            key = (e["kernel"], tuple(e["grid"]), e["dtype"],
+                   e["vmem_budget"])
+            merged[key] = dict(e["tile"])
+    merged.update({k: dict(t) for k, t in _KNEES.items()})
+    entries = [{"kernel": k[0], "grid": list(k[1]), "dtype": k[2],
+                "vmem_budget": k[3], "tile": t}
+               for k, t in sorted(merged.items(),
+                                  key=lambda kv: (kv[0][0], kv[0][1],
+                                                  kv[0][2], str(kv[0][3])))]
+    p.parent.mkdir(parents=True, exist_ok=True)
+    # atomic replace: a crash (or concurrent saver) mid-write must never
+    # leave a truncated file that breaks the next engine construction
+    import os
+    tmp = p.with_name(f".{p.name}.{os.getpid()}.tmp")
+    tmp.write_text(json.dumps(entries, indent=1))
+    os.replace(tmp, p)
+    _knees_dirty = False
+    return len(entries)
+
+
+def load_knee_cache(path) -> int:
+    """Load previously persisted knees (missing file -> 0). Loaded
+    entries pre-populate the resolver, so ``backend="auto"`` dispatches
+    skip the tuning sweep for shapes a previous run already resolved.
+    A malformed cache is a warning + re-tune, never a startup failure."""
+    import json
+    import warnings
+    from pathlib import Path
+    p = Path(path)
+    if not p.exists():
+        return 0
+    try:
+        entries = json.loads(p.read_text())
+        n = 0
+        for e in entries:
+            key = (e["kernel"], tuple(e["grid"]), e["dtype"],
+                   e["vmem_budget"])
+            _KNEES.setdefault(key, _freeze(e["tile"]))
+            n += 1
+        return n
+    except (ValueError, KeyError, TypeError) as err:
+        warnings.warn(f"ignoring malformed knee cache {p}: {err} "
+                      f"(knees will be re-tuned and the file rewritten)")
+        return 0
+
+
+def knees_dirty() -> bool:
+    """True when a knee was resolved since the last save_knee_cache."""
+    return _knees_dirty
 
 
 def invalidate_caches():
     """Drop cached jitted dispatches and resolved tiles; the registry calls
     this on (re-)registration so a reloaded spec takes effect."""
     _jitted.cache_clear()
-    _resolve_cached.cache_clear()
+    _KNEES.clear()
 
 
 # ---------------------------------------------------------------------------

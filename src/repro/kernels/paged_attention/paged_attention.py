@@ -15,6 +15,16 @@ block, indexed off the page table), ``head_block`` kv heads — and all
 their ``g = hq // hkv`` query heads — are reduced together. Slow-tier
 content dequantizes on load: fast pages store zeros in the quant pool and
 vice versa, so ``k = k_pages + k_quant * k_scale`` is exact either way.
+
+Layer-stacked pools: the serve layer keeps every layer's pages in one
+device-resident pool with a leading layer axis, so the fused decode step
+(one jitted graph over the whole layer stack) can scan over layers
+without slicing out per-layer copies. Passing 5-D ``(L, P, T, hkv, d)``
+pools plus a ``layer`` scalar selects the layer inside the BlockSpec
+index maps — the layer index rides in as a third scalar-prefetch operand,
+so it may be a traced value (e.g. the induction variable of an outer
+``lax.scan`` over the layer stack) and the kernel still only DMAs the
+named layer's pages.
 """
 from __future__ import annotations
 
@@ -29,14 +39,19 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _paged_kernel(pt_ref, len_ref, q_ref, *refs, ppb: int, t: int,
-                  scale: float):
+def _paged_kernel(*args, ppb: int, t: int, scale: float, stacked: bool):
+    if stacked:
+        _lyr_ref, pt_ref, len_ref, q_ref, *refs = args
+    else:
+        pt_ref, len_ref, q_ref, *refs = args
     ins = refs[:-4]
     o_ref, m_ref, l_ref, acc_ref = refs[-4:]
     bi = pl.program_id(0)
     ki = pl.program_id(2)
     nk = pl.num_programs(2)
     length = len_ref[bi]
+    # stacked pool blocks carry a leading singleton layer axis
+    page = (lambda r: r[0, 0]) if stacked else (lambda r: r[0])
 
     @pl.when(ki == 0)
     def _init():
@@ -50,12 +65,12 @@ def _paged_kernel(pt_ref, len_ref, q_ref, *refs, ppb: int, t: int,
         q = q_ref[0].astype(jnp.float32) * scale            # (hb, g, d)
         for j in range(ppb):
             kf, kq, ks, vf, vq, vs = ins[6 * j:6 * j + 6]
-            k = (kf[0].astype(jnp.float32)                  # (t, hb, d)
-                 + kq[0].astype(jnp.float32)
-                 * ks[0].astype(jnp.float32)[..., None])
-            v = (vf[0].astype(jnp.float32)
-                 + vq[0].astype(jnp.float32)
-                 * vs[0].astype(jnp.float32)[..., None])
+            k = (page(kf).astype(jnp.float32)               # (t, hb, d)
+                 + page(kq).astype(jnp.float32)
+                 * page(ks).astype(jnp.float32)[..., None])
+            v = (page(vf).astype(jnp.float32)
+                 + page(vq).astype(jnp.float32)
+                 * page(vs).astype(jnp.float32)[..., None])
             s = jax.lax.dot_general(q, k, (((2,), (2,)), ((0,), (1,))),
                                     preferred_element_type=jnp.float32)
             pos = (ki * ppb + j) * t + jax.lax.broadcasted_iota(
@@ -79,14 +94,21 @@ def _paged_kernel(pt_ref, len_ref, q_ref, *refs, ppb: int, t: int,
 
 
 def paged_attention_pallas(q, k_pages, v_pages, k_quant, v_quant, k_scale,
-                           v_scale, page_table, lengths, *,
+                           v_scale, page_table, lengths, layer=None, *,
                            pages_per_block: int = 4, head_block: int = 1,
                            softmax_scale=None, interpret: bool = False):
-    """q: (b, hq, d); {k,v}_pages / {k,v}_quant: (P, T, hkv, d);
-    {k,v}_scale: (P, T, hkv); page_table: (b, slots) int32; lengths: (b,)
-    int32 (>= 1 per sequence). Returns (b, hq, d)."""
+    """q: (b, hq, d); {k,v}_pages / {k,v}_quant: (P, T, hkv, d) — or
+    layer-stacked (L, P, T, hkv, d) with ``layer`` a scalar int32 (may be
+    traced) naming the layer to attend; {k,v}_scale: (P, T, hkv) or
+    (L, P, T, hkv); page_table: (b, slots) int32; lengths: (b,) int32
+    (>= 1 per sequence). Returns (b, hq, d)."""
+    stacked = k_pages.ndim == 5
+    if stacked and layer is None:
+        raise ValueError("layer-stacked pools need a layer index")
+    if not stacked and layer is not None:
+        raise ValueError("layer index given but pools are not layer-stacked")
     b, hq, d = q.shape
-    _, t, hkv, _ = k_pages.shape
+    t, hkv = k_pages.shape[-3], k_pages.shape[-2]
     slots = page_table.shape[1]
     g = hq // hkv
     ppb = min(pages_per_block, slots)
@@ -97,18 +119,39 @@ def paged_attention_pallas(q, k_pages, v_pages, k_quant, v_quant, k_scale,
     qg = q.reshape(b, hkv, g, d)
     grid = (b, hkv // hb, slots // ppb)
 
-    def q_map(bi, hi, ki, pt, ln):
-        return (bi, hi, 0, 0)
+    if stacked:
+        def q_map(bi, hi, ki, lyr, pt, ln):
+            return (bi, hi, 0, 0)
 
-    def pool_spec(j):
-        return pl.BlockSpec(
-            (1, t, hb, d),
-            lambda bi, hi, ki, pt, ln: (pt[bi, ki * ppb + j], 0, hi, 0))
+        def pool_spec(j):
+            return pl.BlockSpec(
+                (1, 1, t, hb, d),
+                lambda bi, hi, ki, lyr, pt, ln:
+                    (lyr[0], pt[bi, ki * ppb + j], 0, hi, 0))
 
-    def scale_spec(j):
-        return pl.BlockSpec(
-            (1, t, hb),
-            lambda bi, hi, ki, pt, ln: (pt[bi, ki * ppb + j], 0, hi))
+        def scale_spec(j):
+            return pl.BlockSpec(
+                (1, 1, t, hb),
+                lambda bi, hi, ki, lyr, pt, ln:
+                    (lyr[0], pt[bi, ki * ppb + j], 0, hi))
+
+        scalars = (jnp.asarray(layer, jnp.int32).reshape(1),
+                   page_table.astype(jnp.int32), lengths.astype(jnp.int32))
+    else:
+        def q_map(bi, hi, ki, pt, ln):
+            return (bi, hi, 0, 0)
+
+        def pool_spec(j):
+            return pl.BlockSpec(
+                (1, t, hb, d),
+                lambda bi, hi, ki, pt, ln: (pt[bi, ki * ppb + j], 0, hi, 0))
+
+        def scale_spec(j):
+            return pl.BlockSpec(
+                (1, t, hb),
+                lambda bi, hi, ki, pt, ln: (pt[bi, ki * ppb + j], 0, hi))
+
+        scalars = (page_table.astype(jnp.int32), lengths.astype(jnp.int32))
 
     in_specs = [pl.BlockSpec((1, hb, g, d), q_map)]
     operands = [qg]
@@ -118,7 +161,7 @@ def paged_attention_pallas(q, k_pages, v_pages, k_quant, v_quant, k_scale,
         operands += [k_pages, k_quant, k_scale, v_pages, v_quant, v_scale]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=len(scalars),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, hb, g, d), q_map),
@@ -128,11 +171,12 @@ def paged_attention_pallas(q, k_pages, v_pages, k_quant, v_quant, k_scale,
             pltpu.VMEM((hb, g, d), jnp.float32),
         ],
     )
-    kernel = functools.partial(_paged_kernel, ppb=ppb, t=t, scale=scale)
+    kernel = functools.partial(_paged_kernel, ppb=ppb, t=t, scale=scale,
+                               stacked=stacked)
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
         interpret=interpret,
-    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32), qg, *operands[1:])
+    )(*scalars, qg, *operands[1:])
     return out.reshape(b, hq, d)

@@ -23,10 +23,24 @@ def dequantize_pool(pages, quant, scale):
 
 
 def paged_attention(q, k_pages, v_pages, k_quant, v_quant, k_scale, v_scale,
-                    page_table, lengths, *, softmax_scale=None):
+                    page_table, lengths, layer=None, *, softmax_scale=None):
     """q: (b, hq, d); {k,v}_pages: (P, T, hkv, d) float; {k,v}_quant:
     (P, T, hkv, d) int8; {k,v}_scale: (P, T, hkv) float; page_table:
-    (b, slots) int32; lengths: (b,) int32. Returns (b, hq, d)."""
+    (b, slots) int32; lengths: (b,) int32. Returns (b, hq, d).
+
+    Layer-stacked pools — (L, P, T, hkv, d) plus a scalar ``layer``
+    (possibly traced) — slice out the named layer and reduce to the 4-D
+    case, matching the Pallas kernel's stacked mode."""
+    if k_pages.ndim == 5:
+        if layer is None:
+            raise ValueError("layer-stacked pools need a layer index")
+        lyr = jnp.asarray(layer, jnp.int32).reshape(())
+        take = lambda a: jnp.take(a, lyr, axis=0)  # noqa: E731
+        k_pages, v_pages, k_quant, v_quant, k_scale, v_scale = (
+            take(a) for a in (k_pages, v_pages, k_quant, v_quant,
+                              k_scale, v_scale))
+    elif layer is not None:
+        raise ValueError("layer index given but pools are not layer-stacked")
     b, hq, d = q.shape
     _, t, hkv, _ = k_pages.shape
     slots = page_table.shape[1]

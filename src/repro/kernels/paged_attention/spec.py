@@ -85,9 +85,12 @@ def example_inputs(shape=None, dtype=np.float32, seed: int = 0) -> dict:
 
 
 def _grid_of(q, k_pages, v_pages, k_quant, v_quant, k_scale, v_scale,
-             page_table, lengths):
+             page_table, lengths, *layer):
+    """Handles both the flat (P, T, hkv, d) pools and the serve layer's
+    layer-stacked (L, P, T, hkv, d) pools with a trailing layer operand:
+    per-layer capacity is the grid's page count either way."""
     b, hq, d = q.shape
-    pages, t, hkv, _ = k_pages.shape
+    pages, t, hkv = k_pages.shape[-4], k_pages.shape[-3], k_pages.shape[-2]
     return b, pages, t, page_table.shape[1], hq, hkv, d
 
 

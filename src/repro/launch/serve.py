@@ -40,6 +40,16 @@ def main():
     ap.add_argument("--sibyl", action="store_true",
                     help="Sibyl DQN tier placement (reward: gather latency"
                          " + slow-hit penalty)")
+    ap.add_argument("--decode-mode", default="fused",
+                    choices=("fused", "eager", "numpy"),
+                    help="fused = one jitted device-resident step per token"
+                         " (default); eager = per-layer reference path;"
+                         " numpy = host-gather fallback")
+    ap.add_argument("--knee-cache", default=None, metavar="PATH",
+                    help="JSON cache of backend='auto' knee points (e.g. "
+                         "<checkpoint-dir>/knee_cache.json): loaded at "
+                         "engine construction, saved after serving, so "
+                         "restarts skip re-tuning")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -55,7 +65,8 @@ def main():
         pool = PagedKVPool(page_tokens=args.page_tokens,
                            fast_capacity_pages=args.fast_pages,
                            placement_policy=policy)
-    eng = ServeEngine(cfg, kv_pool=pool)
+    eng = ServeEngine(cfg, kv_pool=pool, decode_mode=args.decode_mode,
+                      knee_cache=args.knee_cache)
     rng = np.random.default_rng(0)
     reqs = [Request(rng.integers(0, cfg.vocab_size, size=args.prompt_len)
                     .astype(np.int32), args.new_tokens)

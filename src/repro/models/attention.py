@@ -150,8 +150,10 @@ def decode_qkv(cfg: ModelConfig, p, x, pos):
     """`roped_qkv` for the decode-step token(s) at absolute position
     `pos` — a scalar shared by the batch (lockstep decode) or a (b,)
     array of per-sequence positions (continuous batching, where admitted
-    requests sit at different depths) — shared by the dense cache path
-    and the serve layer's paged decode path."""
+    requests sit at different depths). Shared by the dense cache path and
+    the serve layer's paged decode: the fused serving step traces this
+    inside a `lax.scan` over stacked layer params with traced `pos`, so
+    it must stay free of host-side branching on values."""
     b, s, _ = x.shape
     pos = jnp.asarray(pos, jnp.int32)
     if pos.ndim == 0:

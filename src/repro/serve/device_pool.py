@@ -7,18 +7,30 @@ jitted kernel dispatch instead of re-stacking the whole pool in host
 numpy every step (the thesis' data-movement argument applied to our own
 serving hot path: keep the computation next to the resident data).
 
+All layers share ONE pool with a leading layer axis on its six arrays:
+``(num_layers, capacity, page_tokens, hkv, hd)``. A *slot* is
+layer-uniform — the same KV token range lives at slot ``s`` of every
+layer — because the paged structure is identical across layers (each
+decode token appends one row to every layer's tail, prefill writes the
+same page count per layer, and prefix sharing is layer-consistent). One
+page *group* (the per-layer pool pids of one logical page, keyed by its
+layer-0 pid) therefore occupies one slot, and a single page table per
+decode step serves the whole layer stack — the layout the fused jitted
+decode step scans over.
+
 Both tier representations share one slot-id space, exactly the layout the
-paged-attention kernel consumes: a fast slot holds float K/V and zeros in
-the int8 + scale arrays, a slow slot the reverse, so ``k = k_pages +
-k_quant * k_scale`` is exact either way. A slot is written in full on
-(re)assignment — a recycled slot can never leak a previous occupant's
-other-tier content into the sum.
+paged-attention kernel consumes: a fast (layer, slot) cell holds float
+K/V and zeros in the int8 + scale arrays, a slow cell the reverse, so
+``k = k_pages + k_quant * k_scale`` is exact either way. A cell is
+written in full on (re)assignment — a recycled slot can never leak a
+previous occupant's other-tier content into the sum. Tier is per
+(layer, page): one group may mix fast and slow cells across layers.
 
 Sync is incremental and versioned: a page is rewritten only when it is
 new to the mirror or its `Page.version` changed (LRU demotion bumps it).
 Write batches are padded to the next power of two (duplicate trailing
-slot indices — last write wins on identical data) so jit caches a bounded
-set of scatter shapes as the pool grows.
+indices — last write wins on identical data) so jit caches a bounded set
+of scatter shapes as the pool grows.
 """
 from __future__ import annotations
 
@@ -33,34 +45,46 @@ import numpy as np
 # buffers, so a write is an in-place index update (O(rows written)), not a
 # full-pool copy (O(capacity)). Callers must always adopt the returned
 # arrays — `DevicePagePool` reassigns `self.arrays` from every call and
-# never touches the donated objects again.
+# never touches the donated objects again. All scatters flatten the
+# leading (layer, slot[, row]) axes to one index so XLA performs them
+# in place on the donated buffer (the multi-axis `.at[l, s]` form lowers
+# to a copying gather-scatter).
+def _flat2(a):
+    return a.reshape((a.shape[0] * a.shape[1],) + a.shape[2:])
+
+
 @functools.lru_cache(maxsize=None)
 def _jit_write_fast():
-    def f(kf, vf, kq, vq, ks, vs, slots, k, v):
-        return (kf.at[slots].set(k), vf.at[slots].set(v),
-                kq.at[slots].set(0), vq.at[slots].set(0),
-                ks.at[slots].set(0.0), vs.at[slots].set(0.0))
+    def f(kf, vf, kq, vq, ks, vs, idx, k, v):
+        return (_flat2(kf).at[idx].set(k).reshape(kf.shape),
+                _flat2(vf).at[idx].set(v).reshape(vf.shape),
+                _flat2(kq).at[idx].set(0).reshape(kq.shape),
+                _flat2(vq).at[idx].set(0).reshape(vq.shape),
+                _flat2(ks).at[idx].set(0.0).reshape(ks.shape),
+                _flat2(vs).at[idx].set(0.0).reshape(vs.shape))
     return jax.jit(f, donate_argnums=(0, 1, 2, 3, 4, 5))
 
 
 @functools.lru_cache(maxsize=None)
 def _jit_write_slow():
-    def f(kf, vf, kq, vq, ks, vs, slots, kq_new, ks_new, vq_new, vs_new):
-        return (kf.at[slots].set(0.0), vf.at[slots].set(0.0),
-                kq.at[slots].set(kq_new), vq.at[slots].set(vq_new),
-                ks.at[slots].set(ks_new), vs.at[slots].set(vs_new))
+    def f(kf, vf, kq, vq, ks, vs, idx, kq_new, ks_new, vq_new, vs_new):
+        return (_flat2(kf).at[idx].set(0.0).reshape(kf.shape),
+                _flat2(vf).at[idx].set(0.0).reshape(vf.shape),
+                _flat2(kq).at[idx].set(kq_new).reshape(kq.shape),
+                _flat2(vq).at[idx].set(vq_new).reshape(vq.shape),
+                _flat2(ks).at[idx].set(ks_new).reshape(ks.shape),
+                _flat2(vs).at[idx].set(vs_new).reshape(vs.shape))
     return jax.jit(f, donate_argnums=(0, 1, 2, 3, 4, 5))
 
 
 @functools.lru_cache(maxsize=None)
 def _jit_write_rows():
-    # single-axis scatter on a flattened (slot, row) index: XLA performs it
-    # in-place on the donated buffer, where the two-axis `.at[slots, rows]`
-    # form lowers to a copying gather-scatter
-    def f(kf, vf, slots, rows, k_rows, v_rows):
-        c, t = kf.shape[0], kf.shape[1]
-        idx = slots * t + rows
-        flat = (c * t,) + kf.shape[2:]
+    # single-axis scatter on a flattened (layer, slot, row) index; `layer`
+    # is an operand so one compiled scatter serves the whole layer stack
+    def f(kf, vf, layer, slots, rows, k_rows, v_rows):
+        c, t = kf.shape[1], kf.shape[2]
+        idx = (layer * c + slots) * t + rows
+        flat = (kf.shape[0] * c * t,) + kf.shape[3:]
 
         def upd(a, x):
             return a.reshape(flat).at[idx].set(x).reshape(a.shape)
@@ -86,41 +110,46 @@ def _pad_pow2(idx: np.ndarray, *stacks):
 
 
 class DevicePagePool:
-    """Slot-addressed device arrays mirroring a `PagedKVPool`.
+    """Layer-stacked, slot-addressed device arrays mirroring a
+    `PagedKVPool` across the whole layer stack.
 
-    ``arrays`` is the kernel's pool-argument tuple ``(k_pages, v_pages,
-    k_quant, v_quant, k_scale, v_scale)``; `sync` keeps it current for a
-    set of page ids, `write_rows` streams decode-token rows into tail
-    slots, and released slots are recycled through a free list.
+    ``arrays`` is the kernel's stacked pool-argument tuple ``(k_pages,
+    v_pages, k_quant, v_quant, k_scale, v_scale)`` with a leading layer
+    axis; `sync` keeps it current for a set of page *groups* (the
+    per-layer pids of one logical page), `write_rows` streams decode-token
+    rows into one layer of a tail slot, and released slots are recycled
+    through a free list.
     """
 
-    def __init__(self, page_tokens: int, hkv: int, hd: int,
+    def __init__(self, num_layers: int, page_tokens: int, hkv: int, hd: int,
                  init_slots: int = 8, dtype=jnp.float32):
+        self.num_layers = num_layers
         self.t, self.hkv, self.hd = page_tokens, hkv, hd
         self.dtype = dtype
         self.capacity = 1
         while self.capacity < max(8, init_slots):
             self.capacity *= 2
-        c, t = self.capacity, page_tokens
+        ll, c, t = num_layers, self.capacity, page_tokens
         self.arrays = (
-            jnp.zeros((c, t, hkv, hd), dtype),      # k_pages (fast float)
-            jnp.zeros((c, t, hkv, hd), dtype),      # v_pages
-            jnp.zeros((c, t, hkv, hd), jnp.int8),   # k_quant (slow int8)
-            jnp.zeros((c, t, hkv, hd), jnp.int8),   # v_quant
-            jnp.zeros((c, t, hkv), dtype),          # k_scale
-            jnp.zeros((c, t, hkv), dtype),          # v_scale
+            jnp.zeros((ll, c, t, hkv, hd), dtype),      # k_pages (fast float)
+            jnp.zeros((ll, c, t, hkv, hd), dtype),      # v_pages
+            jnp.zeros((ll, c, t, hkv, hd), jnp.int8),   # k_quant (slow int8)
+            jnp.zeros((ll, c, t, hkv, hd), jnp.int8),   # v_quant
+            jnp.zeros((ll, c, t, hkv), dtype),          # k_scale
+            jnp.zeros((ll, c, t, hkv), dtype),          # v_scale
         )
         self._free = list(range(c - 1, -1, -1))     # pop() -> lowest first
-        self.slot_of: dict[int, int] = {}           # pool pid -> slot
+        self.slot_of: dict[int, int] = {}           # group key pid -> slot
         self._synced: dict[int, int] = {}           # pid -> synced version
         self._dirty: set[int] = set()               # slots ever written
         self.writes = 0     # device scatter calls (bench/test instrumentation)
+        self.reads = 0      # device->host pulls (fill readbacks)
 
     # -- slots ---------------------------------------------------------------
     def _grow(self):
         old = self.capacity
         self.capacity *= 2
-        pad = [(0, old)] + [(0, 0)] * 3
+        pad = [(0, 0), (0, old)] + [(0, 0)] * 3
         self.arrays = tuple(jnp.pad(a, pad[:a.ndim]) for a in self.arrays)
         self._free.extend(range(self.capacity - 1, old - 1, -1))
 
@@ -133,37 +162,49 @@ class DevicePagePool:
         self._free.append(slot)
 
     def release_pid(self, pid: int):
-        slot = self.slot_of.pop(pid, None)
+        """Forget a destroyed pool page. Only the group-key (layer-0) pid
+        owns the slot; other layers' pids just drop their sync record."""
         self._synced.pop(pid, None)
+        slot = self.slot_of.pop(pid, None)
         if slot is not None:
             self._free.append(slot)
 
-    def adopt(self, pid: int, slot: int, version: int, synced: bool):
-        """Hand an already-written slot (a filled tail page) to `pid`.
-        `synced=False` leaves it dirty so the next sync rewrites in place
-        (e.g. the pool placed the filled page in the slow tier)."""
-        self.slot_of[pid] = slot
-        if synced:
-            self._synced[pid] = version
+    def adopt(self, group, slot: int, pool):
+        """Hand an already-written tail slot to a page group that just
+        filled. Per layer: a fast placement's device cell already holds
+        the full float rows, so it is marked synced; a slow placement
+        stays dirty and the next sync rewrites the cell in place (int8 +
+        zeroed float)."""
+        self.slot_of[group[0]] = slot
+        for pid in group:
+            page = pool.pages[pid]
+            if page.tier == "fast":
+                self._synced[pid] = page.version
 
     # -- content writes ------------------------------------------------------
     def zero_slot(self, slot: int):
-        """Full-slot clear before streaming tail rows into a recycled slot
-        (stale other-tier content would otherwise alias into the sum).
-        Slots never written since allocation are already zero — skipped."""
+        """Full clear of a slot across every layer before streaming tail
+        rows into it (stale other-tier content from a previous occupant
+        would otherwise alias into the dequant sum). Slots never written
+        since allocation are already zero — skipped."""
         if slot not in self._dirty:
             return
-        slots = np.array([slot], np.int32)
-        z = np.zeros((1, self.t, self.hkv, self.hd), np.float32)
-        self.arrays = _jit_write_fast()(*self.arrays, slots, z, z)
+        ll = self.num_layers
+        idx = np.arange(ll, dtype=np.int32) * self.capacity + slot
+        z = np.zeros((ll, self.t, self.hkv, self.hd), np.float32)
+        self.arrays = _jit_write_fast()(*self.arrays, idx, z, z)
         self._dirty.discard(slot)
         self.writes += 1
 
-    def write_rows(self, slots: np.ndarray, rows: np.ndarray, k_rows, v_rows):
-        """Batched decode-token append: one scatter per layer per step for
-        the whole active batch (fixed shapes — dead rows target a trash
-        slot so the compiled scatter never changes shape)."""
+    def write_rows(self, layer: int, slots: np.ndarray, rows: np.ndarray,
+                   k_rows, v_rows):
+        """Batched decode-token append at one layer: one scatter for the
+        whole active batch (fixed shapes — dead rows target a trash slot
+        so the compiled scatter never changes shape). Used by the eager
+        reference path and prefill-tail writes; the fused step performs
+        the same scatter inside its own jitted graph."""
         kf, vf = _jit_write_rows()(self.arrays[0], self.arrays[1],
+                                   jnp.int32(layer),
                                    jnp.asarray(slots), jnp.asarray(rows),
                                    jnp.asarray(k_rows, self.arrays[0].dtype),
                                    jnp.asarray(v_rows, self.arrays[0].dtype))
@@ -171,41 +212,65 @@ class DevicePagePool:
         self._dirty.update(int(s) for s in slots)
         self.writes += 1
 
+    def read_slot(self, slot: int):
+        """Pull one slot's float rows for every layer back to the host —
+        (num_layers, t, hkv, hd) each for K and V. Used once per *filled*
+        page (not per step) by the fused path to hand the page contents to
+        the host pool; 2 device->host transfers."""
+        self.reads += 2
+        return (np.asarray(self.arrays[0][:, slot]),
+                np.asarray(self.arrays[1][:, slot]))
+
     # -- sync ----------------------------------------------------------------
-    def sync(self, pool, pids):
-        """Bring the mirror current for `pids`: allocate slots for pages new
-        to the mirror, rewrite pages whose version changed (demotions).
-        Batched into at most one fast + one slow scatter call."""
-        fast_w, slow_w = [], []
-        for pid in dict.fromkeys(pids):       # preserve order, dedupe
-            page = pool.pages[pid]
-            slot = self.slot_of.get(pid)
-            if slot is None:
-                slot = self.alloc()
-                self.slot_of[pid] = slot
-            elif self._synced.get(pid) == page.version:
+    def sync(self, pool, groups):
+        """Bring the mirror current for an iterable of page groups (each a
+        tuple of per-layer pids): allocate a slot for groups new to the
+        mirror, rewrite (layer, slot) cells whose page version changed
+        (demotions). Batched into at most one fast + one slow scatter."""
+        # allocate every slot FIRST: alloc() may _grow() (capacity doubles),
+        # and the flattened (layer * capacity + slot) scatter indices must
+        # be computed against the final capacity or every layer > 0 write
+        # would land in the wrong cell of the grown arrays
+        fresh = []
+        seen = set()
+        for group in groups:
+            key = group[0]
+            if key in seen:
                 continue
-            if page.tier == "fast":
-                k, v = page.data
-                fast_w.append((slot, k, v))
-            else:
-                (kq, ks), (vq, vs) = page.data
-                slow_w.append((slot, kq, ks[..., 0], vq, vs[..., 0]))
-            self._synced[pid] = page.version
+            seen.add(key)
+            fresh.append(group)
+            if key not in self.slot_of:
+                self.slot_of[key] = self.alloc()
+        fast_w, slow_w = [], []
+        c = self.capacity
+        for group in fresh:
+            slot = self.slot_of[group[0]]
+            for layer, pid in enumerate(group):
+                page = pool.pages[pid]
+                if self._synced.get(pid) == page.version:
+                    continue
+                idx = layer * c + slot
+                if page.tier == "fast":
+                    k, v = page.data
+                    fast_w.append((idx, k, v))
+                else:
+                    (kq, ks), (vq, vs) = page.data
+                    slow_w.append((idx, kq, ks[..., 0], vq, vs[..., 0]))
+                self._synced[pid] = page.version
         if fast_w:
-            slots = np.array([w[0] for w in fast_w], np.int32)
+            idx = np.array([w[0] for w in fast_w], np.int32)
             k = np.stack([w[1] for w in fast_w]).astype(np.float32)
             v = np.stack([w[2] for w in fast_w]).astype(np.float32)
-            slots, k, v = _pad_pow2(slots, k, v)
-            self.arrays = _jit_write_fast()(*self.arrays, slots, k, v)
-            self._dirty.update(int(s) for s in slots)
+            idx, k, v = _pad_pow2(idx, k, v)
+            self.arrays = _jit_write_fast()(*self.arrays, idx, k, v)
+            self._dirty.update(int(i) % c for i in idx)
             self.writes += 1
         if slow_w:
-            slots = np.array([w[0] for w in slow_w], np.int32)
+            idx = np.array([w[0] for w in slow_w], np.int32)
             stacks = [np.stack([w[i] for w in slow_w]) for i in range(1, 5)]
-            slots, kq, ks, vq, vs = _pad_pow2(slots, *stacks)
-            self.arrays = _jit_write_slow()(*self.arrays, slots, kq,
+            idx, kq, ks, vq, vs = _pad_pow2(idx, *stacks)
+            self.arrays = _jit_write_slow()(*self.arrays, idx, kq,
                                             ks.astype(np.float32), vq,
                                             vs.astype(np.float32))
-            self._dirty.update(int(s) for s in slots)
+            self._dirty.update(int(i) % c for i in idx)
             self.writes += 1

@@ -1,6 +1,6 @@
 """Serving engines over one model + params:
 
-- `generate` — static-batch fallback: groups requests into a fixed batch,
+- `generate` — static-batch path: groups requests into a fixed batch,
   prefills the (left-padded) prompts, then decodes in lockstep. With a
   `PagedKVPool` attached, decode attention is served from real KV pages
   through the registry's paged-attention kernel (tiered int8 slow pages
@@ -11,6 +11,13 @@
   ``max_new_tokens`` or ``eos_token``) frees the request's pool pages, so
   the pool tracks the live working set. Greedy tokens are identical to
   running each request alone through the static-batch paged path.
+
+Paged decode runs in one of three modes (``decode_mode``): ``fused``
+(default) executes the whole per-token step as a single jitted,
+device-resident graph — two host/device crossings per token, independent
+of depth; ``eager`` is the per-layer reference path the fused graph is
+tested against; ``numpy`` assembles pool arrays on the host each step
+(portability fallback). See `serve.paged_decode`.
 """
 from __future__ import annotations
 
@@ -22,10 +29,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kernels import api
 from repro.models import Model
 from repro.models.layers import lm_head_apply, rms_norm
 from repro.serve.kvcache import PagedKVPool, pad_caches
-from repro.serve.paged_decode import (PagedKVState, extract_prefill_pages,
+from repro.serve.paged_decode import (MODES, PagedKVState, build_fused_step,
+                                      extract_prefill_pages,
                                       paged_decode_step, supports_paged)
 from repro.serve.scheduler import (Request, Scheduler,  # noqa: F401 (re-export)
                                    prefix_page_hashes)
@@ -52,22 +61,38 @@ class _Active:
 
 class ServeEngine:
     """Engine over one model + params; see module docstring for the two
-    decode paths. Cache capacity = prompt_len + max_new tokens."""
+    decode paths. Cache capacity = prompt_len + max_new tokens.
+
+    ``knee_cache`` (a JSON path, canonically
+    ``api.knee_cache_path(checkpoint_dir)``) persists the tiles resolved
+    by ``backend="auto"`` across restarts: loaded at construction, saved
+    after each generate/serve that resolved something new — a serving
+    restart skips the tuning sweep for every shape it already saw."""
 
     def __init__(self, cfg: ModelConfig, params=None, seed: int = 0,
                  kv_pool: Optional[PagedKVPool] = None,
-                 device_gather: bool = True):
+                 device_gather: bool = True,
+                 decode_mode: Optional[str] = None,
+                 knee_cache=None):
         self.cfg = cfg
         self.model = Model(cfg)
         self.params = params if params is not None else \
             self.model.init(jax.random.PRNGKey(seed))
         self.kv_pool = kv_pool
-        self.device_gather = device_gather
+        if decode_mode is None:
+            decode_mode = "fused" if device_gather else "numpy"
+        if decode_mode not in MODES:
+            raise ValueError(f"decode_mode {decode_mode!r} not in {MODES}")
+        self.decode_mode = decode_mode
+        self.knee_cache = knee_cache
+        if knee_cache is not None:
+            api.load_knee_cache(knee_cache)
         self._next_seq = 0           # pool seq ids are engine-lifetime unique
         self._decode = jax.jit(self.model.forward_decode,
                                donate_argnums=2)
         self._prefill = jax.jit(self.model.forward_prefill)
         self._prefill_all = jax.jit(self._prefill_all_positions)
+        self._fused_cache: dict = {}
         self.stats = {"prefill_s": 0.0, "decode_s": 0.0, "tokens": 0,
                       "decode_steps": 0}
 
@@ -97,8 +122,26 @@ class ServeEngine:
                 f"{self.cfg.name}: paged serving needs a "
                 f"global-attention stack")
 
+    def _new_state(self, capacity: int, batch_hint: int) -> PagedKVState:
+        return PagedKVState(self.kv_pool, capacity, self.cfg.num_layers,
+                            self.cfg.num_kv_heads, self.cfg.head_dim,
+                            mode=self.decode_mode, batch_hint=batch_hint)
+
+    def _fused_step_fn(self, slots: int, greedy: bool, temperature: float):
+        key = (slots, greedy, float(temperature))
+        fn = self._fused_cache.get(key)
+        if fn is None:
+            fn = build_fused_step(self.model, slots, greedy=greedy,
+                                  temperature=temperature)
+            self._fused_cache[key] = fn
+        return fn
+
+    def _maybe_save_knees(self):
+        if self.knee_cache is not None and api.knees_dirty():
+            api.save_knee_cache(self.knee_cache)
+
     # ------------------------------------------------------------------
-    # Static lockstep batch (fallback path)
+    # Static lockstep batch
     # ------------------------------------------------------------------
     def generate(self, requests: list[Request], greedy: bool = True,
                  temperature: float = 1.0, seed: int = 0,
@@ -132,10 +175,7 @@ class ServeEngine:
             # remainder buffered until decode fills it
             seq_ids = list(range(self._next_seq, self._next_seq + b))
             self._next_seq += b
-            state = PagedKVState(self.kv_pool, cap, self.cfg.num_kv_heads,
-                                 self.cfg.head_dim,
-                                 device_resident=self.device_gather,
-                                 batch_hint=b)
+            state = self._new_state(cap, batch_hint=b)
             extract_prefill_pages(self.model, caches, state, seq_ids)
         else:
             caches = pad_caches(self.model, caches, cap, plen)
@@ -149,6 +189,9 @@ class ServeEngine:
 
         observe = getattr(self.kv_pool.policy, "observe", None) \
             if paged else None
+        fused = paged and self.decode_mode == "fused"
+        step_fn = self._fused_step_fn(state.slots, greedy, temperature) \
+            if fused else None
         t0 = time.time()
         for step in range(max_new - 1):
             pos = plen + step
@@ -156,9 +199,19 @@ class ServeEngine:
                 hits0 = (self.kv_pool.stats["fast_hits"],
                          self.kv_pool.stats["slow_hits"])
                 g0 = state.gather_s
-                logits = paged_decode_step(self.model, self.params,
-                                           np.asarray(tok), state,
-                                           seq_ids, pos)
+                if fused:
+                    # steady state: one int32 control upload, one sampled-
+                    # token download — `tok` never leaves the device
+                    key, sub = jax.random.split(key)
+                    tok_host, tok = state.run_fused(step_fn, self.params,
+                                                    tok, seq_ids, pos, sub)
+                else:
+                    logits = paged_decode_step(self.model, self.params,
+                                               np.asarray(tok), state,
+                                               seq_ids, pos)
+                    key, sub = jax.random.split(key)
+                    tok = self._sample(logits, greedy, temperature, sub)
+                    tok_host = np.asarray(tok)
                 if observe is not None:
                     observe(state.gather_s - g0,
                             self.kv_pool.stats["fast_hits"] - hits0[0],
@@ -167,16 +220,21 @@ class ServeEngine:
                 logits, caches = self._decode(
                     self.params, {"tokens": tok[:, None]}, caches,
                     jnp.int32(pos))
-            key, sub = jax.random.split(key)
-            tok = self._sample(logits, greedy, temperature, sub)
+                key, sub = jax.random.split(key)
+                tok = self._sample(logits, greedy, temperature, sub)
+                tok_host = np.asarray(tok)
             for i in range(b):
-                outs[i].append(int(tok[i]))
+                outs[i].append(int(tok_host[i]))
             self.stats["decode_steps"] += 1
         self.stats["decode_s"] += time.time() - t0
-        self.stats["tokens"] += sum(r.max_new_tokens for r in requests)
-        if paged and free_pages:
-            for seq in seq_ids:
-                state.free_seq(seq)
+        if paged:
+            # counter snapshot only — holding the state itself would pin
+            # the batch's device pool arrays for the engine's lifetime
+            self.last_transfers = state.transfer_counts()
+            if free_pages:
+                for seq in seq_ids:
+                    state.free_seq(seq)
+        self._maybe_save_knees()
 
         def trim(o, r):
             o = o[:r.max_new_tokens]
@@ -184,7 +242,12 @@ class ServeEngine:
                 o = o[:o.index(r.eos_token) + 1]   # eos inclusive, as serve
             return np.array(o)
 
-        return [trim(o, r) for o, r in zip(outs, requests)]
+        results = [trim(o, r) for o, r in zip(outs, requests)]
+        # count what was actually produced per request (the lockstep batch
+        # itself runs max(max_new) - 1 steps; padded rows and post-eos
+        # tokens are not "tokens served") — matches serve()'s accounting
+        self.stats["tokens"] += sum(len(o) for o in results)
+        return results
 
     # ------------------------------------------------------------------
     # Continuous batching
@@ -209,13 +272,16 @@ class ServeEngine:
         for r in requests:
             sched.submit(r)
         cap = max(len(r.prompt) + r.max_new_tokens for r in requests)
-        state = PagedKVState(pool, cap, cfg.num_kv_heads, cfg.head_dim,
-                             device_resident=self.device_gather,
-                             batch_hint=max_active)
+        state = self._new_state(cap, batch_hint=max_active)
         rows: list[Optional[_Active]] = [None] * max_active
         results: list[Optional[np.ndarray]] = [None] * len(requests)
         key = jax.random.PRNGKey(seed)
         observe = getattr(pool.policy, "observe", None)
+        fused = self.decode_mode == "fused"
+        step_fn = self._fused_step_fn(state.slots, greedy, temperature) \
+            if fused else None
+        tok_dev = None          # device-resident (max_active,) last tokens
+        rows_dirty = True       # host-known token entered a row (admission)
 
         def finish(row_i: int, act: _Active):
             state.free_seq(act.seq)
@@ -227,6 +293,7 @@ class ServeEngine:
         def admit(key):
             # loop: an admitted request finishing at its very first token
             # frees its row + reservation, unblocking the queue head again
+            nonlocal rows_dirty
             while True:
                 batch = sched.admit()
                 if not batch:
@@ -261,6 +328,7 @@ class ServeEngine:
                     act = _Active(req, seq, plen, [tok])
                     row_i = rows.index(None)
                     rows[row_i] = act
+                    rows_dirty = True
                     if act.finished:
                         finish(row_i, act)
 
@@ -271,28 +339,47 @@ class ServeEngine:
                     raise RuntimeError("scheduler stalled with waiting "
                                        "requests and no active rows")
                 break
-            tokens = np.zeros(max_active, np.int32)
             pos = np.zeros(max_active, np.int32)
             seq_ids = [-1] * max_active
             for i, act in enumerate(rows):
                 if act is None:
                     continue
-                tokens[i] = act.outs[-1]
                 pos[i] = act.pos
                 seq_ids[i] = act.seq
             t0 = time.time()
             hits0 = (pool.stats["fast_hits"], pool.stats["slow_hits"])
             g0 = state.gather_s
-            logits = paged_decode_step(self.model, self.params, tokens,
-                                       state, seq_ids, pos)
+            if fused:
+                tok_in = tok_dev
+                if rows_dirty or tok_in is None:
+                    # an admission put a host-known first token in a row —
+                    # rebuild the token vector once (run_fused counts the
+                    # upload); steady-state steps feed the previous step's
+                    # device tokens back
+                    tok_in = np.zeros(max_active, np.int32)
+                    for i, act in enumerate(rows):
+                        if act is not None:
+                            tok_in[i] = act.outs[-1]
+                    rows_dirty = False
+                key, sub = jax.random.split(key)
+                toks, tok_dev = state.run_fused(step_fn, self.params,
+                                                tok_in, seq_ids, pos, sub)
+            else:
+                tokens = np.zeros(max_active, np.int32)
+                for i, act in enumerate(rows):
+                    if act is not None:
+                        tokens[i] = act.outs[-1]
+                logits = paged_decode_step(self.model, self.params, tokens,
+                                           state, seq_ids, pos)
+                key, sub = jax.random.split(key)
+                toks = np.asarray(self._sample(logits, greedy, temperature,
+                                               sub))
             self.stats["decode_s"] += time.time() - t0
             self.stats["decode_steps"] += 1
             if observe is not None:
                 observe(state.gather_s - g0,
                         pool.stats["fast_hits"] - hits0[0],
                         pool.stats["slow_hits"] - hits0[1])
-            key, sub = jax.random.split(key)
-            toks = self._sample(logits, greedy, temperature, sub)
             for i, act in enumerate(rows):
                 if act is None:
                     continue
@@ -301,6 +388,8 @@ class ServeEngine:
                 if act.finished:
                     finish(i, act)
         self.last_peak_active = sched.peak_active
+        self.last_transfers = state.transfer_counts()
+        self._maybe_save_knees()
         return results
 
     @staticmethod

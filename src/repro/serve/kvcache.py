@@ -183,11 +183,9 @@ class PagedKVPool:
         self._maybe_evict()
         return pid
 
-    def touch(self, pid: int) -> Page:
-        """Record an access (hit stats, LRU recency) and return the page
-        without dequantizing — the paged-attention gather wants the raw
-        tier representation (the kernel dequantizes slow pages on load)."""
-        self.clock += 1
+    def _touch_page(self, pid: int) -> Page:
+        """Per-page access bookkeeping (hit stats, LRU recency, recorder)
+        at the current clock — the clock tick itself is the caller's."""
         page = self.pages[pid]
         page.access_count += 1
         page.last_access = self.clock
@@ -198,6 +196,24 @@ class PagedKVPool:
             self.stats["slow_hits"] += 1
         self._record(page, is_write=False)
         return page
+
+    def touch(self, pid: int) -> Page:
+        """Record an access (hit stats, LRU recency) and return the page
+        without dequantizing — the paged-attention gather wants the raw
+        tier representation (the kernel dequantizes slow pages on load)."""
+        self.clock += 1
+        return self._touch_page(pid)
+
+    def touch_many(self, pids) -> None:
+        """Batched access recording for one decode step: the clock ticks
+        ONCE for the whole step and every page the step reads is touched
+        once per (pid, step) — not once per layer — so the clock-phase
+        recency feature the Sibyl policy sees advances in decode steps,
+        not in (layers x pages) micro-events, and hit stats count each
+        page read once per token."""
+        self.clock += 1
+        for pid in dict.fromkeys(pids):
+            self._touch_page(pid)
 
     def get(self, pid: int):
         page = self.touch(pid)

@@ -1,4 +1,4 @@
-"""Paged decode: per-sequence page gather + registry paged-attention dispatch.
+"""Paged decode: page-pool KV state + the fused jitted decode step.
 
 This is where the thesis' two threads meet in the serving hot path: the
 KV cache lives in a tiered `PagedKVPool` (Sibyl's substrate — placement
@@ -7,16 +7,43 @@ it runs through ``api.run("paged_attention", ..., backend="auto")``, i.e.
 the NERO knee-point autotuner picks the page/head blocking from the
 kernel spec's cost model.
 
+Three decode modes over one `PagedKVState`:
+
+``fused``  (default) The whole per-token step — embed -> layer stack
+           (lax.scan over stacked group params, paged-attention kernel
+           inside, the step's K/V rows appended by donated in-place
+           scatters) -> final norm -> lm_head -> sample — is ONE jitted
+           graph over the layer-stacked device pool
+           (`serve.device_pool.DevicePagePool`). The host's job per token
+           shrinks to pure bookkeeping: build the page table + tail
+           indices before the step, bump tail counters (and hand filled
+           pages to the pool) after. Steady state crosses the
+           host/device boundary twice per token — one int32 control
+           upload, one sampled-token download — independent of
+           num_layers.
+
+``eager``  The pre-fusion reference: a python loop over layers, each
+           pulling its K/V rows to host numpy, scattering them back, and
+           dispatching the kernel per layer (~2 transfers per layer per
+           token). Same stacked device pool, same kernel — the fused path
+           is tested token-for-token against this one.
+
+``numpy``  No device pool: pool-shaped arrays are assembled in host
+           numpy each step (padded to stable shapes so the jitted kernel
+           recompiles only when the pool grows). Portability fallback and
+           the data-movement baseline in `bench_serve`.
+
 Page lifecycle (see serve/README.md):
-  prefill  -> full pages ``put`` per (sequence, layer), remainder buffered
-  decode   -> each step appends the new token's K/V to the tail buffer;
-              a filled tail becomes a pool ``put`` (tier decided there)
-  attend   -> ``gather`` builds the page table over the device-resident
-              pool arrays (`serve.device_pool`) and the paged kernel
-              consumes them; with ``device_resident=False`` it falls back
-              to assembling pool-shaped arrays in host numpy per step
-  retire   -> ``free_seq`` releases the request's pool pages (ref-counted;
-              prefix-shared pages survive) and recycles its device slots
+  prefill  -> full pages ``put`` per (sequence, layer), remainder rows
+              streamed into a layer-uniform tail slot
+  decode   -> each step appends the token's K/V rows (one per layer) to
+              the tail slot; a filled tail becomes a pool ``put`` per
+              layer (tier decided there), the slot adopted in place
+  attend   -> one page table per step serves every layer (slots are
+              layer-uniform); the kernel selects the layer from the
+              stacked pool via a scalar-prefetched index
+  retire   -> ``free_seq`` releases the request's pool pages (ref-
+              counted; prefix-shared pages survive) and device slots
 """
 from __future__ import annotations
 
@@ -34,6 +61,8 @@ from repro.models.transformer import mlp_tail
 from repro.serve.device_pool import DevicePagePool
 from repro.serve.kvcache import PagedKVPool
 
+MODES = ("fused", "eager", "numpy")
+
 
 def _next_pow2(n: int) -> int:
     p = 1
@@ -43,162 +72,311 @@ def _next_pow2(n: int) -> int:
 
 
 class PagedKVState:
-    """Pool-backed KV state for a decode batch: the pool holds full pages,
-    a per-(sequence, layer) tail buffer holds the < page_tokens newest
-    rows until they fill a page.
+    """Pool-backed KV state for a decode batch.
 
-    With ``device_resident=True`` (the default) page contents live in the
-    preallocated device arrays of a `DevicePagePool`: prefill pages sync
-    in batched index updates, each decode step streams the new token rows
-    into per-sequence tail slots, and `gather` only builds the small int32
-    page table — no per-step numpy stacking. The numpy fallback pads
-    gathered arrays to stable shapes (pool pages to a power of two, table
-    width fixed per batch) so the jitted kernel recompiles only when the
-    pool actually grows.
+    The pool holds full pages; a per-sequence *tail slot* in the
+    layer-stacked device pool holds the < page_tokens newest rows of every
+    layer until they fill a page (``numpy`` mode buffers the rows on the
+    host instead). Tail fill level is layer-uniform — every decode token
+    appends exactly one row at every layer — so one counter per sequence
+    and one page table per step describe the whole stack.
 
     Batch rows may carry ``seq_id = -1`` (continuous batching pads retired
     rows): they write to a scratch slot and attend a zero page.
+
+    ``h2d`` / ``d2h`` count the explicit host->device / device->host
+    tensor transfers this state (and its device pool) performs on the
+    decode path — the quantity the fused step minimizes and
+    `bench_serve` / the transfer-count tests report.
     """
 
-    def __init__(self, pool: PagedKVPool, capacity: int, hkv: int, hd: int,
-                 device_resident: bool = True, batch_hint: int = 1):
+    def __init__(self, pool: PagedKVPool, capacity: int, num_layers: int,
+                 hkv: int, hd: int, mode: str = "fused",
+                 batch_hint: int = 1):
+        if mode not in MODES:
+            raise ValueError(f"mode {mode!r} not in {MODES}")
         self.pool = pool
+        self.num_layers = num_layers
         self.hkv, self.hd = hkv, hd
         t = pool.page_tokens
         slots = -(-capacity // t)          # ceil: pages covering capacity
         self.slots = -(-(slots + 1) // 8) * 8   # +1 tail page, mult. of 8
-        self.tails: dict[tuple, list] = {}
-        self.device_resident = device_resident
+        self.mode = mode
         self.batch_hint = max(1, batch_hint)   # expected live sequences
-        # one DevicePagePool per layer: a gather only ever names one
-        # layer's pages, so per-layer arrays keep the kernel operands (and
-        # every in-place update) num_layers x smaller than one shared pool
-        self._device: dict[int, DevicePagePool] = {}
-        self._trash: dict[int, int] = {}       # layer -> scratch slot
-        self._tail_slot: dict[tuple, int] = {}
-        self.gather_s = 0.0       # host-side gather/assembly time (Sibyl reward)
+        self.tail_len: dict[int, int] = {}     # seq -> tail rows (all layers)
+        self.tail_data: dict[tuple, list] = {}  # (seq, layer) -> rows (numpy)
+        self._tail_slot: dict[int, int] = {}
+        self._device: DevicePagePool | None = None
+        self._trash = 0
+        if mode != "numpy":
+            self._device = DevicePagePool(
+                num_layers, t, hkv, hd,
+                init_slots=self.slots * self.batch_hint)
+            self._trash = self._device.alloc()
+        self._step = None         # per-step view (begin_step .. end_step)
+        self.gather_s = 0.0       # host-side bookkeeping time (Sibyl reward)
+        self.h2d = 0              # control/token uploads owned by the state
+        self.d2h = 0
 
-    def _dev(self, layer: int) -> DevicePagePool:
-        dp = self._device.get(layer)
-        if dp is None:
-            # sized for the whole expected batch: geometric growth works,
-            # but every growth re-specializes the jitted writers on the new
-            # capacity — reserve up front instead
-            dp = DevicePagePool(self.pool.page_tokens, self.hkv, self.hd,
-                                init_slots=self.slots * self.batch_hint)
-            self._device[layer] = dp
-            self._trash[layer] = dp.alloc()
-        return dp
+    @property
+    def device_arrays(self):
+        return self._device.arrays
+
+    def adopt_device_arrays(self, arrays):
+        """Take ownership of the pool arrays returned by a fused step (the
+        previous ones were donated into the jit and must not be reused)."""
+        self._device.arrays = tuple(arrays)
+
+    def transfer_counts(self) -> tuple[int, int]:
+        """(host->device, device->host) explicit transfers so far,
+        including the device pool's scatter payload uploads and fill
+        readbacks."""
+        dev = self._device
+        return (self.h2d + (dev.writes if dev is not None else 0),
+                self.d2h + (dev.reads if dev is not None else 0))
 
     # -- writes -------------------------------------------------------------
     def write_prefill(self, layer: int, seq: int, k: np.ndarray,
                       v: np.ndarray, page_hashes=None):
         """k, v: (prefill_len, hkv, hd) — full pages into the pool, the
-        remainder into the tail buffer. `page_hashes[p]` (cumulative token
-        -prefix digests) enables ref-counted page sharing across requests
-        with identical prompt prefixes."""
+        remainder rows into the sequence's tail slot. `page_hashes[p]`
+        (cumulative token-prefix digests) enables ref-counted page sharing
+        across requests with identical prompt prefixes."""
         t = self.pool.page_tokens
         n_full = k.shape[0] // t
         for p in range(n_full):
             h = page_hashes[p] if page_hashes is not None else None
             self.pool.put(seq, k[p * t:(p + 1) * t], v[p * t:(p + 1) * t],
                           layer=layer, content_hash=h)
-        rows = [(k[r], v[r]) for r in range(n_full * t, k.shape[0])]
-        if rows:
-            key = (seq, layer)
-            tail = self.tails.setdefault(key, [])
-            if self.device_resident:
-                slot = self._ensure_tail_slot(key)
-                start = len(tail)
-                slots = np.full(len(rows), slot, np.int32)
-                idx = np.arange(start, start + len(rows), dtype=np.int32)
-                self._dev(layer).write_rows(slots, idx,
-                                            np.stack([r[0] for r in rows]),
-                                            np.stack([r[1] for r in rows]))
-            tail.extend(rows)
-            self._maybe_fill(key)
+        n_rest = k.shape[0] - n_full * t
+        prev = self.tail_len.setdefault(seq, n_rest)
+        if prev != n_rest:
+            raise ValueError(
+                f"sequence {seq}: layer {layer} prefilled {n_rest} tail "
+                f"rows where earlier layers prefilled {prev} — the paged "
+                f"layout requires layer-uniform prefill lengths")
+        if not n_rest:
+            return
+        rest_k, rest_v = k[n_full * t:], v[n_full * t:]
+        if self._device is not None:
+            slot = self._ensure_tail_slot(seq)
+            slots = np.full(n_rest, slot, np.int32)
+            rows = np.arange(n_rest, dtype=np.int32)
+            self._device.write_rows(layer, slots, rows, rest_k, rest_v)
+        else:
+            self.tail_data[(seq, layer)] = \
+                [(rest_k[r], rest_v[r]) for r in range(n_rest)]
 
-    def _ensure_tail_slot(self, key) -> int:
-        slot = self._tail_slot.get(key)
+    def _ensure_tail_slot(self, seq: int) -> int:
+        slot = self._tail_slot.get(seq)
         if slot is None:
-            dp = self._dev(key[1])
-            slot = dp.alloc()
-            dp.zero_slot(slot)
-            self._tail_slot[key] = slot
+            slot = self._device.alloc()
+            self._device.zero_slot(slot)
+            self._tail_slot[seq] = slot
         return slot
 
-    def _maybe_fill(self, key):
-        """A filled tail becomes a pool page (tier placement decided by the
-        pool). Its device tail slot already holds the full float content,
-        so a fast placement adopts the slot as-is; a slow placement leaves
-        it dirty for the next sync to rewrite (int8 + zeroed float)."""
-        tail = self.tails[key]
-        if len(tail) < self.pool.page_tokens:
-            return
-        seq, layer = key
-        k = np.stack([r[0] for r in tail])
-        v = np.stack([r[1] for r in tail])
-        pid = self.pool.put(seq, k, v, layer=layer)
-        tail.clear()
-        if self.device_resident:
-            slot = self._tail_slot.pop(key)
-            page = self.pool.pages[pid]
-            self._dev(layer).adopt(pid, slot, page.version,
-                                   synced=(page.tier == "fast"))
+    # -- per-step protocol ---------------------------------------------------
+    def _page_groups(self, seq: int):
+        """Per-layer pool pids of each logical page of `seq`, zipped into
+        layer-uniform groups, with the slot-overflow check (+1 for the
+        tail slot every decode step appends into)."""
+        per_layer = [self.pool.seq_pages(seq, l)
+                     for l in range(self.num_layers)]
+        n = len(per_layer[0])
+        if any(len(p) != n for p in per_layer):
+            raise RuntimeError(
+                f"sequence {seq}: ragged page counts across layers "
+                f"({[len(p) for p in per_layer]}) — paged decode requires "
+                f"layer-uniform page structure")
+        if n + 1 > self.slots:
+            raise ValueError(
+                f"sequence {seq}: {n} pages + a tail page exceed the "
+                f"page-table capacity of {self.slots} slots "
+                f"({self.slots * self.pool.page_tokens} tokens); size the "
+                f"PagedKVState capacity to the longest request")
+        return list(zip(*per_layer)) if n else []
 
-    def append_token(self, layer: int, seq: int, k_row: np.ndarray,
-                     v_row: np.ndarray):
-        """Single-sequence convenience wrapper over `append_tokens`."""
-        self.append_tokens(layer, [seq], k_row[None], v_row[None])
-
-    def append_tokens(self, layer: int, seq_ids, k_rows: np.ndarray,
-                      v_rows: np.ndarray):
-        """k_rows, v_rows: (b, hkv, hd) for the decode step's tokens — one
-        batched device row-scatter for the whole step; rows with seq -1
-        target the scratch slot. Filled tails become pool pages."""
+    def begin_step(self, seq_ids, positions) -> np.ndarray:
+        """Host bookkeeping before one decode step: touch each live page
+        once (one pool-clock tick for the whole step), sync the device
+        mirror (new prefill pages, demotion rewrites), and build the
+        layer-uniform control block the fused step consumes —
+        ``(b, slots + 4)`` int32 rows ``[page table | tail slot | tail row
+        | position | kv length]``, where the length already counts the
+        token this step appends. Dead rows (seq -1) get the scratch slot
+        and length 1."""
+        t0 = time.perf_counter()
+        t = self.pool.page_tokens
         b = len(seq_ids)
-        dp = self._dev(layer) if self.device_resident else None
-        slots = np.full(b, self._trash.get(layer, 0), np.int32)
-        rows = np.zeros(b, np.int32)
-        filled = []
-        for i, seq in enumerate(seq_ids):
+        positions = np.broadcast_to(np.asarray(positions, np.int32), (b,))
+        control = np.zeros((b, self.slots + 4), np.int32)
+        control[:, self.slots] = self._trash
+        control[:, self.slots + 3] = 1
+        groups_by_row, touch_pids, sync_groups = [], [], []
+        for seq in seq_ids:
+            if seq < 0:
+                groups_by_row.append(None)
+                continue
+            groups = self._page_groups(seq)
+            for g in groups:
+                touch_pids.extend(g)
+            sync_groups.extend(groups)
+            groups_by_row.append(groups)
+        self.pool.touch_many(touch_pids)
+        if self._device is not None:
+            self._device.sync(self.pool, sync_groups)
+            slot_of = self._device.slot_of
+        for i, groups in enumerate(groups_by_row):
+            if groups is None:
+                continue
+            seq = seq_ids[i]
+            tail = self.tail_len.get(seq, 0)
+            if self._device is not None:
+                for n, g in enumerate(groups):
+                    control[i, n] = slot_of[g[0]]
+                control[i, self.slots] = self._ensure_tail_slot(seq)
+                control[i, len(groups)] = control[i, self.slots]
+            control[i, self.slots + 1] = tail
+            control[i, self.slots + 2] = positions[i]
+            control[i, self.slots + 3] = len(groups) * t + tail + 1
+        self._step = {"seq_ids": list(seq_ids), "control": control,
+                      "table": None, "lengths": None}
+        self.gather_s += time.perf_counter() - t0
+        return control
+
+    def _step_view(self):
+        if self._step is None:
+            raise RuntimeError("decode step used outside "
+                               "begin_step()/end_step()")
+        return self._step
+
+    def run_fused(self, step_fn, params, tokens, seq_ids, positions, key):
+        """Drive one fused step (`build_fused_step`) with the exact
+        steady-state transfer protocol — THE single place that owns the
+        fused step's host/device accounting: begin_step bookkeeping, one
+        control upload, donated pool arrays through the jit, one
+        sampled-token download, end_step bookkeeping. `tokens` may be the
+        previous step's device array (no upload — the steady state) or
+        host values (one extra upload: the first step, or a continuous
+        admission). Returns ``(host_tokens, device_tokens)``."""
+        control = self.begin_step(seq_ids, positions)
+        cdev = jnp.asarray(control)
+        self.h2d += 1
+        if not isinstance(tokens, jax.Array):
+            tokens = jnp.asarray(np.asarray(tokens, np.int32))
+            self.h2d += 1
+        tok_dev, arrays = step_fn(params, self.device_arrays, tokens,
+                                  cdev, key)
+        self.adopt_device_arrays(arrays)
+        tok_host = np.asarray(tok_dev)
+        self.d2h += 1
+        self.end_step(seq_ids)
+        return tok_host, tok_dev
+
+    def append_step_rows(self, layer: int, k_rows: np.ndarray,
+                         v_rows: np.ndarray):
+        """Eager/numpy modes: append this step's (b, hkv, hd) K/V rows at
+        one layer. The fused step performs the equivalent scatter inside
+        its own jitted graph instead."""
+        st = self._step_view()
+        c = st["control"]
+        if self._device is not None:
+            self._device.write_rows(layer, c[:, self.slots],
+                                    c[:, self.slots + 1], k_rows, v_rows)
+        else:
+            for i, seq in enumerate(st["seq_ids"]):
+                if seq >= 0:
+                    self.tail_data.setdefault((seq, layer), []) \
+                        .append((k_rows[i], v_rows[i]))
+
+    def attend(self, q, layer: int, backend: str = "auto"):
+        """q: (b, hq, hd) for the decode token at one layer -> (b, hq, hd)
+        over every pooled page + tail row (eager/numpy modes; the fused
+        step dispatches the kernel inside its jit)."""
+        st = self._step_view()
+        if self._device is not None:
+            if st["table"] is None:
+                c = st["control"]
+                st["table"] = jnp.asarray(c[:, :self.slots])
+                st["lengths"] = jnp.asarray(c[:, self.slots + 3])
+                self.h2d += 2
+            return api.run("paged_attention", q, *self._device.arrays,
+                           st["table"], st["lengths"],
+                           jnp.int32(layer), backend=backend)
+        t0 = time.perf_counter()
+        view = self._gather_numpy(layer, st["seq_ids"])
+        self.gather_s += time.perf_counter() - t0   # the restack IS the
+        self.h2d += len(view)                       # Sibyl-visible latency
+        return api.run("paged_attention", q,
+                       *[jnp.asarray(a) for a in view], backend=backend)
+
+    def end_step(self, seq_ids):
+        """Host bookkeeping after one decode step: bump tail counters and
+        turn filled tails into pool pages — per layer, tier decided by the
+        pool; the device tail slot is adopted in place (its float rows are
+        already current; slow placements are rewritten by the next sync).
+        The fused path reads a filled page back once (2 transfers per
+        page_tokens tokens, amortized); it never touches row data on the
+        per-token path."""
+        t0 = time.perf_counter()
+        t = self.pool.page_tokens
+        for seq in seq_ids:
             if seq < 0:
                 continue
-            key = (seq, layer)
-            tail = self.tails.setdefault(key, [])
-            if dp is not None:
-                slots[i] = self._ensure_tail_slot(key)
-                rows[i] = len(tail)
-            tail.append((k_rows[i], v_rows[i]))
-            if len(tail) == self.pool.page_tokens:
-                filled.append(key)
-        if dp is not None:
-            dp.write_rows(slots, rows, k_rows, v_rows)
-        for key in filled:
-            self._maybe_fill(key)
+            n = self.tail_len.get(seq, 0) + 1
+            if n < t:
+                self.tail_len[seq] = n
+                continue
+            self.tail_len[seq] = 0
+            if self._device is not None:
+                slot = self._tail_slot.pop(seq)
+                k_all, v_all = self._device.read_slot(slot)
+                group = tuple(
+                    self.pool.put(seq, k_all[l], v_all[l], layer=l)
+                    for l in range(self.num_layers))
+                self._device.adopt(group, slot, self.pool)
+            else:
+                for l in range(self.num_layers):
+                    rows = self.tail_data.pop((seq, l))
+                    self.pool.put(seq, np.stack([r[0] for r in rows]),
+                                  np.stack([r[1] for r in rows]), layer=l)
+        self._step = None
+        self.gather_s += time.perf_counter() - t0
 
     # -- retire -------------------------------------------------------------
     def free_seq(self, seq: int) -> list[int]:
-        """Retire a request: drop its pool page refs (destroying pages whose
-        last holder it was) and recycle its device slots. Returns the
-        destroyed pool (page id, layer) pairs."""
+        """Retire a request: drop its pool page refs (destroying pages
+        whose last holder it was) and recycle its device slots. Returns
+        the destroyed pool (page id, layer) pairs."""
         destroyed = self.pool.free(seq)
-        for pid, layer in destroyed:
-            dp = self._device.get(layer)
-            if dp is not None:
-                dp.release_pid(pid)
-        for key in [k for k in self.tails if k[0] == seq]:
-            self.tails.pop(key)
-            slot = self._tail_slot.pop(key, None)
-            if slot is not None and self.device_resident:
-                self._dev(key[1]).release_slot(slot)
+        if self._device is not None:
+            for pid, _layer in destroyed:
+                self._device.release_pid(pid)
+        self.tail_len.pop(seq, None)
+        for key in [k for k in self.tail_data if k[0] == seq]:
+            self.tail_data.pop(key)
+        slot = self._tail_slot.pop(seq, None)
+        if slot is not None and self._device is not None:
+            self._device.release_slot(slot)
         return destroyed
 
-    # -- gather -------------------------------------------------------------
-    def _seq_view(self, seq, layer):
-        """(pids, tail) for one live row, with the slot-overflow check."""
+    # -- numpy fallback gather ----------------------------------------------
+    def gather(self, layer: int, seq_ids) -> tuple:
+        """numpy mode: build (k_pages, v_pages, k_quant, v_quant, k_scale,
+        v_scale, page_table, lengths) for the batch at this layer, in the
+        kernel's argument order (device modes keep the pool resident — use
+        the begin_step/attend protocol instead)."""
+        if self.mode != "numpy":
+            raise RuntimeError("gather() assembles host arrays — device-"
+                               "resident modes use begin_step()/attend()")
+        t0 = time.perf_counter()
+        view = self._gather_numpy(layer, list(seq_ids))
+        self.gather_s += time.perf_counter() - t0
+        return view
+
+    def _seq_view_numpy(self, seq, layer):
         pids = self.pool.seq_pages(seq, layer)
-        tail = self.tails.get((seq, layer), ())
+        tail = self.tail_data.get((seq, layer), ())
         if len(pids) + bool(tail) > self.slots:
             raise ValueError(
                 f"sequence {seq}: {len(pids)} pages + "
@@ -209,46 +387,6 @@ class PagedKVState:
                 f"request")
         return pids, tail
 
-    def gather(self, layer: int, seq_ids) -> tuple:
-        """Build (k_pages, v_pages, k_quant, v_quant, k_scale, v_scale,
-        page_table, lengths) for the batch at this layer, in the kernel's
-        argument order. Slow pages keep their int8 + scale representation;
-        the tail rides along as one zero-padded fast page per sequence."""
-        t0 = time.perf_counter()
-        out = (self._gather_device(layer, seq_ids) if self.device_resident
-               else self._gather_numpy(layer, seq_ids))
-        self.gather_s += time.perf_counter() - t0
-        return out
-
-    def _gather_device(self, layer: int, seq_ids) -> tuple:
-        pool, t = self.pool, self.pool.page_tokens
-        dp = self._dev(layer)
-        b = len(seq_ids)
-        table = np.zeros((b, self.slots), np.int32)
-        lengths = np.ones(b, np.int32)
-        views, sync_pids = [], []
-        for seq in seq_ids:
-            if seq < 0:
-                views.append(None)
-                continue
-            pids, tail = self._seq_view(seq, layer)
-            for pid in pids:
-                pool.touch(pid)
-            sync_pids.extend(pids)
-            views.append((pids, tail))
-        dp.sync(pool, sync_pids)
-        slot_of = dp.slot_of
-        for i, view in enumerate(views):
-            if view is None:
-                continue
-            pids, tail = view
-            for n, pid in enumerate(pids):
-                table[i, n] = slot_of[pid]
-            if tail:
-                table[i, len(pids)] = self._tail_slot[(seq_ids[i], layer)]
-            lengths[i] = max(1, len(pids) * t + len(tail))
-        return (*dp.arrays, table, lengths)
-
     def _gather_numpy(self, layer: int, seq_ids) -> tuple:
         pool, t = self.pool, self.pool.page_tokens
         b = len(seq_ids)
@@ -258,10 +396,10 @@ class PagedKVState:
         for i, seq in enumerate(seq_ids):
             if seq < 0:
                 continue
-            pids, tail = self._seq_view(seq, layer)
+            pids, tail = self._seq_view_numpy(seq, layer)
             for n, pid in enumerate(pids):
                 table[i, n] = len(entries)
-                entries.append(pool.touch(pid))
+                entries.append(pool.pages[pid])
             if tail:
                 table[i, len(pids)] = len(entries)
                 entries.append(tuple(tail))
@@ -286,15 +424,6 @@ class PagedKVState:
                 kq[e], ks[e] = pkq, pks[..., 0]
                 vq[e], vs[e] = pvq, pvs[..., 0]
         return kf, vf, kq, vq, ks, vs, table, lengths
-
-
-def paged_attention_over_pool(q, state: PagedKVState, layer: int, seq_ids,
-                              backend: str = "auto"):
-    """q: (b, hq, hd) for the single decode token -> (b, hq, hd), attending
-    over every pooled page + tail row of each sequence at this layer."""
-    view = state.gather(layer, seq_ids)
-    return api.run("paged_attention", q, *[jnp.asarray(a) for a in view],
-                   backend=backend)
 
 
 # ---------------------------------------------------------------------------
@@ -352,19 +481,23 @@ def extract_prefill_pages(model, caches, state: PagedKVState, seq_ids,
 def paged_decode_step(model, params, tokens, state: PagedKVState, seq_ids,
                       pos, backend: str = "auto"):
     """One decode step with every attention layer served from the page
-    pool. tokens: (b,) int32; `pos` is a scalar shared by the batch
-    (static lockstep) or a (b,) int32 array of per-sequence absolute
-    positions (continuous batching); `seq_ids` may carry -1 for padded
-    (retired) rows, whose logits are garbage and must be ignored. Returns
-    logits (b, V). Appends the step's K/V rows to the tails (filling pages
-    as they complete), so the pool is the only KV storage this path
-    touches."""
+    pool — the per-layer *eager* reference path (and the numpy fallback):
+    each layer pulls its new K/V rows to the host and dispatches the
+    paged kernel separately, ~2 host/device crossings per layer. The
+    fused path (`build_fused_step`) must match it token-for-token.
+
+    tokens: (b,) int32; `pos` is a scalar shared by the batch (static
+    lockstep) or a (b,) int32 array of per-sequence absolute positions
+    (continuous batching); `seq_ids` may carry -1 for padded (retired)
+    rows, whose logits are garbage and must be ignored. Returns logits
+    (b, V)."""
     cfg = model.cfg
     if not supports_paged(cfg):
         raise NotImplementedError(
             f"paged decode needs a global-attention stack, got "
             f"{cfg.layer_kinds()}")
     seq_ids = list(seq_ids)
+    state.begin_step(seq_ids, pos)
     x = model._embed_in(params, {"tokens": jnp.asarray(tokens)[:, None]})
     pos_in = jnp.asarray(pos, jnp.int32)
 
@@ -374,12 +507,91 @@ def paged_decode_step(model, params, tokens, state: PagedKVState, seq_ids,
         q, k_new, v_new = decode_qkv(cfg, ap, h, pos_in)
         kn = np.asarray(k_new[:, 0], np.float32)       # (b, hkv, hd)
         vn = np.asarray(v_new[:, 0], np.float32)
-        state.append_tokens(layer, seq_ids, kn, vn)
-        y = paged_attention_over_pool(q[:, 0], state, layer, seq_ids,
-                                      backend=backend)
+        state.d2h += 2
+        state.append_step_rows(layer, kn, vn)
+        y = state.attend(q[:, 0], layer, backend=backend)
         y = jnp.einsum("bhk,hkd->bd", y.astype(x.dtype), ap["wo"])[:, None]
         x = x + y
         x, _ = mlp_tail(cfg, kind, p, x)
 
     x = rms_norm(x, params["final_norm"])
-    return lm_head_apply(cfg, params["embed"], x)[:, 0]
+    logits = lm_head_apply(cfg, params["embed"], x)[:, 0]
+    state.end_step(seq_ids)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Fused decode step: the whole token in one jitted, device-resident graph
+# ---------------------------------------------------------------------------
+def build_fused_step(model, num_slots: int, *, backend: str = "auto",
+                     greedy: bool = True, temperature: float = 1.0):
+    """Build the jitted fused decode step.
+
+    Returned callable: ``step(params, arrays, tokens, control, key) ->
+    (sampled_tokens (b,) int32, new_arrays)`` where ``arrays`` is the
+    layer-stacked device pool tuple (DONATED — callers must adopt the
+    returned tuple) and ``control`` the int32 block from
+    `PagedKVState.begin_step`. Everything the step touches is already
+    device-resident: the K/V rows of each layer are appended by in-place
+    scatters on the donated pool inside the graph, the paged-attention
+    kernel reads the layer's pages via a scalar-prefetched layer index
+    resolved at trace time through ``api.run(..., backend=...)``, and only
+    the sampled tokens come back — the host sees no tensor data."""
+    cfg = model.cfg
+    gs = len(model.group_kinds)
+    s = num_slots
+
+    def step(params, arrays, tokens, control, key):
+        kf, vf, kq, vq, ks, vs = arrays
+        ll, c, t = kf.shape[0], kf.shape[1], kf.shape[2]
+        table = control[:, :s]
+        positions = control[:, s + 2]
+        lengths = control[:, s + 3]
+        # flat (layer, slot, row) scatter index base for the step's rows
+        row_base = control[:, s] * t + control[:, s + 1]
+        flat_kv = (ll * c * t,) + kf.shape[3:]
+
+        x = model._embed_in(params, {"tokens": tokens[:, None]})
+
+        def layer_step(x, kf, vf, kind, p, layer):
+            h = rms_norm(x, p["norm1"])
+            ap = p["attn"]
+            q, k_new, v_new = decode_qkv(cfg, ap, h, positions)
+            idx = layer * (c * t) + row_base
+            kf = kf.reshape(flat_kv).at[idx] \
+                .set(k_new[:, 0].astype(kf.dtype)).reshape(kf.shape)
+            vf = vf.reshape(flat_kv).at[idx] \
+                .set(v_new[:, 0].astype(vf.dtype)).reshape(vf.shape)
+            y = api.run("paged_attention", q[:, 0], kf, vf, kq, vq, ks, vs,
+                        table, lengths, jnp.asarray(layer, jnp.int32),
+                        backend=backend)
+            y = jnp.einsum("bhk,hkd->bd", y.astype(x.dtype), ap["wo"])[:, None]
+            x = x + y
+            x, _ = mlp_tail(cfg, kind, p, x)
+            return x, kf, vf
+
+        def group_body(carry, xs):
+            x, kf, vf = carry
+            gp, g = xs
+            for i, kind in enumerate(model.group_kinds):
+                x, kf, vf = layer_step(x, kf, vf, kind, gp[f"l{i}"],
+                                       g * gs + i)
+            return (x, kf, vf), None
+
+        (x, kf, vf), _ = jax.lax.scan(
+            group_body, (x, kf, vf),
+            (params["groups"], jnp.arange(model.n_groups)))
+        for i, kind in enumerate(model.tail_kinds):
+            x, kf, vf = layer_step(x, kf, vf, kind, params["tail"][f"t{i}"],
+                                   model.n_groups * gs + i)
+
+        x = rms_norm(x, params["final_norm"])
+        logits = lm_head_apply(cfg, params["embed"], x)[:, 0]
+        if greedy:
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            tok = jax.random.categorical(key, logits / temperature,
+                                         axis=-1).astype(jnp.int32)
+        return tok, (kf, vf, kq, vq, ks, vs)
+
+    return jax.jit(step, donate_argnums=(1,))

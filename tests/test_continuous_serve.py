@@ -145,13 +145,16 @@ def test_gather_slot_overflow_raises_value_error(cfg, rng):
     """More pages than the page table holds must raise (not a stripped-out
     assert): a `python -O` server must not silently corrupt the table."""
     pool = PagedKVPool(page_tokens=4)
-    state = PagedKVState(pool, capacity=8, hkv=2, hd=8,
-                         device_resident=False)
+    state = PagedKVState(pool, capacity=8, num_layers=1, hkv=2, hd=8,
+                         mode="numpy")
     kv = rng.standard_normal((4 * (state.slots + 1), 2, 8)) \
         .astype(np.float32)
     state.write_prefill(0, 0, kv, kv.copy())
     with pytest.raises(ValueError, match="sequence 0"):
         state.gather(0, [0])
+    # the device-resident step protocol enforces the same bound
+    with pytest.raises(ValueError, match="sequence 0"):
+        state.begin_step([0], np.zeros(1, np.int32))
 
 
 def test_continuous_requires_pool_and_attention_stack(cfg):

@@ -69,6 +69,25 @@ def test_hit_and_eviction_stats_accounting(rng):
     assert pool.pages[ids[0]].access_count == 2
 
 
+def test_touch_many_ticks_clock_once_per_step(rng):
+    """The decode-step gather touches every page it reads through
+    touch_many: one clock tick for the whole step (not one per page per
+    layer — the old per-layer touch loop advanced the clock num_layers x
+    pages times per token, skewing Sibyl's clock-phase recency feature),
+    each pid touched once per (pid, step)."""
+    pool = PagedKVPool(page_tokens=4)
+    pids = [pool.put(0, _page(rng), _page(rng), layer=layer)
+            for layer in range(3)]
+    c0 = pool.clock
+    pool.touch_many(pids + pids)                   # duplicates deduped
+    assert pool.clock == c0 + 1
+    assert all(pool.pages[p].last_access == pool.clock for p in pids)
+    assert all(pool.pages[p].access_count == 1 for p in pids)
+    assert pool.stats["fast_hits"] == 3
+    pool.touch_many([])                            # an all-dead step still
+    assert pool.clock == c0 + 2                    # advances step time
+
+
 def test_byte_stats_track_put_eviction_and_free(rng):
     """fast_bytes/slow_bytes are maintained across the page lifecycle —
     not just initialized (they feed Sibyl's pressure features)."""

@@ -126,8 +126,9 @@ def test_make_paged_decode_step_matches_engine_tokens():
     [expected] = eng.generate(_reqs(cfg, n=1, new=2))
 
     pool = PagedKVPool(page_tokens=4)
-    state = PagedKVState(pool, capacity=12 + 2, hkv=cfg.num_kv_heads,
-                         hd=cfg.head_dim)
+    state = PagedKVState(pool, capacity=12 + 2, num_layers=cfg.num_layers,
+                         hkv=cfg.num_kv_heads, hd=cfg.head_dim,
+                         mode="eager")
     [req] = _reqs(cfg, n=1)
     prefill = jax.jit(eng.model.forward_prefill)
     logits, caches = prefill(eng.params,
