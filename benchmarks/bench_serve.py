@@ -115,4 +115,52 @@ def run():
     tok = sum(len(o) for o in outs)
     rows.append(("serve.continuous.tok_per_s", 1e6 * wall / max(tok, 1),
                  f"{tok / max(wall, 1e-9):.1f}tok_s_live_pages={len(pool.pages)}"))
+
+    # speculative multi-token decode: k-token verify steps over the fused
+    # graph vs the 1-token fused/eager baselines. The headline metric is
+    # host syncs per accepted token — steady state ~2 / (1 + E[accepted])
+    # per verify step vs ~2/token for k=1 fused and ~2/layer/token for
+    # eager. Decode-attributable syncs isolate the decode path: a
+    # max_new=1 run measures the prefill-attributable transfer floor
+    # (identical across configs) and is subtracted out. `self` drafting
+    # (the serving model drafts for itself, acceptance ~1) shows the
+    # k-scaling ceiling; `ngram` (free prompt-lookup drafts) the
+    # realistic operating point.
+    spec_new = 17
+
+    def spec_run(mode, k, draft):
+        pool = PagedKVPool(page_tokens=PAGE_TOKENS)
+        eng = ServeEngine(cfg, params=params, kv_pool=pool,
+                          decode_mode=mode, speculate=k, draft=draft)
+        eng.generate(_reqs(cfg, batch, seed=4, new=spec_new))  # warm jits
+        pre = eng.generate(_reqs(cfg, batch, seed=5, new=1))
+        pre_syncs = sum(eng.last_transfers)
+        pre_tok = sum(len(o) for o in pre)
+        t0 = time.time()
+        outs = eng.generate(_reqs(cfg, batch, seed=5, new=spec_new))
+        wall = time.time() - t0
+        syncs = sum(eng.last_transfers) - pre_syncs
+        toks = sum(len(o) for o in outs) - pre_tok
+        rates = [d["accept_rate"] for d in eng.last_request_stats
+                 if d["accept_rate"] is not None]
+        rate = sum(rates) / len(rates) if rates else None
+        return wall, syncs, max(toks, 1), rate
+
+    spec_syncs = {}
+    for mode, k, draft in (("eager", 0, "ngram"), ("fused", 1, "ngram"),
+                           ("fused", 2, "ngram"), ("fused", 4, "ngram"),
+                           ("fused", 8, "ngram"), ("fused", 4, "self"),
+                           ("fused", 8, "self")):
+        wall, syncs, toks, rate = spec_run(mode, k, draft)
+        name = f"{mode}.k{max(k, 1)}.{draft}" if k > 1 else f"{mode}.k1"
+        spec_syncs[name] = syncs / toks
+        rates = "" if rate is None else f"_accept={rate:.2f}"
+        rows.append((f"serve.spec.tok.{name}", 1e6 * wall / toks,
+                     f"{toks / max(wall, 1e-9):.1f}tok_s{rates}"))
+        rows.append((f"serve.spec.syncs_per_token.{name}", syncs / toks,
+                     f"decode_syncs={syncs}_tokens={toks}"))
+    for name, v in spec_syncs.items():
+        if name.startswith("fused.k") and name != "fused.k1":
+            rows.append((f"serve.spec.syncs_vs_k1.{name}", 0.0,
+                         f"{v / spec_syncs['fused.k1']:.2f}x"))
     return rows

@@ -3,7 +3,7 @@
 Dequantizes the page pool (fast pages live in the float pool, slow pages
 as int8 + per-row scale), gathers each sequence's pages through its page
 table, and runs a plain masked softmax over the valid KV positions of the
-single decode token. This is the semantics the Pallas kernel must match.
+decode token(s). This is the semantics the Pallas kernel must match.
 """
 from __future__ import annotations
 
@@ -24,9 +24,12 @@ def dequantize_pool(pages, quant, scale):
 
 def paged_attention(q, k_pages, v_pages, k_quant, v_quant, k_scale, v_scale,
                     page_table, lengths, layer=None, *, softmax_scale=None):
-    """q: (b, hq, d); {k,v}_pages: (P, T, hkv, d) float; {k,v}_quant:
-    (P, T, hkv, d) int8; {k,v}_scale: (P, T, hkv) float; page_table:
-    (b, slots) int32; lengths: (b,) int32. Returns (b, hq, d).
+    """q: (b, hq, d) single decode token or (b, k, hq, d) for k
+    consecutive causal positions per sequence — row j is valid up to
+    ``lengths[b] + j`` KV positions (the speculative multi-token verify
+    layout); {k,v}_pages: (P, T, hkv, d) float; {k,v}_quant: (P, T, hkv, d)
+    int8; {k,v}_scale: (P, T, hkv) float; page_table: (b, slots) int32;
+    lengths: (b,) int32, row 0's valid length. Returns q's shape.
 
     Layer-stacked pools — (L, P, T, hkv, d) plus a scalar ``layer``
     (possibly traced) — slice out the named layer and reduce to the 4-D
@@ -41,7 +44,10 @@ def paged_attention(q, k_pages, v_pages, k_quant, v_quant, k_scale, v_scale,
                               k_scale, v_scale))
     elif layer is not None:
         raise ValueError("layer index given but pools are not layer-stacked")
-    b, hq, d = q.shape
+    multi = q.ndim == 4
+    if not multi:
+        q = q[:, None]
+    b, kq, hq, d = q.shape
     _, t, hkv, _ = k_pages.shape
     slots = page_table.shape[1]
     g = hq // hkv
@@ -53,12 +59,15 @@ def paged_attention(q, k_pages, v_pages, k_quant, v_quant, k_scale, v_scale,
     ks = k[page_table].reshape(b, slots * t, hkv, d)
     vs = v[page_table].reshape(b, slots * t, hkv, d)
 
-    qg = q.reshape(b, hkv, g, d).astype(jnp.float32) * scale
-    s = jnp.einsum("bhgd,bshd->bhgs", qg, ks)
+    qg = q.reshape(b, kq, hkv, g, d).astype(jnp.float32) * scale
+    s = jnp.einsum("bkhgd,bshd->bhkgs", qg, ks)
     pos = jnp.arange(slots * t)
-    s = jnp.where(pos[None, None, None, :] < lengths[:, None, None, None],
-                  s, NEG_INF)
+    # query row j of a sequence is valid up to lengths + j positions
+    limit = lengths[:, None] + jnp.arange(kq)[None, :]        # (b, kq)
+    s = jnp.where(pos[None, None, None, None, :]
+                  < limit[:, None, :, None, None], s, NEG_INF)
     p = jnp.exp(s - s.max(axis=-1, keepdims=True))
     p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
-    out = jnp.einsum("bhgs,bshd->bhgd", p, vs)
-    return out.reshape(b, hq, d).astype(q.dtype)
+    out = jnp.einsum("bhkgs,bshd->bkhgd", p, vs)
+    out = out.reshape(b, kq, hq, d).astype(q.dtype)
+    return out if multi else out[:, 0]

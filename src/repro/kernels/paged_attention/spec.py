@@ -21,19 +21,22 @@ from repro.kernels.paged_attention.paged_attention import paged_attention_pallas
 from repro.kernels.paged_attention.quant import quantize_page
 
 DEFAULT_SHAPE = {"b": 2, "pages": 16, "page_tokens": 16, "slots": 4,
-                 "hq": 4, "hkv": 2, "d": 32}
+                 "hq": 4, "hkv": 2, "d": 32, "k": 1}
 BENCH_SHAPE = {"b": 16, "pages": 512, "page_tokens": 64, "slots": 32,
-               "hq": 32, "hkv": 8, "d": 128}
+               "hq": 32, "hkv": 8, "d": 128, "k": 1}
 
 
 def paged_cost(grid_shape, tile: dict, dtype_bytes: int) -> tuple | None:
     """tile = {"pages_per_block": ppb, "head_block": hb}. Decode is
     traffic-bound: the whole paged KV streams once per kv head (fast float
     + int8 + scale are all fetched; tier saving shows up as the int8 pool
-    being the only populated one for slow pages), while q/out are a single
-    token. Larger blocks amortize the per-step dispatch latency against
-    VMEM for the fetched pages."""
-    b, pages, t, slots, hq, hkv, d = grid_shape
+    being the only populated one for slow pages), while q/out are k
+    token(s). Larger blocks amortize the per-step dispatch latency against
+    VMEM for the fetched pages. The k query rows (speculative verify) ride
+    along the folded head axis: q/out traffic, flops and the q/out/softmax
+    VMEM scale by k while the dominant KV stream does not — the cost-model
+    face of "more compute per byte moved"."""
+    b, pages, t, slots, hq, hkv, d, k = grid_shape
     ppb, hb = tile["pages_per_block"], tile["head_block"]
     if slots % ppb or hkv % hb:
         return None
@@ -41,11 +44,11 @@ def paged_cost(grid_shape, tile: dict, dtype_bytes: int) -> tuple | None:
     # bytes of one (page, head-block) row set: float pool + int8 + scale
     row = t * hb * (d * (dtype_bytes + 1) + dtype_bytes)
     # q + out blocks, k + v page blocks (double buffered), fp32 (m, l, acc)
-    vmem = (2 * hb * g * d * dtype_bytes + 2 * 2 * ppb * row
-            + hb * g * (d + 2) * 4)
-    traffic = (2 * b * hq * d * dtype_bytes                 # q + out
+    vmem = (2 * hb * k * g * d * dtype_bytes + 2 * 2 * ppb * row
+            + hb * k * g * (d + 2) * 4)
+    traffic = (2 * b * k * hq * d * dtype_bytes             # q + out
                + 2 * b * hkv * slots * (row // hb))         # k + v pages
-    flops = 4 * b * hq * slots * t * d
+    flops = 4 * b * k * hq * slots * t * d
     steps = b * (hkv // hb) * (slots // ppb)
     align = 1.0 if d % LANE == 0 else 1.0 + (LANE - d % LANE) / LANE
     time = max(traffic * align / HBM_BW, flops / PEAK_FLOPS) \
@@ -56,11 +59,15 @@ def paged_cost(grid_shape, tile: dict, dtype_bytes: int) -> tuple | None:
 def example_inputs(shape=None, dtype=np.float32, seed: int = 0) -> dict:
     """Mixed-tier pool: odd page ids live in the slow (int8) tier, even in
     the fast (float) tier; each sequence gets distinct pages and a random
-    valid length (>= 1), so partial-page masking is always exercised."""
+    valid length (>= 1), so partial-page masking is always exercised.
+    ``k > 1`` emits a (b, k, hq, d) multi-query-row q (speculative verify:
+    row j valid to lengths + j) with lengths drawn so the last row still
+    fits the table."""
     s = {**DEFAULT_SHAPE, **(shape or {})}
     b, pages, t, slots = s["b"], s["pages"], s["page_tokens"], s["slots"]
-    hq, hkv, d = s["hq"], s["hkv"], s["d"]
+    hq, hkv, d, k = s["hq"], s["hkv"], s["d"], s.get("k", 1)
     assert b * slots <= pages, "each sequence needs distinct pages"
+    assert k >= 1 and slots * t - (k - 1) >= 1, (k, slots, t)
     rng = np.random.default_rng(seed)
 
     def pool(raw):
@@ -74,24 +81,28 @@ def example_inputs(shape=None, dtype=np.float32, seed: int = 0) -> dict:
     kf, kq, ks = pool(rng.normal(size=(pages, t, hkv, d)))
     vf, vq, vs = pool(rng.normal(size=(pages, t, hkv, d)))
     table = rng.permutation(pages)[:b * slots].reshape(b, slots)
+    q_shape = (b, hq, d) if k == 1 else (b, k, hq, d)
     return {
-        "q": rng.normal(size=(b, hq, d)).astype(dtype),
+        "q": rng.normal(size=q_shape).astype(dtype),
         "k_pages": kf, "v_pages": vf,
         "k_quant": kq, "v_quant": vq,
         "k_scale": ks, "v_scale": vs,
         "page_table": table.astype(np.int32),
-        "lengths": rng.integers(1, slots * t + 1, b).astype(np.int32),
+        "lengths": rng.integers(1, slots * t - (k - 1) + 1, b)
+        .astype(np.int32),
     }
 
 
 def _grid_of(q, k_pages, v_pages, k_quant, v_quant, k_scale, v_scale,
              page_table, lengths, *layer):
     """Handles both the flat (P, T, hkv, d) pools and the serve layer's
-    layer-stacked (L, P, T, hkv, d) pools with a trailing layer operand:
-    per-layer capacity is the grid's page count either way."""
-    b, hq, d = q.shape
+    layer-stacked (L, P, T, hkv, d) pools with a trailing layer operand,
+    and both the single-row (b, hq, d) and multi-query-row (b, k, hq, d)
+    q: per-layer capacity is the grid's page count either way."""
+    k = q.shape[1] if q.ndim == 4 else 1
+    b, hq, d = q.shape[0], q.shape[-2], q.shape[-1]
     pages, t, hkv = k_pages.shape[-4], k_pages.shape[-3], k_pages.shape[-2]
-    return b, pages, t, page_table.shape[1], hq, hkv, d
+    return b, pages, t, page_table.shape[1], hq, hkv, d, k
 
 
 SPEC = registry.register(KernelSpec(
@@ -100,13 +111,13 @@ SPEC = registry.register(KernelSpec(
     ref_fn=ref.paged_attention,
     arg_names=("q", "k_pages", "v_pages", "k_quant", "v_quant",
                "k_scale", "v_scale", "page_table", "lengths"),
-    shape_keys=("b", "pages", "page_tokens", "slots", "hq", "hkv", "d"),
+    shape_keys=("b", "pages", "page_tokens", "slots", "hq", "hkv", "d", "k"),
     tune_space={"pages_per_block": (1, 2, 4, 8),
                 "head_block": (1, 2, 4)},
     cost_fn=paged_cost,
     example_inputs=example_inputs,
-    # 2 matmuls x 2 flops over every (q head, kv position) pair
-    flops=lambda g: 4.0 * g[0] * g[4] * g[3] * g[2] * g[6],
+    # 2 matmuls x 2 flops over every (q row, q head, kv position) pair
+    flops=lambda g: 4.0 * g[0] * g[7] * g[4] * g[3] * g[2] * g[6],
     grid_of=_grid_of,
     default_shape=DEFAULT_SHAPE,
     bench_shape=BENCH_SHAPE,
@@ -125,6 +136,17 @@ SPEC = registry.register(KernelSpec(
                    {"pages_per_block": 1, "head_block": 4}),
         KernelCase({"b": 2, "pages": 16, "page_tokens": 16, "slots": 4,
                     "hq": 4, "hkv": 2, "d": 32},
+                   {"pages_per_block": 2, "head_block": 2},
+                   dtype="bfloat16"),
+        # multi-query-row (speculative verify): k consecutive causal rows
+        KernelCase({"b": 2, "pages": 16, "page_tokens": 16, "slots": 4,
+                    "hq": 4, "hkv": 2, "d": 32, "k": 4},
+                   {"pages_per_block": 2, "head_block": 1}),
+        KernelCase({"b": 1, "pages": 32, "page_tokens": 8, "slots": 8,
+                    "hq": 8, "hkv": 4, "d": 64, "k": 3},
+                   {"pages_per_block": 4, "head_block": 2}),
+        KernelCase({"b": 2, "pages": 16, "page_tokens": 16, "slots": 4,
+                    "hq": 4, "hkv": 2, "d": 32, "k": 2},
                    {"pages_per_block": 2, "head_block": 2},
                    dtype="bfloat16"),
     ),

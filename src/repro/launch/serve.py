@@ -8,6 +8,11 @@ CPU; production shapes via the dry-run).
     # Sibyl placement learning from real gather latency:
     PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-7b \
         --smoke --paged --continuous --max-active 2 --sibyl
+
+    # speculative multi-token decode: n-gram drafts, 4-token verify steps
+    # through the fused paged graph (2 host syncs per accepted run):
+    PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-7b \
+        --smoke --paged --speculate 4 --draft ngram
 """
 from __future__ import annotations
 
@@ -45,6 +50,14 @@ def main():
                     help="fused = one jitted device-resident step per token"
                          " (default); eager = per-layer reference path;"
                          " numpy = host-gather fallback")
+    ap.add_argument("--speculate", type=int, default=0, metavar="K",
+                    help="speculative decode: verify K-token runs per "
+                         "fused step (requires --paged/--continuous and "
+                         "--decode-mode fused; K <= --page-tokens)")
+    ap.add_argument("--draft", default="ngram",
+                    help="draft proposer for --speculate: 'ngram' / "
+                         "'ngram:N' (prompt-lookup, order N) or 'self' "
+                         "(the serving model drafts for itself)")
     ap.add_argument("--knee-cache", default=None, metavar="PATH",
                     help="JSON cache of backend='auto' knee points (e.g. "
                          "<checkpoint-dir>/knee_cache.json): loaded at "
@@ -65,8 +78,11 @@ def main():
         pool = PagedKVPool(page_tokens=args.page_tokens,
                            fast_capacity_pages=args.fast_pages,
                            placement_policy=policy)
+    if args.speculate > 1 and pool is None:
+        raise SystemExit("--speculate needs --paged or --continuous")
     eng = ServeEngine(cfg, kv_pool=pool, decode_mode=args.decode_mode,
-                      knee_cache=args.knee_cache)
+                      knee_cache=args.knee_cache, speculate=args.speculate,
+                      draft=args.draft)
     rng = np.random.default_rng(0)
     reqs = [Request(rng.integers(0, cfg.vocab_size, size=args.prompt_len)
                     .astype(np.int32), args.new_tokens)
@@ -80,6 +96,13 @@ def main():
     tok = sum(len(o) for o in outs)
     print(f"generated {tok} tokens in {dt:.2f}s "
           f"({tok / dt:.1f} tok/s); first row: {outs[0][:8]}")
+    if args.speculate > 1:
+        for i, d in enumerate(eng.last_request_stats):
+            rate = "n/a" if d["accept_rate"] is None \
+                else f"{d['accept_rate']:.2f}"
+            print(f"req {i}: {d['tokens']} tokens in {d['steps']} verify "
+                  f"steps ({d['tokens_per_step']:.2f} tok/step, "
+                  f"accept_rate={rate})")
     if pool is not None:
         print(f"kv pool: {pool.stats} live_pages={len(pool.pages)}")
 

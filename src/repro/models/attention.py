@@ -148,9 +148,11 @@ def roped_qkv(cfg: ModelConfig, p, x, positions):
 
 def decode_qkv(cfg: ModelConfig, p, x, pos):
     """`roped_qkv` for the decode-step token(s) at absolute position
-    `pos` — a scalar shared by the batch (lockstep decode) or a (b,)
-    array of per-sequence positions (continuous batching, where admitted
-    requests sit at different depths). Shared by the dense cache path and
+    `pos` — a scalar shared by the batch (lockstep decode), a (b,) array
+    of per-sequence positions (continuous batching, where admitted
+    requests sit at different depths), or a (b, s) array giving every
+    token its own position (speculative multi-token verify: s consecutive
+    draft positions per sequence). Shared by the dense cache path and
     the serve layer's paged decode: the fused serving step traces this
     inside a `lax.scan` over stacked layer params with traced `pos`, so
     it must stay free of host-side branching on values."""
@@ -158,8 +160,10 @@ def decode_qkv(cfg: ModelConfig, p, x, pos):
     pos = jnp.asarray(pos, jnp.int32)
     if pos.ndim == 0:
         positions = jnp.full((b, s), pos, jnp.int32)
-    else:
+    elif pos.ndim == 1:
         positions = jnp.broadcast_to(pos[:, None], (b, s))
+    else:
+        positions = jnp.broadcast_to(pos, (b, s))
     return roped_qkv(cfg, p, x, positions)
 
 

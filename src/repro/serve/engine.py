@@ -18,9 +18,19 @@ device-resident graph — two host/device crossings per token, independent
 of depth; ``eager`` is the per-layer reference path the fused graph is
 tested against; ``numpy`` assembles pool arrays on the host each step
 (portability fallback). See `serve.paged_decode`.
+
+Speculative multi-token decode (``speculate=k`` on the engine or per
+`Request`): a draft proposer (`serve.speculative`) guesses k-1 tokens per
+request and one widened fused VERIFY step scores all k rows in a single
+jitted graph and a single KV pass — steady state becomes 2 host/device
+crossings per accepted *run* of up to k tokens instead of per token.
+Greedy outputs are token-for-token identical to the 1-token fused path
+for any draft; both engines report per-request ``accept_rate`` and
+``tokens_per_step`` in ``last_request_stats``.
 """
 from __future__ import annotations
 
+import functools
 import time
 from typing import Optional
 
@@ -31,22 +41,26 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.kernels import api
 from repro.models import Model
-from repro.models.layers import lm_head_apply, rms_norm
 from repro.serve.kvcache import PagedKVPool, pad_caches
 from repro.serve.paged_decode import (MODES, PagedKVState, build_fused_step,
                                       extract_prefill_pages,
                                       paged_decode_step, supports_paged)
 from repro.serve.scheduler import (Request, Scheduler,  # noqa: F401 (re-export)
-                                   prefix_page_hashes)
+                                   effective_speculate, prefix_page_hashes)
+from repro.serve.speculative import SpecStats, make_draft
+from repro.serve.steps import prefill_all_positions
 
 
 class _Active:
     """One occupied decode row of the continuous batch."""
 
-    __slots__ = ("req", "seq", "plen", "outs")
+    __slots__ = ("req", "seq", "plen", "outs", "eff_k", "stats")
 
-    def __init__(self, req: Request, seq: int, plen: int, outs: list):
+    def __init__(self, req: Request, seq: int, plen: int, outs: list,
+                 eff_k: int = 1):
         self.req, self.seq, self.plen, self.outs = req, seq, plen, outs
+        self.eff_k = eff_k
+        self.stats = SpecStats()
 
     @property
     def pos(self) -> int:
@@ -73,7 +87,7 @@ class ServeEngine:
                  kv_pool: Optional[PagedKVPool] = None,
                  device_gather: bool = True,
                  decode_mode: Optional[str] = None,
-                 knee_cache=None):
+                 knee_cache=None, speculate: int = 0, draft="ngram"):
         self.cfg = cfg
         self.model = Model(cfg)
         self.params = params if params is not None else \
@@ -87,31 +101,54 @@ class ServeEngine:
         self.knee_cache = knee_cache
         if knee_cache is not None:
             api.load_knee_cache(knee_cache)
+        # engine-level speculation default (per-Request `speculate` wins);
+        # `draft` is "ngram[:N]", "self", or any propose(history, n) object
+        self.speculate = int(speculate)
+        self._draft_arg = draft
+        self._draft = None
         self._next_seq = 0           # pool seq ids are engine-lifetime unique
         self._decode = jax.jit(self.model.forward_decode,
                                donate_argnums=2)
         self._prefill = jax.jit(self.model.forward_prefill)
-        self._prefill_all = jax.jit(self._prefill_all_positions)
+        self._prefill_all = jax.jit(
+            functools.partial(prefill_all_positions, self.model))
         self._fused_cache: dict = {}
         self.stats = {"prefill_s": 0.0, "decode_s": 0.0, "tokens": 0,
                       "decode_steps": 0}
+        self.last_request_stats: list[dict] = []
 
-    def _prefill_all_positions(self, params, batch):
-        """forward_prefill variant returning logits at *every* position.
-        Continuous admission right-pads prompts to a power-of-two bucket
-        (causal masking keeps prefix K/V and logits exact), so the jitted
-        prefill compiles once per bucket instead of once per distinct
-        prompt length; the caller reads logits[:, prompt_len - 1]."""
-        m = self.model
-        x = m._embed_in(params, batch)
-        b, sl = x.shape[0], x.shape[1]
-        positions = jnp.broadcast_to(jnp.arange(sl, dtype=jnp.int32),
-                                     (b, sl))
-        x, _, caches = m._run_stack(params, x, mode="prefill",
-                                    positions=positions, caches=None,
-                                    cross_embeds=None)
-        x = rms_norm(x, params["final_norm"])
-        return lm_head_apply(self.cfg, params["embed"], x), caches
+    @property
+    def draft(self):
+        if self._draft is None:
+            self._draft = make_draft(self._draft_arg, self.model,
+                                     self.params,
+                                     prefill_fn=self._prefill_all)
+        return self._draft
+
+    def _resolve_spec(self, requests) -> tuple[int, list[int]]:
+        """Effective per-request k (Request.speculate, falling back to the
+        engine default) and the verify-graph width (their max). k > 1
+        requires the fused paged path — eager/numpy stay the 1-token
+        references — and k <= page_tokens (one verify step may cross at
+        most one page boundary)."""
+        ks = [effective_speculate(r, self.speculate) for r in requests]
+        k = max(ks, default=1)
+        if k > 1:
+            if self.kv_pool is None:
+                raise ValueError("speculative decode verifies against the "
+                                 "page pool — construct the engine with "
+                                 "kv_pool=")
+            if self.decode_mode != "fused":
+                raise ValueError(
+                    f"speculative decode (k={k}) runs over the fused verify "
+                    f"step; decode_mode={self.decode_mode!r} stays the "
+                    f"1-token reference")
+            t = self.kv_pool.page_tokens
+            if k > t:
+                raise ValueError(
+                    f"speculate={k} exceeds page_tokens={t}: one verify "
+                    f"step may cross at most one page boundary")
+        return k, ks
 
     def _require_paged(self):
         if self.kv_pool is None:
@@ -122,19 +159,79 @@ class ServeEngine:
                 f"{self.cfg.name}: paged serving needs a "
                 f"global-attention stack")
 
-    def _new_state(self, capacity: int, batch_hint: int) -> PagedKVState:
+    def _new_state(self, capacity: int, batch_hint: int,
+                   tail_slots: int = 1) -> PagedKVState:
         return PagedKVState(self.kv_pool, capacity, self.cfg.num_layers,
                             self.cfg.num_kv_heads, self.cfg.head_dim,
-                            mode=self.decode_mode, batch_hint=batch_hint)
+                            mode=self.decode_mode, batch_hint=batch_hint,
+                            tail_slots=tail_slots)
 
-    def _fused_step_fn(self, slots: int, greedy: bool, temperature: float):
-        key = (slots, greedy, float(temperature))
+    def _fused_step_fn(self, slots: int, greedy: bool, temperature: float,
+                       k: int = 1):
+        key = (slots, greedy, float(temperature), k)
         fn = self._fused_cache.get(key)
         if fn is None:
-            fn = build_fused_step(self.model, slots, greedy=greedy,
+            fn = build_fused_step(self.model, slots, k=k, greedy=greedy,
                                   temperature=temperature)
             self._fused_cache[key] = fn
         return fn
+
+    def _spec_step(self, state: PagedKVState, step_fn, k: int, rows, key):
+        """One speculative verify step over the current batch rows.
+
+        ``rows``: per batch row, ``None`` (dead/padded) or a dict with
+        ``seq`` (pool id), ``history`` (int32 array: true prompt + emitted
+        tokens, whose last entry is the token this step feeds), ``pos``
+        (absolute position of that token), ``eff_k`` (the request's
+        per-step token budget), ``limit`` (tokens still allowed before
+        max_new, >= 1), ``eos`` (stop token or None) and ``stats``
+        (`SpecStats`). Proposes drafts, runs the widened fused step, and
+        advances the state by exactly the per-row kept counts — the
+        accepted prefix + bonus token, clamped by limit/eos; everything
+        else rolls back. Returns the per-row kept-token lists."""
+        b = len(rows)
+        toks = np.zeros((b, k), np.int32)
+        seq_ids = [-1] * b
+        pos = np.zeros(b, np.int32)
+        proposed = [0] * b
+        for i, r in enumerate(rows):
+            if r is None:
+                continue
+            seq_ids[i] = r["seq"]
+            pos[i] = r["pos"]
+            hist = r["history"]
+            toks[i, 0] = hist[-1]
+            n_d = min(r["eff_k"], k) - 1
+            if n_d > 0:
+                drafts = np.asarray(self.draft.propose(hist, n_d), np.int32)
+                proposed[i] = len(drafts)
+                toks[i, 1:1 + len(drafts)] = drafts
+            if proposed[i] < k - 1:     # pad: repeat the last filled token
+                toks[i, 1 + proposed[i]:] = toks[i, proposed[i]]
+        verdict = state.run_spec(step_fn, self.params, toks, seq_ids, pos,
+                                 key)
+        kept = [None] * b
+        advanced = [0] * b
+        for i, r in enumerate(rows):
+            if r is None:
+                continue
+            # padding columns never count as accepted (a non-speculative
+            # row always keeps exactly its 1 bonus token)
+            n_acc = min(int(verdict[i, k]), proposed[i])
+            cand = [int(x) for x in verdict[i, :n_acc + 1][:r["limit"]]]
+            eos = r["eos"]
+            if eos is not None and eos in cand:
+                cand = cand[:cand.index(eos) + 1]
+            kept[i] = cand
+            advanced[i] = len(cand)
+            st = r.get("stats")
+            if st is not None:
+                st.steps += 1
+                st.proposed += proposed[i]
+                st.accepted += min(len(cand), n_acc)
+                st.tokens += len(cand)
+        state.end_step(seq_ids, advanced)
+        return kept
 
     def _maybe_save_knees(self):
         if self.knee_cache is not None and api.knees_dirty():
@@ -157,6 +254,7 @@ class ServeEngine:
         plen = max(len(r.prompt) for r in requests)
         max_new = max(r.max_new_tokens for r in requests)
         cap = plen + max_new
+        spec_k, eff_ks = self._resolve_spec(requests)
         prompts = np.zeros((b, plen), np.int32)
         for i, r in enumerate(requests):
             prompts[i, plen - len(r.prompt):] = r.prompt   # left-pad
@@ -175,7 +273,8 @@ class ServeEngine:
             # remainder buffered until decode fills it
             seq_ids = list(range(self._next_seq, self._next_seq + b))
             self._next_seq += b
-            state = self._new_state(cap, batch_hint=b)
+            state = self._new_state(cap, batch_hint=b,
+                                    tail_slots=2 if spec_k > 1 else 1)
             extract_prefill_pages(self.model, caches, state, seq_ids)
         else:
             caches = pad_caches(self.model, caches, cap, plen)
@@ -190,42 +289,49 @@ class ServeEngine:
         observe = getattr(self.kv_pool.policy, "observe", None) \
             if paged else None
         fused = paged and self.decode_mode == "fused"
-        step_fn = self._fused_step_fn(state.slots, greedy, temperature) \
-            if fused else None
+        spec_stats = [SpecStats() for _ in requests]
         t0 = time.time()
-        for step in range(max_new - 1):
-            pos = plen + step
-            if paged:
-                hits0 = (self.kv_pool.stats["fast_hits"],
-                         self.kv_pool.stats["slow_hits"])
-                g0 = state.gather_s
-                if fused:
-                    # steady state: one int32 control upload, one sampled-
-                    # token download — `tok` never leaves the device
-                    key, sub = jax.random.split(key)
-                    tok_host, tok = state.run_fused(step_fn, self.params,
-                                                    tok, seq_ids, pos, sub)
+        if spec_k > 1:
+            self._generate_spec(requests, eff_ks, spec_k, state, seq_ids,
+                                outs, spec_stats, plen, greedy, temperature,
+                                key, observe)
+        else:
+            step_fn = self._fused_step_fn(state.slots, greedy, temperature) \
+                if fused else None
+            for step in range(max_new - 1):
+                pos = plen + step
+                if paged:
+                    hits0 = (self.kv_pool.stats["fast_hits"],
+                             self.kv_pool.stats["slow_hits"])
+                    g0 = state.gather_s
+                    if fused:
+                        # steady state: one int32 control upload, one
+                        # sampled-token download — `tok` never leaves the
+                        # device
+                        key, sub = jax.random.split(key)
+                        tok_host, tok = state.run_fused(
+                            step_fn, self.params, tok, seq_ids, pos, sub)
+                    else:
+                        logits = paged_decode_step(self.model, self.params,
+                                                   np.asarray(tok), state,
+                                                   seq_ids, pos)
+                        key, sub = jax.random.split(key)
+                        tok = self._sample(logits, greedy, temperature, sub)
+                        tok_host = np.asarray(tok)
+                    if observe is not None:
+                        observe(state.gather_s - g0,
+                                self.kv_pool.stats["fast_hits"] - hits0[0],
+                                self.kv_pool.stats["slow_hits"] - hits0[1])
                 else:
-                    logits = paged_decode_step(self.model, self.params,
-                                               np.asarray(tok), state,
-                                               seq_ids, pos)
+                    logits, caches = self._decode(
+                        self.params, {"tokens": tok[:, None]}, caches,
+                        jnp.int32(pos))
                     key, sub = jax.random.split(key)
                     tok = self._sample(logits, greedy, temperature, sub)
                     tok_host = np.asarray(tok)
-                if observe is not None:
-                    observe(state.gather_s - g0,
-                            self.kv_pool.stats["fast_hits"] - hits0[0],
-                            self.kv_pool.stats["slow_hits"] - hits0[1])
-            else:
-                logits, caches = self._decode(
-                    self.params, {"tokens": tok[:, None]}, caches,
-                    jnp.int32(pos))
-                key, sub = jax.random.split(key)
-                tok = self._sample(logits, greedy, temperature, sub)
-                tok_host = np.asarray(tok)
-            for i in range(b):
-                outs[i].append(int(tok_host[i]))
-            self.stats["decode_steps"] += 1
+                for i in range(b):
+                    outs[i].append(int(tok_host[i]))
+                self.stats["decode_steps"] += 1
         self.stats["decode_s"] += time.time() - t0
         if paged:
             # counter snapshot only — holding the state itself would pin
@@ -247,7 +353,63 @@ class ServeEngine:
         # itself runs max(max_new) - 1 steps; padded rows and post-eos
         # tokens are not "tokens served") — matches serve()'s accounting
         self.stats["tokens"] += sum(len(o) for o in results)
+        self.last_request_stats = []
+        for res, st in zip(results, spec_stats):
+            if st.steps == 0:               # non-speculative lockstep rows
+                st.steps = max(1, max_new - 1)
+                st.tokens = max(0, len(res) - 1)
+            d = st.as_dict()
+            d["tokens"] = len(res)          # eos-trimmed, prefill token incl.
+            self.last_request_stats.append(d)
         return results
+
+    def _generate_spec(self, requests, eff_ks, spec_k, state, seq_ids,
+                       outs, spec_stats, plen, greedy, temperature, key,
+                       observe):
+        """Static-batch speculative decode loop: rows advance at their own
+        accept rates (no lockstep), finished rows turn into seq -1 padding
+        until every row has reached its max_new/eos."""
+        step_fn = self._fused_step_fn(state.slots, greedy, temperature,
+                                      k=spec_k)
+        hist = [np.concatenate([np.asarray(r.prompt, np.int32),
+                                np.asarray(o, np.int32)])
+                for r, o in zip(requests, outs)]
+
+        def is_done(i):
+            r = requests[i]
+            return (len(outs[i]) >= r.max_new_tokens
+                    or (r.eos_token is not None
+                        and outs[i][-1] == r.eos_token))
+
+        done = [is_done(i) for i in range(len(requests))]
+        while not all(done):
+            rows = []
+            for i, r in enumerate(requests):
+                if done[i]:
+                    rows.append(None)
+                    continue
+                rows.append({"seq": seq_ids[i], "history": hist[i],
+                             "pos": plen + len(outs[i]) - 1,
+                             "eff_k": eff_ks[i],
+                             "limit": r.max_new_tokens - len(outs[i]),
+                             "eos": r.eos_token, "stats": spec_stats[i]})
+            hits0 = (self.kv_pool.stats["fast_hits"],
+                     self.kv_pool.stats["slow_hits"])
+            g0 = state.gather_s
+            key, sub = jax.random.split(key)
+            kept = self._spec_step(state, step_fn, spec_k, rows, sub)
+            self.stats["decode_steps"] += 1
+            if observe is not None:
+                observe(state.gather_s - g0,
+                        self.kv_pool.stats["fast_hits"] - hits0[0],
+                        self.kv_pool.stats["slow_hits"] - hits0[1])
+            for i in range(len(requests)):
+                if rows[i] is None:
+                    continue
+                outs[i].extend(kept[i])
+                hist[i] = np.concatenate(
+                    [hist[i], np.asarray(kept[i], np.int32)])
+                done[i] = is_done(i)
 
     # ------------------------------------------------------------------
     # Continuous batching
@@ -264,21 +426,27 @@ class ServeEngine:
         if not requests:
             return []
         self._require_paged()
+        spec_k, _ = self._resolve_spec(requests)
+        spec = spec_k > 1
         pool, cfg = self.kv_pool, self.cfg
-        sched = Scheduler(pool, cfg.num_layers, max_active=max_active)
+        sched = Scheduler(pool, cfg.num_layers, max_active=max_active,
+                          default_speculate=self.speculate)
         order = {id(r): i for i, r in enumerate(requests)}
         if len(order) != len(requests):
             raise ValueError("duplicate Request objects in one serve() call")
         for r in requests:
             sched.submit(r)
         cap = max(len(r.prompt) + r.max_new_tokens for r in requests)
-        state = self._new_state(cap, batch_hint=max_active)
+        state = self._new_state(cap, batch_hint=max_active,
+                                tail_slots=2 if spec else 1)
         rows: list[Optional[_Active]] = [None] * max_active
         results: list[Optional[np.ndarray]] = [None] * len(requests)
+        req_stats: list[Optional[dict]] = [None] * len(requests)
         key = jax.random.PRNGKey(seed)
         observe = getattr(pool.policy, "observe", None)
         fused = self.decode_mode == "fused"
-        step_fn = self._fused_step_fn(state.slots, greedy, temperature) \
+        step_fn = self._fused_step_fn(state.slots, greedy, temperature,
+                                      k=spec_k if spec else 1) \
             if fused else None
         tok_dev = None          # device-resident (max_active,) last tokens
         rows_dirty = True       # host-known token entered a row (admission)
@@ -287,8 +455,12 @@ class ServeEngine:
             state.free_seq(act.seq)
             rows[row_i] = None
             sched.retire(act.req)
-            results[order[id(act.req)]] = \
-                np.array(act.outs[:act.req.max_new_tokens], np.int64)
+            i = order[id(act.req)]
+            results[i] = np.array(act.outs[:act.req.max_new_tokens],
+                                  np.int64)
+            d = act.stats.as_dict()
+            d["tokens"] = len(results[i])   # eos-trimmed, prefill token incl.
+            req_stats[i] = d
 
         def admit(key):
             # loop: an admitted request finishing at its very first token
@@ -325,7 +497,9 @@ class ServeEngine:
                     tok = int(self._sample(logits, greedy, temperature,
                                            sub)[0])
                     self.stats["tokens"] += 1
-                    act = _Active(req, seq, plen, [tok])
+                    act = _Active(req, seq, plen, [tok],
+                                  eff_k=effective_speculate(
+                                      req, self.speculate))
                     row_i = rows.index(None)
                     rows[row_i] = act
                     rows_dirty = True
@@ -339,17 +513,37 @@ class ServeEngine:
                     raise RuntimeError("scheduler stalled with waiting "
                                        "requests and no active rows")
                 break
-            pos = np.zeros(max_active, np.int32)
-            seq_ids = [-1] * max_active
-            for i, act in enumerate(rows):
-                if act is None:
-                    continue
-                pos[i] = act.pos
-                seq_ids[i] = act.seq
+            if not spec:       # the spec branch derives these from srows
+                pos = np.zeros(max_active, np.int32)
+                seq_ids = [-1] * max_active
+                for i, act in enumerate(rows):
+                    if act is None:
+                        continue
+                    pos[i] = act.pos
+                    seq_ids[i] = act.seq
             t0 = time.time()
             hits0 = (pool.stats["fast_hits"], pool.stats["slow_hits"])
             g0 = state.gather_s
-            if fused:
+            if spec:
+                # speculative verify step: k rows per live request, mixed
+                # freely with eff_k=1 (plain) rows; tokens ride in the
+                # control block, so no device-token feedback is needed
+                srows: list[Optional[dict]] = []
+                for act in rows:
+                    if act is None:
+                        srows.append(None)
+                        continue
+                    srows.append({
+                        "seq": act.seq,
+                        "history": np.concatenate(
+                            [np.asarray(act.req.prompt, np.int32),
+                             np.asarray(act.outs, np.int32)]),
+                        "pos": act.pos, "eff_k": act.eff_k,
+                        "limit": act.req.max_new_tokens - len(act.outs),
+                        "eos": act.req.eos_token, "stats": act.stats})
+                key, sub = jax.random.split(key)
+                kept = self._spec_step(state, step_fn, spec_k, srows, sub)
+            elif fused:
                 tok_in = tok_dev
                 if rows_dirty or tok_in is None:
                     # an admission put a host-known first token in a row —
@@ -383,12 +577,19 @@ class ServeEngine:
             for i, act in enumerate(rows):
                 if act is None:
                     continue
-                act.outs.append(int(toks[i]))
-                self.stats["tokens"] += 1
+                if spec:
+                    act.outs.extend(kept[i])
+                    self.stats["tokens"] += len(kept[i])
+                else:
+                    act.outs.append(int(toks[i]))
+                    act.stats.steps += 1
+                    act.stats.tokens += 1
+                    self.stats["tokens"] += 1
                 if act.finished:
                     finish(i, act)
         self.last_peak_active = sched.peak_active
         self.last_transfers = state.transfer_counts()
+        self.last_request_stats = list(req_stats)
         self._maybe_save_knees()
         return results
 

@@ -92,20 +92,25 @@ class PagedKVState:
 
     def __init__(self, pool: PagedKVPool, capacity: int, num_layers: int,
                  hkv: int, hd: int, mode: str = "fused",
-                 batch_hint: int = 1):
+                 batch_hint: int = 1, tail_slots: int = 1):
         if mode not in MODES:
             raise ValueError(f"mode {mode!r} not in {MODES}")
+        if tail_slots not in (1, 2):
+            raise ValueError(f"tail_slots must be 1 or 2, got {tail_slots}")
         self.pool = pool
         self.num_layers = num_layers
         self.hkv, self.hd = hkv, hd
         t = pool.page_tokens
         slots = -(-capacity // t)          # ceil: pages covering capacity
-        self.slots = -(-(slots + 1) // 8) * 8   # +1 tail page, mult. of 8
+        # + tail page(s) (2 for speculative steps, whose k rows may cross
+        # one page boundary into a spill slot), rounded to a mult. of 8
+        self.slots = -(-(slots + tail_slots) // 8) * 8
         self.mode = mode
         self.batch_hint = max(1, batch_hint)   # expected live sequences
         self.tail_len: dict[int, int] = {}     # seq -> tail rows (all layers)
         self.tail_data: dict[tuple, list] = {}  # (seq, layer) -> rows (numpy)
         self._tail_slot: dict[int, int] = {}
+        self._spill_slot: dict[int, int] = {}  # k>1: boundary-crossing rows
         self._device: DevicePagePool | None = None
         self._trash = 0
         if mode != "numpy":
@@ -175,11 +180,23 @@ class PagedKVState:
             self._tail_slot[seq] = slot
         return slot
 
+    def _ensure_spill_slot(self, seq: int) -> int:
+        """Second tail slot for speculative (k > 1) steps: rows past the
+        page boundary scatter here; it is promoted to the tail slot when
+        the accepted tokens actually fill the page."""
+        slot = self._spill_slot.get(seq)
+        if slot is None:
+            slot = self._device.alloc()
+            self._device.zero_slot(slot)
+            self._spill_slot[seq] = slot
+        return slot
+
     # -- per-step protocol ---------------------------------------------------
-    def _page_groups(self, seq: int):
+    def _page_groups(self, seq: int, tail_slots: int = 1):
         """Per-layer pool pids of each logical page of `seq`, zipped into
-        layer-uniform groups, with the slot-overflow check (+1 for the
-        tail slot every decode step appends into)."""
+        layer-uniform groups, with the slot-overflow check (+ the tail
+        slot(s) every decode step appends into — 2 for speculative steps,
+        whose rows may cross one page boundary)."""
         per_layer = [self.pool.seq_pages(seq, l)
                      for l in range(self.num_layers)]
         n = len(per_layer[0])
@@ -188,36 +205,63 @@ class PagedKVState:
                 f"sequence {seq}: ragged page counts across layers "
                 f"({[len(p) for p in per_layer]}) — paged decode requires "
                 f"layer-uniform page structure")
-        if n + 1 > self.slots:
+        if n + tail_slots > self.slots:
             raise ValueError(
-                f"sequence {seq}: {n} pages + a tail page exceed the "
-                f"page-table capacity of {self.slots} slots "
+                f"sequence {seq}: {n} pages + {tail_slots} tail page(s) "
+                f"exceed the page-table capacity of {self.slots} slots "
                 f"({self.slots * self.pool.page_tokens} tokens); size the "
                 f"PagedKVState capacity to the longest request")
         return list(zip(*per_layer)) if n else []
 
-    def begin_step(self, seq_ids, positions) -> np.ndarray:
+    def begin_step(self, seq_ids, positions, k: int = 1,
+                   tokens=None) -> np.ndarray:
         """Host bookkeeping before one decode step: touch each live page
         once (one pool-clock tick for the whole step), sync the device
         mirror (new prefill pages, demotion rewrites), and build the
-        layer-uniform control block the fused step consumes —
-        ``(b, slots + 4)`` int32 rows ``[page table | tail slot | tail row
-        | position | kv length]``, where the length already counts the
-        token this step appends. Dead rows (seq -1) get the scratch slot
-        and length 1."""
+        layer-uniform control block the fused step consumes.
+
+        ``k == 1`` (plain decode): ``(b, slots + 4)`` int32 rows
+        ``[page table | tail slot | tail row | position | kv length]``,
+        where the length already counts the token this step appends.
+
+        ``k > 1`` (speculative verify): ``(b, slots + 5 + k)`` rows
+        ``[page table | tail slot | spill slot | tail row | position |
+        kv length | k input tokens]`` — the spill slot receives scattered
+        rows that cross the page boundary, ``position``/``length`` are row
+        0's (later rows shift by +1 each inside the graph), and the input
+        tokens (last accepted + k-1 drafts, from ``tokens``) ride in the
+        control block so the whole verify step still costs ONE upload.
+
+        Dead rows (seq -1) get the scratch slot and length 1."""
         t0 = time.perf_counter()
         t = self.pool.page_tokens
         b = len(seq_ids)
+        if k > 1 and self._device is None:
+            raise RuntimeError("speculative (k > 1) steps scatter inside "
+                               "the fused graph — they need a device pool")
+        if k > t:
+            raise ValueError(
+                f"k={k} tokens per step exceed page_tokens={t}: one step "
+                f"may spill across at most one page boundary")
         positions = np.broadcast_to(np.asarray(positions, np.int32), (b,))
-        control = np.zeros((b, self.slots + 4), np.int32)
-        control[:, self.slots] = self._trash
-        control[:, self.slots + 3] = 1
+        s = self.slots
+        width = s + 4 if k == 1 else s + 5 + k
+        # column offsets past the page table (k=1 keeps the PR-4 layout)
+        c_tail, c_row, c_pos, c_len = (s, s + 1, s + 2, s + 3) if k == 1 \
+            else (s, s + 2, s + 3, s + 4)
+        control = np.zeros((b, width), np.int32)
+        control[:, c_tail] = self._trash
+        control[:, c_len] = 1
+        if k > 1:
+            control[:, s + 1] = self._trash                   # spill slot
+            if tokens is not None:
+                control[:, s + 5:] = np.asarray(tokens, np.int32)
         groups_by_row, touch_pids, sync_groups = [], [], []
         for seq in seq_ids:
             if seq < 0:
                 groups_by_row.append(None)
                 continue
-            groups = self._page_groups(seq)
+            groups = self._page_groups(seq, tail_slots=1 if k == 1 else 2)
             for g in groups:
                 touch_pids.extend(g)
             sync_groups.extend(groups)
@@ -234,11 +278,14 @@ class PagedKVState:
             if self._device is not None:
                 for n, g in enumerate(groups):
                     control[i, n] = slot_of[g[0]]
-                control[i, self.slots] = self._ensure_tail_slot(seq)
-                control[i, len(groups)] = control[i, self.slots]
-            control[i, self.slots + 1] = tail
-            control[i, self.slots + 2] = positions[i]
-            control[i, self.slots + 3] = len(groups) * t + tail + 1
+                control[i, c_tail] = self._ensure_tail_slot(seq)
+                control[i, len(groups)] = control[i, c_tail]
+                if k > 1:
+                    control[i, s + 1] = self._ensure_spill_slot(seq)
+                    control[i, len(groups) + 1] = control[i, s + 1]
+            control[i, c_row] = tail
+            control[i, c_pos] = positions[i]
+            control[i, c_len] = len(groups) * t + tail + 1
         self._step = {"seq_ids": list(seq_ids), "control": control,
                       "table": None, "lengths": None}
         self.gather_s += time.perf_counter() - t0
@@ -272,6 +319,28 @@ class PagedKVState:
         self.d2h += 1
         self.end_step(seq_ids)
         return tok_host, tok_dev
+
+    def run_spec(self, step_fn, params, tokens_k, seq_ids, positions, key):
+        """Drive one speculative verify step (`build_fused_step(k=...)`)
+        with the steady-state transfer protocol: begin_step bookkeeping,
+        ONE control upload (page table + tail/spill slots + the k input
+        tokens), donated pool arrays through the jit, ONE download of the
+        ``(b, k + 1)`` verdict block ``[k sampled tokens | accepted draft
+        count]`` — 2 host<->device crossings per *accepted run* of up to k
+        tokens. ``tokens_k`` is the (b, k) host matrix [last accepted |
+        k-1 drafts]. The step is left OPEN: the caller decides how many
+        tokens each row keeps (eos / max_new / per-request k clamping) and
+        must call ``end_step(seq_ids, advanced)`` with those counts."""
+        control = self.begin_step(seq_ids, positions,
+                                  k=int(np.asarray(tokens_k).shape[1]),
+                                  tokens=tokens_k)
+        cdev = jnp.asarray(control)
+        self.h2d += 1
+        out_dev, arrays = step_fn(params, self.device_arrays, cdev, key)
+        self.adopt_device_arrays(arrays)
+        out = np.asarray(out_dev)
+        self.d2h += 1
+        return out
 
     def append_step_rows(self, layer: int, k_rows: np.ndarray,
                          v_rows: np.ndarray):
@@ -310,24 +379,42 @@ class PagedKVState:
         return api.run("paged_attention", q,
                        *[jnp.asarray(a) for a in view], backend=backend)
 
-    def end_step(self, seq_ids):
+    def end_step(self, seq_ids, advanced=None):
         """Host bookkeeping after one decode step: bump tail counters and
         turn filled tails into pool pages — per layer, tier decided by the
         pool; the device tail slot is adopted in place (its float rows are
         already current; slow placements are rewritten by the next sync).
         The fused path reads a filled page back once (2 transfers per
         page_tokens tokens, amortized); it never touches row data on the
-        per-token path."""
+        per-token path.
+
+        ``advanced`` (speculative steps) is the per-sequence count of
+        tokens actually KEPT this step — the accepted draft prefix plus
+        the bonus token, after the caller's eos/max_new clamping. Rows the
+        verify step scattered beyond the kept count are *phantom*: the
+        tail counter does not advance over them, the per-row length
+        masking keeps them invisible, and the next step's scatters
+        overwrite them — so the pool never holds (and never ``put``s)
+        phantom tokens. That bookkeeping IS the rollback. When the kept
+        tokens cross the page boundary, the spill slot (which already
+        holds their scattered rows) is promoted to be the new tail slot.
+        Default: 1 token per live row (the plain decode path)."""
         t0 = time.perf_counter()
         t = self.pool.page_tokens
-        for seq in seq_ids:
-            if seq < 0:
+        if advanced is None:
+            advanced = [1] * len(seq_ids)
+        for seq, adv in zip(seq_ids, advanced):
+            if seq < 0 or adv == 0:
                 continue
-            n = self.tail_len.get(seq, 0) + 1
+            if not 0 < adv <= t:
+                raise ValueError(
+                    f"sequence {seq}: advanced {adv} tokens in one step "
+                    f"(valid: 1..page_tokens={t})")
+            n = self.tail_len.get(seq, 0) + adv
             if n < t:
                 self.tail_len[seq] = n
                 continue
-            self.tail_len[seq] = 0
+            self.tail_len[seq] = n - t
             if self._device is not None:
                 slot = self._tail_slot.pop(seq)
                 k_all, v_all = self._device.read_slot(slot)
@@ -335,7 +422,19 @@ class PagedKVState:
                     self.pool.put(seq, k_all[l], v_all[l], layer=l)
                     for l in range(self.num_layers))
                 self._device.adopt(group, slot, self.pool)
+                spill = self._spill_slot.pop(seq, None)
+                if spill is not None:
+                    # rows past the boundary were scattered here already
+                    self._tail_slot[seq] = spill
+                elif n > t:
+                    raise RuntimeError(
+                        f"sequence {seq}: {n - t} tokens crossed the page "
+                        f"boundary without a spill slot — multi-token "
+                        f"steps must begin_step with k > 1")
             else:
+                if adv != 1:
+                    raise RuntimeError("multi-token steps need the device "
+                                       "pool (decode_mode='fused')")
                 for l in range(self.num_layers):
                     rows = self.tail_data.pop((seq, l))
                     self.pool.put(seq, np.stack([r[0] for r in rows]),
@@ -355,9 +454,10 @@ class PagedKVState:
         self.tail_len.pop(seq, None)
         for key in [k for k in self.tail_data if k[0] == seq]:
             self.tail_data.pop(key)
-        slot = self._tail_slot.pop(seq, None)
-        if slot is not None and self._device is not None:
-            self._device.release_slot(slot)
+        for slot in (self._tail_slot.pop(seq, None),
+                     self._spill_slot.pop(seq, None)):
+            if slot is not None and self._device is not None:
+                self._device.release_slot(slot)
         return destroyed
 
     # -- numpy fallback gather ----------------------------------------------
@@ -523,23 +623,48 @@ def paged_decode_step(model, params, tokens, state: PagedKVState, seq_ids,
 # ---------------------------------------------------------------------------
 # Fused decode step: the whole token in one jitted, device-resident graph
 # ---------------------------------------------------------------------------
-def build_fused_step(model, num_slots: int, *, backend: str = "auto",
-                     greedy: bool = True, temperature: float = 1.0):
+def build_fused_step(model, num_slots: int, *, k: int = 1,
+                     backend: str = "auto", greedy: bool = True,
+                     temperature: float = 1.0):
     """Build the jitted fused decode step.
 
-    Returned callable: ``step(params, arrays, tokens, control, key) ->
-    (sampled_tokens (b,) int32, new_arrays)`` where ``arrays`` is the
-    layer-stacked device pool tuple (DONATED — callers must adopt the
-    returned tuple) and ``control`` the int32 block from
-    `PagedKVState.begin_step`. Everything the step touches is already
-    device-resident: the K/V rows of each layer are appended by in-place
-    scatters on the donated pool inside the graph, the paged-attention
-    kernel reads the layer's pages via a scalar-prefetched layer index
-    resolved at trace time through ``api.run(..., backend=...)``, and only
-    the sampled tokens come back — the host sees no tensor data."""
+    ``k == 1`` — the plain PR-4 step. Returned callable:
+    ``step(params, arrays, tokens, control, key) -> (sampled_tokens (b,)
+    int32, new_arrays)`` where ``arrays`` is the layer-stacked device pool
+    tuple (DONATED — callers must adopt the returned tuple) and
+    ``control`` the int32 block from `PagedKVState.begin_step`.
+    Everything the step touches is already device-resident: the K/V rows
+    of each layer are appended by in-place scatters on the donated pool
+    inside the graph, the paged-attention kernel reads the layer's pages
+    via a scalar-prefetched layer index resolved at trace time through
+    ``api.run(..., backend=...)``, and only the sampled tokens come back —
+    the host sees no tensor data.
+
+    ``k > 1`` — the speculative VERIFY step over the same graph, widened
+    to k token rows per sequence. Returned callable:
+    ``step(params, arrays, control, key) -> (verdict (b, k + 1) int32,
+    new_arrays)``. The k input tokens (last accepted + k-1 draft tokens)
+    ride inside the control block (`begin_step(k=..., tokens=...)`), every
+    layer scatters k K/V rows (spilling across at most one page boundary
+    into the control block's spill slot) and attends all k rows through
+    the kernel's multi-query-row path in ONE KV pass, and the graph
+    finishes with the accept rule itself: position j's sampled token is
+    the model's answer after consuming drafts 0..j-1, draft j is accepted
+    while it equals the sampled token at position j-1, and the verdict
+    block packs ``[k sampled tokens | accepted draft count]`` so the host
+    learns an entire accepted run (plus the standard bonus token) from a
+    single download. Greedy verification emits exactly the tokens the
+    k=1 step would; sampling draws each position from its true
+    conditional (drafts are deterministic), so the distribution is exact
+    though the stream consumes keys differently than the k=1 path."""
     cfg = model.cfg
     gs = len(model.group_kinds)
     s = num_slots
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    if k > 1:
+        return _build_spec_step(model, num_slots, k, backend=backend,
+                                greedy=greedy, temperature=temperature)
 
     def step(params, arrays, tokens, control, key):
         kf, vf, kq, vq, ks, vs = arrays
@@ -593,5 +718,90 @@ def build_fused_step(model, num_slots: int, *, backend: str = "auto",
             tok = jax.random.categorical(key, logits / temperature,
                                          axis=-1).astype(jnp.int32)
         return tok, (kf, vf, kq, vq, ks, vs)
+
+    return jax.jit(step, donate_argnums=(1,))
+
+
+def _build_spec_step(model, num_slots: int, k: int, *, backend: str = "auto",
+                     greedy: bool = True, temperature: float = 1.0):
+    """The k-row speculative verify graph behind `build_fused_step(k>1)`;
+    see that docstring for the contract."""
+    cfg = model.cfg
+    gs = len(model.group_kinds)
+    s = num_slots
+
+    def step(params, arrays, control, key):
+        kf, vf, kq, vq, ks, vs = arrays
+        ll, c, t = kf.shape[0], kf.shape[1], kf.shape[2]
+        table = control[:, :s]
+        tail1 = control[:, s]
+        spill = control[:, s + 1]
+        tail_row = control[:, s + 2]
+        pos0 = control[:, s + 3]
+        lengths = control[:, s + 4]                         # row 0's length
+        tokens = control[:, s + 5:s + 5 + k]                # (b, k)
+        offs = jnp.arange(k, dtype=jnp.int32)
+        positions = pos0[:, None] + offs[None, :]           # (b, k)
+        # per-row scatter target: rows crossing the page boundary go to
+        # the spill slot (tail_row < t and k <= t bound r below 2t)
+        r = tail_row[:, None] + offs[None, :]
+        slot = jnp.where(r < t, tail1[:, None], spill[:, None])
+        row_base = slot * t + jnp.where(r < t, r, r - t)    # (b, k)
+        flat_kv = (ll * c * t,) + kf.shape[3:]
+
+        x = model._embed_in(params, {"tokens": tokens})     # (b, k, d)
+
+        def layer_step(x, kf, vf, kind, p, layer):
+            h = rms_norm(x, p["norm1"])
+            ap = p["attn"]
+            q, k_new, v_new = decode_qkv(cfg, ap, h, positions)
+            idx = (layer * (c * t) + row_base).reshape(-1)  # (b * k,)
+            b = k_new.shape[0]
+            kf = kf.reshape(flat_kv).at[idx] \
+                .set(k_new.reshape((b * k,) + k_new.shape[2:])
+                     .astype(kf.dtype)).reshape(kf.shape)
+            vf = vf.reshape(flat_kv).at[idx] \
+                .set(v_new.reshape((b * k,) + v_new.shape[2:])
+                     .astype(vf.dtype)).reshape(vf.shape)
+            # ONE KV pass scores all k rows (multi-query-row kernel path:
+            # row j masks to lengths + j)
+            y = api.run("paged_attention", q, kf, vf, kq, vq, ks, vs,
+                        table, lengths, jnp.asarray(layer, jnp.int32),
+                        backend=backend)
+            y = jnp.einsum("bshk,hkd->bsd", y.astype(x.dtype), ap["wo"])
+            x = x + y
+            x, _ = mlp_tail(cfg, kind, p, x)
+            return x, kf, vf
+
+        def group_body(carry, xs):
+            x, kf, vf = carry
+            gp, g = xs
+            for i, kind in enumerate(model.group_kinds):
+                x, kf, vf = layer_step(x, kf, vf, kind, gp[f"l{i}"],
+                                       g * gs + i)
+            return (x, kf, vf), None
+
+        (x, kf, vf), _ = jax.lax.scan(
+            group_body, (x, kf, vf),
+            (params["groups"], jnp.arange(model.n_groups)))
+        for i, kind in enumerate(model.tail_kinds):
+            x, kf, vf = layer_step(x, kf, vf, kind, params["tail"][f"t{i}"],
+                                   model.n_groups * gs + i)
+
+        x = rms_norm(x, params["final_norm"])
+        logits = lm_head_apply(cfg, params["embed"], x)      # (b, k, V)
+        if greedy:
+            samp = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            samp = jax.random.categorical(key, logits / temperature,
+                                          axis=-1).astype(jnp.int32)
+        # accept rule: draft j (input column j, j >= 1) survives while it
+        # equals the model's sampled token after the previous position —
+        # the count of the all-match prefix, exactly the tokens the
+        # autoregressive path would have produced
+        match = (tokens[:, 1:] == samp[:, :-1]).astype(jnp.int32)
+        n_acc = jnp.cumprod(match, axis=1).sum(axis=1)
+        verdict = jnp.concatenate([samp, n_acc[:, None]], axis=1)
+        return verdict, (kf, vf, kq, vq, ks, vs)
 
     return jax.jit(step, donate_argnums=(1,))

@@ -36,6 +36,19 @@ class Request:
     prompt: np.ndarray                 # (prompt_len,) int32
     max_new_tokens: int = 16
     eos_token: Optional[int] = None    # stop (inclusive) when sampled
+    # tokens per decode step: None -> the engine's default; <= 1 -> plain
+    # one-token decode; k > 1 -> speculative verify steps of k rows (the
+    # continuous batch freely mixes speculative and plain requests)
+    speculate: Optional[int] = None
+
+
+def effective_speculate(req: Request, default: int = 0) -> int:
+    """Resolve a request's per-step token budget: ``Request.speculate``
+    wins over the engine/scheduler default; floored at 1 (plain decode).
+    The single rule shared by the verify-graph width, admission
+    budgeting, and per-row draft counts."""
+    k = req.speculate if req.speculate is not None else default
+    return max(1, k)
 
 
 def prefix_page_hashes(tokens: np.ndarray, page_tokens: int) -> list[str]:
@@ -56,12 +69,16 @@ def prefix_page_hashes(tokens: np.ndarray, page_tokens: int) -> list[str]:
 class Scheduler:
     """Waiting queue + admission gate over a `PagedKVPool`."""
 
-    def __init__(self, pool, num_layers: int, max_active: int = 4):
+    def __init__(self, pool, num_layers: int, max_active: int = 4,
+                 default_speculate: int = 0):
         if max_active < 1:
             raise ValueError(f"max_active must be >= 1, got {max_active}")
         self.pool = pool
         self.num_layers = num_layers
         self.max_active = max_active
+        # engine-level speculation default, used to resolve each request's
+        # effective k for the admission budget (Request.speculate wins)
+        self.default_speculate = default_speculate
         self.waiting: deque[Request] = deque()
         self._reserved: dict[int, int] = {}    # id(request) -> page need
         # pages already live when this serve call started (e.g. left by
@@ -97,7 +114,14 @@ class Scheduler:
     def pages_needed(self, req: Request) -> int:
         t = self.pool.page_tokens
         cap = len(req.prompt) + req.max_new_tokens
-        return self.num_layers * (-(-cap // t) + 1)
+        pages = -(-cap // t) + 1
+        if effective_speculate(req, self.default_speculate) > 1:
+            # k-token worst case: a verify step may hold up to k - 1
+            # in-flight rows past the page boundary in a spill page per
+            # layer (rejected rows roll back, but the headroom must cover
+            # the step while it is in flight)
+            pages += 1
+        return self.num_layers * pages
 
     def admit(self) -> list[Request]:
         """Pop every waiting request that fits right now (FIFO prefix)."""

@@ -1,0 +1,174 @@
+"""Speculative multi-token decode: draft proposers + per-request stats.
+
+The fused paged decode step (PR 4) cut steady-state host traffic to 2
+host<->device transfers *per token*; this subsystem amortizes that
+control traffic — and the page-table gather — across *runs* of tokens. A
+cheap proposer drafts ``k - 1`` tokens per request, one widened fused
+step (`paged_decode.build_fused_step(k=...)`) scores all k rows against
+the page pool in a single jitted graph and a single KV pass, and the
+standard accept rule keeps the matched prefix plus one bonus token. The
+steady state becomes 2 transfers per *accepted run* of up to k tokens —
+more compute per byte moved, the paper's memory-centric trade applied to
+the serving control plane.
+
+Draft proposers are host-side and deterministic — they only ever steer
+*which* tokens get verified, never what the model emits. Greedy
+verification is therefore token-for-token identical to the 1-token fused
+path for ANY proposer (asserted in tests/test_speculative.py); a bad
+proposer costs acceptance rate, not correctness.
+
+Two built-ins + a hook:
+
+``ngram``  `NGramDraft` — prompt-lookup decoding: match the history's
+           final n-gram against earlier history and propose the tokens
+           that followed it. Free (no model call), surprisingly strong on
+           repetitive continuations (code, templated text, greedy loops).
+
+``self``   `ModelDraft(model, params)` pointed at the *serving* model —
+           drafts by greedy bucketed-prefill continuation. Near-1.0
+           acceptance (prefill vs. paged-decode numerics may rarely
+           disagree on argmax), so it is the degenerate correctness/
+           throughput reference: every verify step advances ~k tokens.
+
+hook       `ModelDraft(small_model, small_params)` — any smaller model
+           (or any object with ``propose(history, n)``) plugs in as the
+           classical draft model. `make_draft` resolves all three.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class NGramDraft:
+    """Prompt-lookup drafting: find the most recent earlier occurrence of
+    the history's final ``n``-gram (falling back to shorter grams) and
+    propose the tokens that followed it; with no match, repeat the last
+    token. Proposals shorter than requested are padded by repeating their
+    last token — padding can only lose acceptances, never correctness."""
+
+    name = "ngram"
+
+    def __init__(self, n: int = 3):
+        if n < 1:
+            raise ValueError(f"n-gram order must be >= 1, got {n}")
+        self.n = n
+
+    def propose(self, history: np.ndarray, n_draft: int) -> np.ndarray:
+        h = np.asarray(history, np.int32)
+        if n_draft <= 0:
+            return np.zeros(0, np.int32)
+        for gl in range(min(self.n, len(h) - 1), 0, -1):
+            pat = h[len(h) - gl:]
+            # candidate windows start strictly before the final suffix
+            body = h[:len(h) - 1]
+            if len(body) < gl:
+                continue
+            win = np.lib.stride_tricks.sliding_window_view(body, gl)
+            hits = np.nonzero((win == pat).all(axis=1))[0]
+            if not len(hits):
+                continue
+            start = int(hits[-1]) + gl          # most recent occurrence
+            cont = h[start:start + n_draft]
+            if not len(cont):
+                continue
+            if len(cont) < n_draft:
+                cont = np.concatenate(
+                    [cont, np.full(n_draft - len(cont), cont[-1], np.int32)])
+            return cont.astype(np.int32)
+        return np.full(n_draft, h[-1], np.int32)
+
+
+class ModelDraft:
+    """Draft by greedy continuation of a (usually smaller) model: one
+    bucketed full-context prefill per draft token, so it is stateless
+    across steps (no draft-side KV cache to keep consistent with
+    accept/rollback) and compiles once per power-of-two context bucket.
+    Pointed at the serving model itself this is the ``self`` draft — the
+    near-perfect-acceptance reference configuration. A production small
+    model would keep its own decode cache; this hook trades that
+    efficiency for having zero state to roll back."""
+
+    name = "model"
+
+    def __init__(self, model, params, prefill_fn=None):
+        """``prefill_fn`` — an already-jitted ``(params, batch) ->
+        (all-position logits, caches)`` to share compile caches with the
+        caller (the engine hands over its own for the ``self`` draft, so
+        each prompt bucket compiles the full model once, not twice)."""
+        from repro.serve.steps import prefill_all_positions
+        self.model, self.params = model, params
+        self._prefill = prefill_fn if prefill_fn is not None else \
+            jax.jit(functools.partial(prefill_all_positions, model))
+
+    def propose(self, history: np.ndarray, n_draft: int) -> np.ndarray:
+        toks = np.asarray(history, np.int32)
+        out = []
+        for _ in range(max(0, n_draft)):
+            plen = len(toks)
+            bucket = 8
+            while bucket < plen:
+                bucket *= 2
+            padded = np.zeros(bucket, np.int32)
+            padded[:plen] = toks
+            logits, _ = self._prefill(self.params,
+                                      {"tokens": jnp.asarray(padded[None])})
+            nxt = int(jnp.argmax(logits[0, plen - 1]))
+            out.append(nxt)
+            toks = np.append(toks, np.int32(nxt))
+        return np.asarray(out, np.int32)
+
+
+def make_draft(draft, model=None, params=None, prefill_fn=None):
+    """Resolve an engine/launcher draft argument: ``"ngram"`` /
+    ``"ngram:N"`` (order N), ``"self"`` (the serving model drafts for
+    itself, reusing the caller's jitted ``prefill_fn`` when given), or
+    any object already exposing ``propose(history, n)`` — the
+    small-model hook."""
+    if hasattr(draft, "propose"):
+        return draft
+    if isinstance(draft, str):
+        if draft == "ngram" or draft.startswith("ngram:"):
+            n = int(draft.split(":", 1)[1]) if ":" in draft else 3
+            return NGramDraft(n=n)
+        if draft == "self":
+            if model is None or params is None:
+                raise ValueError("draft='self' needs the serving model + "
+                                 "params to draft with")
+            return ModelDraft(model, params, prefill_fn=prefill_fn)
+    raise ValueError(f"unknown draft {draft!r}: expected 'ngram[:N]', "
+                     f"'self', or an object with propose(history, n)")
+
+
+class SpecStats:
+    """Per-request speculative accounting: ``proposed`` draft tokens,
+    ``accepted`` (drafts that survived verification AND were kept after
+    eos/max_new clamping), ``steps`` verify steps the request was live,
+    ``tokens`` emitted. ``accept_rate`` = accepted / proposed;
+    ``tokens_per_step`` is the amortization factor the whole subsystem
+    exists to raise above 1."""
+
+    __slots__ = ("steps", "proposed", "accepted", "tokens")
+
+    def __init__(self):
+        self.steps = 0
+        self.proposed = 0
+        self.accepted = 0
+        self.tokens = 0
+
+    @property
+    def accept_rate(self):
+        return self.accepted / self.proposed if self.proposed else None
+
+    @property
+    def tokens_per_step(self):
+        return self.tokens / self.steps if self.steps else 0.0
+
+    def as_dict(self) -> dict:
+        return {"tokens": self.tokens, "steps": self.steps,
+                "tokens_per_step": self.tokens_per_step,
+                "proposed": self.proposed, "accepted": self.accepted,
+                "accept_rate": self.accept_rate}

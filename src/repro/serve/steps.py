@@ -8,7 +8,25 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from repro.models import Model
+from repro.models.layers import lm_head_apply, rms_norm
 from repro.sharding.partition import with_shardings
+
+
+def prefill_all_positions(model: Model, params, batch):
+    """`forward_prefill` variant returning logits at *every* position.
+    Continuous admission (and the draft models of the speculative path)
+    right-pad prompts to a power-of-two bucket (causal masking keeps
+    prefix K/V and logits exact), so a jitted wrapper compiles once per
+    bucket instead of once per distinct prompt length; the caller reads
+    ``logits[:, prompt_len - 1]``."""
+    x = model._embed_in(params, batch)
+    b, sl = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(sl, dtype=jnp.int32), (b, sl))
+    x, _, caches = model._run_stack(params, x, mode="prefill",
+                                    positions=positions, caches=None,
+                                    cross_embeds=None)
+    x = rms_norm(x, params["final_norm"])
+    return lm_head_apply(model.cfg, params["embed"], x), caches
 
 
 def make_prefill_step(model: Model):
