@@ -22,6 +22,7 @@ import numpy as np
 from repro.configs import smoke_config
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.kvcache import PagedKVPool
+from repro.serve.metrics import toks_per_s, us_per
 
 PLEN = 64          # multiple of PAGE_TOKENS: prefill emits only full pages
 NEW = 12
@@ -49,7 +50,7 @@ def run():
         eng.stats["decode_steps"] = 0
         eng.generate(_reqs(cfg, batch, seed=1))
         steps = max(eng.stats["decode_steps"], 1)
-        us = 1e6 * eng.stats["decode_s"] / steps
+        us = us_per(eng.stats["decode_s"], steps)
         step_us[mode] = us
         h2d, d2h = eng.last_transfers
         rows.append((f"serve.decode_step.b{batch}.{mode}", us,
@@ -96,7 +97,7 @@ def run():
         t0 = time.perf_counter()
         for _ in range(n):
             step()
-        gather_us[mode] = (time.perf_counter() - t0) / n * 1e6
+        gather_us[mode] = us_per(time.perf_counter() - t0, n)
         label = "numpy_gather" if mode == "numpy" else "fused_bookkeeping"
         rows.append((f"serve.gather_steady.{label}", gather_us[mode],
                      f"pool={npages}pages_b={b}"))
@@ -113,8 +114,8 @@ def run():
     outs = eng.serve(reqs, max_active=2)
     wall = time.time() - t0
     tok = sum(len(o) for o in outs)
-    rows.append(("serve.continuous.tok_per_s", 1e6 * wall / max(tok, 1),
-                 f"{tok / max(wall, 1e-9):.1f}tok_s_live_pages={len(pool.pages)}"))
+    rows.append(("serve.continuous.tok_per_s", us_per(wall, tok),
+                 f"{toks_per_s(tok, wall):.1f}tok_s_live_pages={len(pool.pages)}"))
 
     # speculative multi-token decode: k-token verify steps over the fused
     # graph vs the 1-token fused/eager baselines. The headline metric is
@@ -155,8 +156,8 @@ def run():
         name = f"{mode}.k{max(k, 1)}.{draft}" if k > 1 else f"{mode}.k1"
         spec_syncs[name] = syncs / toks
         rates = "" if rate is None else f"_accept={rate:.2f}"
-        rows.append((f"serve.spec.tok.{name}", 1e6 * wall / toks,
-                     f"{toks / max(wall, 1e-9):.1f}tok_s{rates}"))
+        rows.append((f"serve.spec.tok.{name}", us_per(wall, toks),
+                     f"{toks_per_s(toks, wall):.1f}tok_s{rates}"))
         rows.append((f"serve.spec.syncs_per_token.{name}", syncs / toks,
                      f"decode_syncs={syncs}_tokens={toks}"))
     for name, v in spec_syncs.items():

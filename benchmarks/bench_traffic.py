@@ -1,0 +1,100 @@
+"""Trace-driven traffic benchmark: open-loop load against the async
+streaming front end, persisted as a per-PR perf trajectory.
+
+Each standing mix in `repro.serve.traffic.MIXES` (uniform,
+prefix-heavy, speculative) replays twice on one engine — the first pass
+warms the fused-step jit cache for the trace's shapes, the second is
+measured — and reports client-observed latency from `serve.metrics`:
+throughput, p50/p99 TTFT, p50/p99 per-token latency, plus pool-side
+checks (prefix `shared_puts`, zero pages leaked by cancellations).
+
+Results persist to ``BENCH_traffic.json`` at the repo root: ``latest``
+holds this run, ``runs`` appends history so the serving stack's perf
+trajectory survives across PRs. Smoke-model CPU numbers track *relative*
+movement (queueing behaviour, sharing, speculative step counts), not
+absolute hardware latency.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from repro.configs import smoke_config
+from repro.serve.engine import ServeEngine
+from repro.serve.kvcache import PagedKVPool
+from repro.serve.metrics import us_per
+from repro.serve.traffic import MIXES, run_trace
+
+PAGE_TOKENS = 8
+MAX_ACTIVE = 3
+RESULT_PATH = Path(__file__).resolve().parent.parent / "BENCH_traffic.json"
+MAX_RUNS = 50          # history entries kept in BENCH_traffic.json
+
+
+def _bench_mixes(mix_names=("uniform", "prefix_heavy", "speculative")):
+    params = None
+    results = {}
+    for name in mix_names:
+        spec = MIXES[name]
+        pool = PagedKVPool(page_tokens=PAGE_TOKENS)
+        eng = ServeEngine(smoke_config("starcoder2-7b"),
+                          params=params, kv_pool=pool)
+        params = eng.params
+        run_trace(eng, spec.override(arrival_rate=1000.0),
+                  max_active=MAX_ACTIVE)           # warm pass: jit compiles
+        assert pool.live_pages == 0, f"warm pass leaked pages ({name})"
+        results[name] = run_trace(eng, spec, max_active=MAX_ACTIVE)
+    return results
+
+
+def persist(results: dict, path: Path = RESULT_PATH) -> dict:
+    entry = {"timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+             "model": "starcoder2-7b(smoke)", "page_tokens": PAGE_TOKENS,
+             "max_active": MAX_ACTIVE, "mixes": results}
+    doc = {"schema": 1, "runs": []}
+    if path.exists():
+        try:
+            doc = json.loads(path.read_text())
+        except ValueError:
+            pass
+    doc["schema"] = 1
+    doc["latest"] = entry
+    doc.setdefault("runs", []).append(entry)
+    doc["runs"] = doc["runs"][-MAX_RUNS:]
+    path.write_text(json.dumps(doc, indent=2) + "\n")
+    return entry
+
+
+def run():
+    results = _bench_mixes()
+    persist(results)
+    rows = []
+    for name, r in results.items():
+        ok = r["cancelled_pages_freed"] and r["n_done"] + r["n_cancelled"] \
+            + r["n_rejected"] == r["n_trace"]
+        rows.append((f"traffic.{name}.throughput",
+                     us_per(r["wall_s"], r["tokens"]),
+                     f"{r['throughput_tok_s']:.1f}tok_s"))
+        rows.append((f"traffic.{name}.ttft", r["ttft"]["p50_ms"] * 1e3,
+                     f"p99_{r['ttft']['p99_ms']:.1f}ms"))
+        rows.append((f"traffic.{name}.tpot", r["tpot"]["p50_ms"] * 1e3,
+                     f"p99_{r['tpot']['p99_ms']:.1f}ms"))
+        rows.append((f"traffic.{name}.accounting", 0.0,
+                     f"done{r['n_done']}_cancel{r['n_cancelled']}"
+                     f"_shared{r['pool_shared_puts']}"
+                     f"_{'clean' if ok else 'LEAKED'}"))
+        if not ok:
+            raise AssertionError(
+                f"traffic mix {name}: pages leaked or requests lost "
+                f"({json.dumps({k: r[k] for k in ('n_done', 'n_cancelled', 'n_rejected', 'n_trace', 'pool_live_pages_end')})})")
+    # the prefix-heavy mix must actually exercise the prefix cache
+    if results.get("prefix_heavy", {}).get("pool_shared_puts", 0) <= 0:
+        raise AssertionError("prefix_heavy mix shared no pages")
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.2f},{derived}")
+    print(f"wrote {RESULT_PATH}")

@@ -9,6 +9,8 @@
   bench_roofline   —     §Dry-run/§Roofline cell table
   bench_serve      —     serve layer: device vs numpy page gather,
                          continuous-batching throughput
+  bench_traffic    —     open-loop trace replay through the async front
+                         end; persists BENCH_traffic.json trajectory
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only nero,sibyl]
 """
@@ -20,7 +22,7 @@ import time
 import traceback
 
 SUITES = ("roofline", "nero", "precision", "napel", "leaper", "sibyl",
-          "serve")
+          "serve", "traffic")
 
 
 def main() -> None:

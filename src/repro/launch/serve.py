@@ -13,6 +13,16 @@ CPU; production shapes via the dry-run).
     # through the fused paged graph (2 host syncs per accepted run):
     PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-7b \
         --smoke --paged --speculate 4 --draft ngram
+
+    # async streaming front end over the same batch (open-loop lifecycle,
+    # per-request p50/p99 latency summary):
+    PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-7b \
+        --smoke --frontend --max-active 2
+
+    # replay a named synthetic traffic mix (see repro.serve.traffic.MIXES;
+    # key=val overrides after ':'):
+    PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-7b \
+        --smoke --trace prefix_heavy:n_requests=24,arrival_rate=100
 """
 from __future__ import annotations
 
@@ -58,6 +68,19 @@ def main():
                     help="draft proposer for --speculate: 'ngram' / "
                          "'ngram:N' (prompt-lookup, order N) or 'self' "
                          "(the serving model drafts for itself)")
+    ap.add_argument("--frontend", action="store_true",
+                    help="stream the batch through the async front end "
+                         "(implies --paged) and print the per-request "
+                         "latency summary")
+    ap.add_argument("--trace", default=None, metavar="SPEC",
+                    help="replay a synthetic traffic mix through the "
+                         "async front end (implies --frontend): "
+                         "'uniform', 'prefix_heavy:arrival_rate=100', ... "
+                         "— name from repro.serve.traffic.MIXES plus "
+                         "key=val overrides")
+    ap.add_argument("--max-queue", type=int, default=16,
+                    help="front-end waiting-line bound: submissions past "
+                         "it are rejected (reason queue_full), not blocked")
     ap.add_argument("--knee-cache", default=None, metavar="PATH",
                     help="JSON cache of backend='auto' knee points (e.g. "
                          "<checkpoint-dir>/knee_cache.json): loaded at "
@@ -69,6 +92,10 @@ def main():
     if cfg.external_embed:
         raise SystemExit(f"{args.arch} takes frame embeddings, not tokens; "
                          "see examples/serve_lm.py for the embedding path")
+    if args.trace:
+        args.frontend = True
+    if args.frontend:
+        args.paged = True
     pool = None
     if args.paged or args.continuous:
         policy = None
@@ -83,6 +110,9 @@ def main():
     eng = ServeEngine(cfg, kv_pool=pool, decode_mode=args.decode_mode,
                       knee_cache=args.knee_cache, speculate=args.speculate,
                       draft=args.draft)
+    if args.frontend:
+        _run_frontend(args, cfg, eng, pool)
+        return
     rng = np.random.default_rng(0)
     reqs = [Request(rng.integers(0, cfg.vocab_size, size=args.prompt_len)
                     .astype(np.int32), args.new_tokens)
@@ -93,7 +123,7 @@ def main():
     else:
         outs = eng.generate(reqs)
     dt = time.time() - t0
-    tok = sum(len(o) for o in outs)
+    tok = sum(len(o) for o in outs if o is not None)
     print(f"generated {tok} tokens in {dt:.2f}s "
           f"({tok / dt:.1f} tok/s); first row: {outs[0][:8]}")
     if args.speculate > 1:
@@ -105,6 +135,63 @@ def main():
                   f"accept_rate={rate})")
     if pool is not None:
         print(f"kv pool: {pool.stats} live_pages={len(pool.pages)}")
+
+
+def _print_summary(summary: dict) -> None:
+    def ms(d):
+        return "n/a" if d["p50_ms"] is None else \
+            f"p50 {d['p50_ms']:.2f}ms  p99 {d['p99_ms']:.2f}ms"
+    print(f"requests: {summary['n_done']} done, "
+          f"{summary['n_cancelled']} cancelled, "
+          f"{summary['n_rejected']} rejected")
+    print(f"tokens: {summary['tokens']} in {summary['wall_s']:.2f}s "
+          f"({summary['throughput_tok_s']:.1f} tok/s)")
+    print(f"queue wait: {ms(summary['queue_wait'])}")
+    print(f"ttft:       {ms(summary['ttft'])}")
+    print(f"per-token:  {ms(summary['tpot'])}")
+    if summary.get("accept_rate") is not None:
+        print(f"accept rate: {summary['accept_rate']:.2f}")
+    for key in ("mix", "peak_active", "peak_live_pages",
+                "pool_shared_puts", "decode_steps"):
+        if key in summary:
+            print(f"{key}: {summary[key]}")
+
+
+def _run_frontend(args, cfg, eng, pool):
+    """Serve through `AsyncServeFrontend` — a named traffic mix when
+    --trace is given, else the launcher's own synthetic batch — and
+    print the `serve.metrics` p50/p99 summary."""
+    import asyncio
+
+    from repro.serve.frontend import AsyncServeFrontend
+    from repro.serve.traffic import parse_spec, run_trace
+
+    if args.trace:
+        summary = run_trace(eng, parse_spec(args.trace),
+                            max_active=args.max_active,
+                            max_queue=args.max_queue)
+        _print_summary(summary)
+        print(f"kv pool: {pool.stats} live_pages={len(pool.pages)}")
+        return
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(rng.integers(0, cfg.vocab_size, size=args.prompt_len)
+                    .astype(np.int32), args.new_tokens)
+            for _ in range(args.batch)]
+
+    async def go():
+        async with AsyncServeFrontend(
+                eng, capacity=args.prompt_len + args.new_tokens,
+                max_active=args.max_active, max_queue=args.max_queue,
+                speculate=args.speculate or None) as front:
+            handles = [await front.submit(r) for r in reqs]
+            outs = [await h.result() for h in handles]
+            return front.metrics.summary(), outs
+
+    summary, outs = asyncio.run(go())
+    _print_summary(summary)
+    print(f"first row: {outs[0][:8]}")
+    print(f"kv pool: {pool.stats} live_pages={len(pool.pages)}")
 
 
 if __name__ == "__main__":

@@ -45,8 +45,9 @@ from repro.serve.kvcache import PagedKVPool, pad_caches
 from repro.serve.paged_decode import (MODES, PagedKVState, build_fused_step,
                                       extract_prefill_pages,
                                       paged_decode_step, supports_paged)
-from repro.serve.scheduler import (Request, Scheduler,  # noqa: F401 (re-export)
-                                   effective_speculate, prefix_page_hashes)
+from repro.serve.scheduler import (Admission,  # noqa: F401 (re-export)
+                                   Request, Scheduler, effective_speculate,
+                                   prefix_page_hashes)
 from repro.serve.speculative import SpecStats, make_draft
 from repro.serve.steps import prefill_all_positions
 
@@ -125,29 +126,34 @@ class ServeEngine:
                                      prefill_fn=self._prefill_all)
         return self._draft
 
-    def _resolve_spec(self, requests) -> tuple[int, list[int]]:
-        """Effective per-request k (Request.speculate, falling back to the
-        engine default) and the verify-graph width (their max). k > 1
-        requires the fused paged path — eager/numpy stay the 1-token
+    def _check_spec_width(self, k: int):
+        """Validate a k-token verify-graph width against the engine setup:
+        k > 1 requires the fused paged path — eager/numpy stay the 1-token
         references — and k <= page_tokens (one verify step may cross at
         most one page boundary)."""
+        if k <= 1:
+            return
+        if self.kv_pool is None:
+            raise ValueError("speculative decode verifies against the "
+                             "page pool — construct the engine with "
+                             "kv_pool=")
+        if self.decode_mode != "fused":
+            raise ValueError(
+                f"speculative decode (k={k}) runs over the fused verify "
+                f"step; decode_mode={self.decode_mode!r} stays the "
+                f"1-token reference")
+        t = self.kv_pool.page_tokens
+        if k > t:
+            raise ValueError(
+                f"speculate={k} exceeds page_tokens={t}: one verify "
+                f"step may cross at most one page boundary")
+
+    def _resolve_spec(self, requests) -> tuple[int, list[int]]:
+        """Effective per-request k (Request.speculate, falling back to the
+        engine default) and the verify-graph width (their max)."""
         ks = [effective_speculate(r, self.speculate) for r in requests]
         k = max(ks, default=1)
-        if k > 1:
-            if self.kv_pool is None:
-                raise ValueError("speculative decode verifies against the "
-                                 "page pool — construct the engine with "
-                                 "kv_pool=")
-            if self.decode_mode != "fused":
-                raise ValueError(
-                    f"speculative decode (k={k}) runs over the fused verify "
-                    f"step; decode_mode={self.decode_mode!r} stays the "
-                    f"1-token reference")
-            t = self.kv_pool.page_tokens
-            if k > t:
-                raise ValueError(
-                    f"speculate={k} exceeds page_tokens={t}: one verify "
-                    f"step may cross at most one page boundary")
+        self._check_spec_width(k)
         return k, ks
 
     def _require_paged(self):
@@ -416,182 +422,46 @@ class ServeEngine:
     # ------------------------------------------------------------------
     def serve(self, requests: list[Request], max_active: int = 4,
               greedy: bool = True, temperature: float = 1.0, seed: int = 0,
-              prefix_cache: bool = True) -> list[np.ndarray]:
+              prefix_cache: bool = True, metrics=None) -> list[np.ndarray]:
         """Continuous-batching decode: requests join free rows mid-flight
         and retire at their own lengths; finished requests' pages are
         freed. Returns outputs in submission order. Greedy outputs match
         ``generate([request])`` per request token-for-token (absent
         fast-tier eviction pressure — demotion quantizes shared content).
+
+        A request whose worst-case page need can NEVER fit the pool is
+        rejected structurally instead of aborting the workload: its slot
+        in the returned list is ``None``, its `Admission` verdict (reason
+        + pages needed vs. budget) lands in ``last_rejections`` and its
+        ``last_request_stats`` entry carries ``rejected=<reason>``. The
+        underlying stepper is `ServeSession` (shared with the async
+        streaming front end, `serve.frontend.AsyncServeFrontend`).
         """
         if not requests:
+            self.last_rejections = []
             return []
         self._require_paged()
         spec_k, _ = self._resolve_spec(requests)
-        spec = spec_k > 1
-        pool, cfg = self.kv_pool, self.cfg
-        sched = Scheduler(pool, cfg.num_layers, max_active=max_active,
-                          default_speculate=self.speculate)
         order = {id(r): i for i, r in enumerate(requests)}
         if len(order) != len(requests):
             raise ValueError("duplicate Request objects in one serve() call")
-        for r in requests:
-            sched.submit(r)
         cap = max(len(r.prompt) + r.max_new_tokens for r in requests)
-        state = self._new_state(cap, batch_hint=max_active,
-                                tail_slots=2 if spec else 1)
-        rows: list[Optional[_Active]] = [None] * max_active
-        results: list[Optional[np.ndarray]] = [None] * len(requests)
-        req_stats: list[Optional[dict]] = [None] * len(requests)
-        key = jax.random.PRNGKey(seed)
-        observe = getattr(pool.policy, "observe", None)
-        fused = self.decode_mode == "fused"
-        step_fn = self._fused_step_fn(state.slots, greedy, temperature,
-                                      k=spec_k if spec else 1) \
-            if fused else None
-        tok_dev = None          # device-resident (max_active,) last tokens
-        rows_dirty = True       # host-known token entered a row (admission)
-
-        def finish(row_i: int, act: _Active):
-            state.free_seq(act.seq)
-            rows[row_i] = None
-            sched.retire(act.req)
-            i = order[id(act.req)]
-            results[i] = np.array(act.outs[:act.req.max_new_tokens],
-                                  np.int64)
-            d = act.stats.as_dict()
-            d["tokens"] = len(results[i])   # eos-trimmed, prefill token incl.
-            req_stats[i] = d
-
-        def admit(key):
-            # loop: an admitted request finishing at its very first token
-            # frees its row + reservation, unblocking the queue head again
-            nonlocal rows_dirty
-            while True:
-                batch = sched.admit()
-                if not batch:
-                    return key
-                for req in batch:
-                    seq = self._next_seq
-                    self._next_seq += 1
-                    toks = np.asarray(req.prompt, np.int32)
-                    plen = len(toks)
-                    t0 = time.time()
-                    # right-pad to a power-of-two bucket: bounded compile
-                    # count across prompt lengths, exact prefix under the
-                    # causal mask
-                    bucket = 8
-                    while bucket < plen:
-                        bucket *= 2
-                    padded = np.zeros(bucket, np.int32)
-                    padded[:plen] = toks
-                    logits_all, caches = self._prefill_all(
-                        self.params, {"tokens": jnp.asarray(padded[None])})
-                    logits = logits_all[:, plen - 1]
-                    hashes = ([prefix_page_hashes(toks, pool.page_tokens)]
-                              if prefix_cache else None)
-                    extract_prefill_pages(self.model, caches, state, [seq],
-                                          page_hashes=hashes,
-                                          valid_len=plen)
-                    self.stats["prefill_s"] += time.time() - t0
-                    key, sub = jax.random.split(key)
-                    tok = int(self._sample(logits, greedy, temperature,
-                                           sub)[0])
-                    self.stats["tokens"] += 1
-                    act = _Active(req, seq, plen, [tok],
-                                  eff_k=effective_speculate(
-                                      req, self.speculate))
-                    row_i = rows.index(None)
-                    rows[row_i] = act
-                    rows_dirty = True
-                    if act.finished:
-                        finish(row_i, act)
-
-        while True:
-            key = admit(key)
-            if all(a is None for a in rows):
-                if not sched.done:     # unreachable: admit() raises instead
-                    raise RuntimeError("scheduler stalled with waiting "
-                                       "requests and no active rows")
-                break
-            if not spec:       # the spec branch derives these from srows
-                pos = np.zeros(max_active, np.int32)
-                seq_ids = [-1] * max_active
-                for i, act in enumerate(rows):
-                    if act is None:
-                        continue
-                    pos[i] = act.pos
-                    seq_ids[i] = act.seq
-            t0 = time.time()
-            hits0 = (pool.stats["fast_hits"], pool.stats["slow_hits"])
-            g0 = state.gather_s
-            if spec:
-                # speculative verify step: k rows per live request, mixed
-                # freely with eff_k=1 (plain) rows; tokens ride in the
-                # control block, so no device-token feedback is needed
-                srows: list[Optional[dict]] = []
-                for act in rows:
-                    if act is None:
-                        srows.append(None)
-                        continue
-                    srows.append({
-                        "seq": act.seq,
-                        "history": np.concatenate(
-                            [np.asarray(act.req.prompt, np.int32),
-                             np.asarray(act.outs, np.int32)]),
-                        "pos": act.pos, "eff_k": act.eff_k,
-                        "limit": act.req.max_new_tokens - len(act.outs),
-                        "eos": act.req.eos_token, "stats": act.stats})
-                key, sub = jax.random.split(key)
-                kept = self._spec_step(state, step_fn, spec_k, srows, sub)
-            elif fused:
-                tok_in = tok_dev
-                if rows_dirty or tok_in is None:
-                    # an admission put a host-known first token in a row —
-                    # rebuild the token vector once (run_fused counts the
-                    # upload); steady-state steps feed the previous step's
-                    # device tokens back
-                    tok_in = np.zeros(max_active, np.int32)
-                    for i, act in enumerate(rows):
-                        if act is not None:
-                            tok_in[i] = act.outs[-1]
-                    rows_dirty = False
-                key, sub = jax.random.split(key)
-                toks, tok_dev = state.run_fused(step_fn, self.params,
-                                                tok_in, seq_ids, pos, sub)
-            else:
-                tokens = np.zeros(max_active, np.int32)
-                for i, act in enumerate(rows):
-                    if act is not None:
-                        tokens[i] = act.outs[-1]
-                logits = paged_decode_step(self.model, self.params, tokens,
-                                           state, seq_ids, pos)
-                key, sub = jax.random.split(key)
-                toks = np.asarray(self._sample(logits, greedy, temperature,
-                                               sub))
-            self.stats["decode_s"] += time.time() - t0
-            self.stats["decode_steps"] += 1
-            if observe is not None:
-                observe(state.gather_s - g0,
-                        pool.stats["fast_hits"] - hits0[0],
-                        pool.stats["slow_hits"] - hits0[1])
-            for i, act in enumerate(rows):
-                if act is None:
-                    continue
-                if spec:
-                    act.outs.extend(kept[i])
-                    self.stats["tokens"] += len(kept[i])
-                else:
-                    act.outs.append(int(toks[i]))
-                    act.stats.steps += 1
-                    act.stats.tokens += 1
-                    self.stats["tokens"] += 1
-                if act.finished:
-                    finish(i, act)
-        self.last_peak_active = sched.peak_active
-        self.last_transfers = state.transfer_counts()
-        self.last_request_stats = list(req_stats)
+        session = ServeSession(self, capacity=cap, max_active=max_active,
+                               speculate=spec_k, greedy=greedy,
+                               temperature=temperature, seed=seed,
+                               prefix_cache=prefix_cache, metrics=metrics)
+        self.last_rejections = []
+        for r in requests:
+            verdict = session.submit(r)
+            self.last_rejections.append(None if verdict else verdict)
+        while not session.done:
+            session.step()
+        self.last_peak_active = session.sched.peak_active
+        self.last_transfers = session.state.transfer_counts()
+        self.last_request_stats = [session.request_stats(r)
+                                   for r in requests]
         self._maybe_save_knees()
-        return results
+        return [session.result(r) for r in requests]
 
     @staticmethod
     def _sample(logits, greedy, temperature, key):
@@ -599,3 +469,358 @@ class ServeEngine:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return jax.random.categorical(key, logits / temperature,
                                       axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Step-granular continuous batching: the resumable serving core
+# ---------------------------------------------------------------------------
+class StreamEvent:
+    """Per-request outcome of one `ServeSession.step`: the tokens the
+    request emitted this step (the admission prefill token included) and
+    whether it just finished. The streamed tokens are already eos/max_new
+    clamped — concatenating a request's events reproduces its final
+    output exactly."""
+
+    __slots__ = ("request", "tokens", "done")
+
+    def __init__(self, request: Request, tokens: list, done: bool = False):
+        self.request, self.tokens, self.done = request, tokens, done
+
+
+class _SessionRec:
+    """One request's lifecycle record inside a `ServeSession`."""
+
+    __slots__ = ("req", "status", "admission", "active", "row", "result",
+                 "stats", "metrics")
+
+    def __init__(self, req: Request, admission: Admission, metrics):
+        self.req = req
+        self.admission = admission
+        self.metrics = metrics
+        self.status = "waiting"   # waiting|active|done|cancelled|rejected
+        self.active: Optional[_Active] = None
+        self.row = -1
+        self.result: Optional[np.ndarray] = None
+        self.stats: Optional[dict] = None
+
+
+class ServeSession:
+    """Resumable, step-granular continuous-batching loop — the serving
+    core that both `ServeEngine.serve` (closed batch) and the async
+    streaming front end (`serve.frontend.AsyncServeFrontend`) drive.
+
+    ``submit`` queues a request and returns a structured `Admission`
+    verdict — a request that can never fit is rejected without touching
+    the rest of the workload. ``step`` runs one admission round plus one
+    fused decode step over the live rows and returns per-request
+    `StreamEvent`s. ``cancel`` retires a request mid-decode: its row and
+    page reservations free immediately, its pool pages drop their refs,
+    and the tokens streamed so far become its (partial) result.
+
+    ``capacity`` (in tokens) sizes the page table once for the session's
+    lifetime — a longer request is rejected with reason ``capacity``.
+    ``speculate`` fixes the verify-graph width; a request whose
+    per-request k exceeds it is rejected with reason ``speculate``.
+    Pass a `serve.metrics.MetricsRegistry` as ``metrics`` to collect
+    queue-wait / TTFT / per-token latencies per request."""
+
+    def __init__(self, engine: ServeEngine, capacity: int,
+                 max_active: int = 4, speculate: Optional[int] = None,
+                 greedy: bool = True, temperature: float = 1.0,
+                 seed: int = 0, prefix_cache: bool = True, metrics=None):
+        engine._require_paged()
+        k = max(1, engine.speculate if speculate is None else int(speculate))
+        engine._check_spec_width(k)
+        self.engine = engine
+        self.pool = engine.kv_pool
+        self.capacity = int(capacity)
+        self.spec_k = k
+        self.max_active = max_active
+        self.greedy, self.temperature = greedy, float(temperature)
+        self.prefix_cache = prefix_cache
+        self.metrics = metrics
+        self.sched = Scheduler(self.pool, engine.cfg.num_layers,
+                               max_active=max_active,
+                               default_speculate=engine.speculate)
+        self.state = engine._new_state(self.capacity, batch_hint=max_active,
+                                       tail_slots=2 if k > 1 else 1)
+        self._rows: list[Optional[_Active]] = [None] * max_active
+        self._recs: dict[int, _SessionRec] = {}
+        self._key = jax.random.PRNGKey(seed)
+        self._observe = getattr(self.pool.policy, "observe", None)
+        self._fused = engine.decode_mode == "fused"
+        self._step_fn = engine._fused_step_fn(self.state.slots, greedy,
+                                              temperature, k=k) \
+            if self._fused else None
+        self._tok_dev = None      # device-resident (max_active,) last tokens
+        self._rows_dirty = True   # host-known token entered/left a row
+        self.steps = 0
+        self.peak_live_pages = 0
+
+    # -- lifecycle ----------------------------------------------------------
+    @property
+    def done(self) -> bool:
+        """True when nothing is waiting and no decode row is occupied."""
+        return self.sched.done
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self.sched.waiting)
+
+    @property
+    def n_active(self) -> int:
+        return sum(a is not None for a in self._rows)
+
+    def submit(self, req: Request) -> Admission:
+        """Queue a request (FIFO). Returns the structured admission
+        verdict; on rejection the request is fully accounted (result
+        ``None``, stats carry the reason) but never does work."""
+        if id(req) in self._recs:
+            raise ValueError("Request object already submitted to this "
+                             "session")
+        t = self.pool.page_tokens
+        tail = 2 if self.spec_k > 1 else 1
+        need_tokens = len(req.prompt) + req.max_new_tokens
+        pages = -(-need_tokens // t)
+        eff_k = effective_speculate(req, self.engine.speculate)
+        if pages + tail > self.state.slots:
+            verdict = Admission(
+                False, reason="capacity",
+                pages_needed=self.engine.cfg.num_layers * (pages + 1),
+                pages_budget=self.sched._budget(),
+                detail=f"request spans {need_tokens} KV tokens = {pages} "
+                       f"pages + {tail} tail slot(s), beyond the session "
+                       f"page table of {self.state.slots} slots "
+                       f"({self.state.slots * t} tokens); raise the "
+                       f"session capacity")
+        elif eff_k > self.spec_k:
+            verdict = Admission(
+                False, reason="speculate",
+                detail=f"request speculates {eff_k} tokens/step but the "
+                       f"session verify graph is {self.spec_k} wide")
+        else:
+            verdict = self.sched.submit(req)
+        m = self.metrics.submit() if self.metrics is not None else None
+        rec = _SessionRec(req, verdict, m)
+        self._recs[id(req)] = rec
+        if not verdict:
+            rec.status = "rejected"
+            rec.stats = {"rejected": verdict.reason, "tokens": 0,
+                         **verdict.as_dict()}
+            if m is not None:
+                m.on_reject(verdict.reason)
+        return verdict
+
+    def cancel(self, req: Request) -> bool:
+        """Cancel a submitted request: a waiting one leaves the queue; an
+        active one retires — its row and reservation free immediately and
+        its pool pages drop their refs (prefix-shared pages survive via
+        other holders). The tokens streamed so far become its partial
+        result. Returns False if it already finished/was never
+        submitted."""
+        rec = self._recs.get(id(req))
+        if rec is None or rec.status in ("done", "cancelled", "rejected"):
+            return False
+        outs: list = []
+        stats = SpecStats()
+        if rec.status == "waiting":
+            self.sched.remove_waiting(req)
+        else:
+            act = rec.active
+            outs, stats = act.outs, act.stats
+            self.state.free_seq(act.seq)
+            self._rows[rec.row] = None
+            self.sched.retire(req)
+            self._rows_dirty = True
+        rec.status = "cancelled"
+        rec.active = None
+        rec.result = np.array(outs[:req.max_new_tokens], np.int64)
+        d = stats.as_dict()
+        d["tokens"] = len(rec.result)
+        d["cancelled"] = True
+        rec.stats = d
+        if rec.metrics is not None:
+            rec.metrics.on_cancel()
+        return True
+
+    def result(self, req: Request) -> Optional[np.ndarray]:
+        """Final (or partial, if cancelled) output tokens; None while the
+        request is still queued/decoding, and None forever if rejected."""
+        rec = self._recs.get(id(req))
+        return None if rec is None else rec.result
+
+    def request_stats(self, req: Request) -> Optional[dict]:
+        rec = self._recs.get(id(req))
+        return None if rec is None else rec.stats
+
+    def admission(self, req: Request) -> Optional[Admission]:
+        rec = self._recs.get(id(req))
+        return None if rec is None else rec.admission
+
+    def transfer_counts(self) -> tuple[int, int]:
+        return self.state.transfer_counts()
+
+    # -- the step -----------------------------------------------------------
+    def _finish(self, rec: _SessionRec):
+        act = rec.active
+        self.state.free_seq(act.seq)
+        self._rows[rec.row] = None
+        self.sched.retire(rec.req)
+        rec.status = "done"
+        rec.active = None
+        rec.result = np.array(act.outs[:rec.req.max_new_tokens], np.int64)
+        d = act.stats.as_dict()
+        d["tokens"] = len(rec.result)   # eos-trimmed, prefill token incl.
+        rec.stats = d
+        if rec.metrics is not None:
+            rec.metrics.on_finish(len(rec.result),
+                                  accept_rate=d.get("accept_rate"))
+
+    def _admit(self, events: list):
+        eng = self.engine
+        while True:
+            # loop: an admitted request finishing at its very first token
+            # frees its row + reservation, unblocking the queue head again
+            batch = self.sched.admit()
+            if not batch:
+                return
+            for req in batch:
+                rec = self._recs[id(req)]
+                seq = eng._next_seq
+                eng._next_seq += 1
+                toks = np.asarray(req.prompt, np.int32)
+                plen = len(toks)
+                t0 = time.time()
+                # right-pad to a power-of-two bucket: bounded compile
+                # count across prompt lengths, exact prefix under the
+                # causal mask
+                bucket = 8
+                while bucket < plen:
+                    bucket *= 2
+                padded = np.zeros(bucket, np.int32)
+                padded[:plen] = toks
+                logits_all, caches = eng._prefill_all(
+                    eng.params, {"tokens": jnp.asarray(padded[None])})
+                logits = logits_all[:, plen - 1]
+                hashes = ([prefix_page_hashes(toks, self.pool.page_tokens)]
+                          if self.prefix_cache else None)
+                extract_prefill_pages(eng.model, caches, self.state, [seq],
+                                      page_hashes=hashes, valid_len=plen)
+                eng.stats["prefill_s"] += time.time() - t0
+                self._key, sub = jax.random.split(self._key)
+                tok = int(eng._sample(logits, self.greedy, self.temperature,
+                                      sub)[0])
+                eng.stats["tokens"] += 1
+                act = _Active(req, seq, plen, [tok],
+                              eff_k=effective_speculate(req, eng.speculate))
+                row_i = self._rows.index(None)
+                self._rows[row_i] = act
+                rec.active, rec.row, rec.status = act, row_i, "active"
+                self._rows_dirty = True
+                if rec.metrics is not None:
+                    rec.metrics.on_admit()
+                    rec.metrics.on_tokens(1)
+                done = act.finished
+                if done:
+                    self._finish(rec)
+                events.append(StreamEvent(req, [tok], done=done))
+
+    def step(self) -> list[StreamEvent]:
+        """One admission round + one decode step over the live rows.
+        Returns the per-request token events (admission prefill tokens
+        included); an idle session returns an empty list."""
+        events: list[StreamEvent] = []
+        self._admit(events)
+        rows = self._rows
+        if all(a is None for a in rows):
+            if not self.sched.done:   # unreachable: submit() rejects instead
+                raise RuntimeError("scheduler stalled with waiting "
+                                   "requests and no active rows")
+            return events
+        eng, pool, state = self.engine, self.pool, self.state
+        spec = self.spec_k > 1
+        max_active = self.max_active
+        if not spec:       # the spec branch derives these from srows
+            pos = np.zeros(max_active, np.int32)
+            seq_ids = [-1] * max_active
+            for i, act in enumerate(rows):
+                if act is None:
+                    continue
+                pos[i] = act.pos
+                seq_ids[i] = act.seq
+        t0 = time.time()
+        hits0 = (pool.stats["fast_hits"], pool.stats["slow_hits"])
+        g0 = state.gather_s
+        if spec:
+            # speculative verify step: k rows per live request, mixed
+            # freely with eff_k=1 (plain) rows; tokens ride in the
+            # control block, so no device-token feedback is needed
+            srows: list[Optional[dict]] = []
+            for act in rows:
+                if act is None:
+                    srows.append(None)
+                    continue
+                srows.append({
+                    "seq": act.seq,
+                    "history": np.concatenate(
+                        [np.asarray(act.req.prompt, np.int32),
+                         np.asarray(act.outs, np.int32)]),
+                    "pos": act.pos, "eff_k": act.eff_k,
+                    "limit": act.req.max_new_tokens - len(act.outs),
+                    "eos": act.req.eos_token, "stats": act.stats})
+            self._key, sub = jax.random.split(self._key)
+            kept = eng._spec_step(state, self._step_fn, self.spec_k, srows,
+                                  sub)
+        elif self._fused:
+            tok_in = self._tok_dev
+            if self._rows_dirty or tok_in is None:
+                # an admission (or a cancel) changed the row layout —
+                # rebuild the token vector once (run_fused counts the
+                # upload); steady-state steps feed the previous step's
+                # device tokens back
+                tok_in = np.zeros(max_active, np.int32)
+                for i, act in enumerate(rows):
+                    if act is not None:
+                        tok_in[i] = act.outs[-1]
+                self._rows_dirty = False
+            self._key, sub = jax.random.split(self._key)
+            toks, self._tok_dev = state.run_fused(
+                self._step_fn, eng.params, tok_in, seq_ids, pos, sub)
+        else:
+            tokens = np.zeros(max_active, np.int32)
+            for i, act in enumerate(rows):
+                if act is not None:
+                    tokens[i] = act.outs[-1]
+            logits = paged_decode_step(eng.model, eng.params, tokens,
+                                       state, seq_ids, pos)
+            self._key, sub = jax.random.split(self._key)
+            toks = np.asarray(eng._sample(logits, self.greedy,
+                                          self.temperature, sub))
+        eng.stats["decode_s"] += time.time() - t0
+        eng.stats["decode_steps"] += 1
+        self.steps += 1
+        if self._observe is not None:
+            self._observe(state.gather_s - g0,
+                          pool.stats["fast_hits"] - hits0[0],
+                          pool.stats["slow_hits"] - hits0[1])
+        for i, act in enumerate(rows):
+            if act is None:
+                continue
+            rec = self._recs[id(act.req)]
+            if spec:
+                new = [int(x) for x in kept[i]]
+                act.outs.extend(new)
+            else:
+                new = [int(toks[i])]
+                act.outs.append(new[0])
+                act.stats.steps += 1
+                act.stats.tokens += 1
+            eng.stats["tokens"] += len(new)
+            if rec.metrics is not None:
+                rec.metrics.on_tokens(len(new))
+            done = act.finished
+            if done:
+                self._finish(rec)
+            events.append(StreamEvent(act.req, new, done=done))
+        self.peak_live_pages = max(self.peak_live_pages, pool.live_pages)
+        return events

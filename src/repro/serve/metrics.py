@@ -1,0 +1,198 @@
+"""Serving metrics: ONE latency vocabulary for the whole serve layer.
+
+The engine's `ServeSession`, the async front end, `bench_serve` and
+`bench_traffic` all report through these helpers, so a "TTFT" or a
+"per-token latency" means the same thing in every number the repo emits:
+
+- queue wait         admit time - submit time (scheduler FIFO wait)
+- TTFT               first streamed token - submit time. The prefill
+                     token counts: it is the first token the client sees.
+- per-token latency  the gap between consecutive token deliveries,
+  (TPOT / ITL)       divided evenly over the tokens a delivery carries —
+                     a speculative verify step that lands an accepted run
+                     of n tokens contributes n samples of gap/n, so
+                     speculation shows up as *lower* per-token latency
+                     rather than as fewer, larger gaps.
+- accept_rate        accepted drafts / proposed drafts (speculative rows
+                     only; None elsewhere), from `SpecStats`.
+
+`MetricsRegistry` collects one `RequestMetrics` per request across its
+lifecycle (submit -> admit -> stream -> finish / cancel / reject) and
+summarizes p50/p99 TTFT, p50/p99 per-token latency, queue wait and
+throughput over the population — the numbers `BENCH_traffic.json`
+persists per PR.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import numpy as np
+
+
+def percentile(xs, q) -> Optional[float]:
+    """q-th percentile of a sample list; None on an empty sample (a mix
+    with zero completed requests has no p99, not a fake 0.0)."""
+    xs = [x for x in xs if x is not None]
+    if not xs:
+        return None
+    return float(np.percentile(np.asarray(xs, np.float64), q))
+
+
+def us_per(seconds: float, n: int) -> float:
+    """Microseconds per event — the bench CSV's unit column."""
+    return 1e6 * seconds / max(n, 1)
+
+
+def toks_per_s(tokens: int, seconds: float) -> float:
+    return tokens / max(seconds, 1e-9)
+
+
+class RequestMetrics:
+    """One request's lifecycle timestamps + derived latencies.
+
+    ``status``: queued -> active -> done | cancelled; or rejected (never
+    admitted — admission verdict said no, or the front-end queue was
+    full). Times come from the registry's clock (``time.perf_counter``
+    by default; injectable for tests)."""
+
+    __slots__ = ("status", "reject_reason", "submit_s", "admit_s",
+                 "first_token_s", "end_s", "tokens", "itl_s",
+                 "accept_rate", "_clock", "_last_s")
+
+    def __init__(self, clock=time.perf_counter):
+        self._clock = clock
+        self.status = "queued"
+        self.reject_reason = None
+        self.submit_s = clock()
+        self.admit_s = None
+        self.first_token_s = None
+        self.end_s = None
+        self.tokens = 0
+        self.itl_s: list[float] = []     # per-token delivery gaps
+        self.accept_rate = None
+        self._last_s = None
+
+    # -- lifecycle events ---------------------------------------------------
+    def on_admit(self):
+        self.status = "active"
+        self.admit_s = self._clock()
+
+    def on_tokens(self, n: int):
+        """n tokens delivered now (n > 1 for an accepted speculative run:
+        the step's gap is split evenly over its tokens)."""
+        now = self._clock()
+        if self.first_token_s is None:
+            self.first_token_s = now
+            gap, n_gaps = now - self.submit_s, n - 1   # 1st gap is the TTFT
+        else:
+            gap, n_gaps = now - self._last_s, n
+        if n_gaps > 0:
+            self.itl_s.extend([gap / max(n, 1)] * n_gaps)
+        self.tokens += n
+        self._last_s = now
+
+    def on_finish(self, tokens: int, accept_rate=None):
+        """`tokens` is the final eos-trimmed count — the engine may have
+        streamed a token the eos clamp then kept, so trust its number."""
+        self.status = "done"
+        self.end_s = self._clock()
+        self.tokens = tokens
+        self.accept_rate = accept_rate
+
+    def on_cancel(self):
+        self.status = "cancelled"
+        self.end_s = self._clock()
+
+    def on_reject(self, reason: str):
+        self.status = "rejected"
+        self.reject_reason = reason
+        self.end_s = self.submit_s
+
+    # -- derived ------------------------------------------------------------
+    @property
+    def queue_wait_s(self) -> Optional[float]:
+        if self.admit_s is None:
+            return None
+        return self.admit_s - self.submit_s
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        if self.first_token_s is None:
+            return None
+        return self.first_token_s - self.submit_s
+
+    @property
+    def total_s(self) -> Optional[float]:
+        if self.end_s is None:
+            return None
+        return self.end_s - self.submit_s
+
+    @property
+    def tpot_s(self) -> Optional[float]:
+        """Mean per-token latency past the first token."""
+        if not self.itl_s:
+            return None
+        return sum(self.itl_s) / len(self.itl_s)
+
+    def as_dict(self) -> dict:
+        return {"status": self.status, "tokens": self.tokens,
+                "queue_wait_s": self.queue_wait_s, "ttft_s": self.ttft_s,
+                "tpot_s": self.tpot_s, "total_s": self.total_s,
+                "accept_rate": self.accept_rate,
+                "reject_reason": self.reject_reason}
+
+
+class MetricsRegistry:
+    """Per-request metrics for one serving run (a front-end lifetime, a
+    trace replay, one `serve()` call)."""
+
+    def __init__(self, clock=time.perf_counter):
+        self._clock = clock
+        self.requests: list[RequestMetrics] = []
+
+    def submit(self) -> RequestMetrics:
+        m = RequestMetrics(self._clock)
+        self.requests.append(m)
+        return m
+
+    def reject(self, reason: str) -> RequestMetrics:
+        """Record a request turned away before it reached the session
+        (e.g. the front end's bounded queue was full)."""
+        m = self.submit()
+        m.on_reject(reason)
+        return m
+
+    def summary(self) -> dict:
+        """Population summary — the schema `BENCH_traffic.json` persists.
+        Latencies in ms (p50/p99/mean), throughput in tokens/s over the
+        wall span from first submit to last end."""
+        ms = 1e3
+        reqs = self.requests
+        done = [m for m in reqs if m.status == "done"]
+        cancelled = [m for m in reqs if m.status == "cancelled"]
+        rejected = [m for m in reqs if m.status == "rejected"]
+        served = done + cancelled
+        tokens = sum(m.tokens for m in served)
+        ends = [m.end_s for m in reqs if m.end_s is not None]
+        wall = (max(ends) - min(m.submit_s for m in reqs)) if ends else 0.0
+        ttft = [m.ttft_s for m in served]
+        itl = [g for m in served for g in m.itl_s]
+        waits = [m.queue_wait_s for m in served]
+        rates = [m.accept_rate for m in done if m.accept_rate is not None]
+
+        def stats(xs):
+            xs = [x for x in xs if x is not None]
+            return {"p50_ms": None if not xs else percentile(xs, 50) * ms,
+                    "p99_ms": None if not xs else percentile(xs, 99) * ms,
+                    "mean_ms": None if not xs else sum(xs) / len(xs) * ms}
+
+        return {
+            "n_requests": len(reqs), "n_done": len(done),
+            "n_cancelled": len(cancelled), "n_rejected": len(rejected),
+            "tokens": tokens, "wall_s": wall,
+            "throughput_tok_s": toks_per_s(tokens, wall) if wall else None,
+            "ttft": stats(ttft), "tpot": stats(itl),
+            "queue_wait": stats(waits),
+            "accept_rate": sum(rates) / len(rates) if rates else None,
+        }

@@ -15,11 +15,15 @@ Admission rules (documented in serve/README.md):
   stored once).
 - The budget excludes pages already live when the serve call started
   (e.g. left by static batches sharing the pool). A request whose worst
-  case can never fit raises at ``submit`` time, before any admitted
-  request has done work.
+  case can never fit is REJECTED at ``submit`` time with a structured
+  `Admission` verdict (reason + pages needed vs. budget) instead of an
+  exception — the engine and the async front end surface the rejection
+  per request without aborting the rest of the workload.
 - Retiring (per-request ``max_new_tokens`` reached or ``eos_token``
   sampled) frees the request's pages and releases its reservation, which
-  unblocks the queue head on the next admission round.
+  unblocks the queue head on the next admission round. Cancellation uses
+  the same retire path for active requests and ``remove_waiting`` for
+  queued ones.
 """
 from __future__ import annotations
 
@@ -29,6 +33,32 @@ from collections import deque
 from typing import Optional
 
 import numpy as np
+
+
+@dataclasses.dataclass
+class Admission:
+    """Structured admission verdict — truthy iff the request was queued.
+
+    ``reason`` on rejection: ``pool_capacity`` (worst-case page need
+    exceeds the pool budget that can ever be free), ``capacity`` (the
+    session's page table cannot hold the request), ``speculate`` (the
+    request's k exceeds the session's verify-graph width) or
+    ``queue_full`` (front-end backpressure). ``pages_needed`` /
+    ``pages_budget`` quantify the pool verdicts; ``detail`` is the
+    human-readable sentence."""
+    admitted: bool
+    reason: str = ""
+    detail: str = ""
+    pages_needed: int = 0
+    pages_budget: Optional[int] = None
+
+    def __bool__(self) -> bool:
+        return self.admitted
+
+    def as_dict(self) -> dict:
+        return {"admitted": self.admitted, "reason": self.reason,
+                "detail": self.detail, "pages_needed": self.pages_needed,
+                "pages_budget": self.pages_budget}
 
 
 @dataclasses.dataclass
@@ -93,19 +123,35 @@ class Scheduler:
             return None
         return self.pool.capacity_pages - self._base_pages
 
-    def submit(self, req: Request):
-        """Queue a request; raises immediately (before any admitted work)
-        if its worst case can never fit the pool budget."""
+    def submit(self, req: Request) -> Admission:
+        """Queue a request. A request whose worst case can never fit the
+        pool budget is rejected immediately (before any admitted work)
+        with a structured verdict — it is NOT queued, and nothing else in
+        the workload is affected."""
         budget = self._budget()
         need = self.pages_needed(req)
         if budget is not None and need > budget:
-            raise ValueError(
-                f"request needs {need} pages worst-case but only {budget} "
-                f"of the pool's capacity_pages="
-                f"{self.pool.capacity_pages} budget are available "
-                f"({self._base_pages} pages already live) — it can never "
-                f"be admitted")
+            return Admission(
+                False, reason="pool_capacity", pages_needed=need,
+                pages_budget=budget,
+                detail=f"request needs {need} pages worst-case but only "
+                       f"{budget} of the pool's capacity_pages="
+                       f"{self.pool.capacity_pages} budget are available "
+                       f"({self._base_pages} pages already live) — it can "
+                       f"never be admitted")
         self.waiting.append(req)
+        return Admission(True, pages_needed=need, pages_budget=budget)
+
+    def remove_waiting(self, req: Request) -> bool:
+        """Drop a still-queued request (cancellation before admission).
+        Identity comparison — `Request` is a dataclass over numpy arrays,
+        so equality-based removal would be both ambiguous and wrong for
+        duplicate prompts."""
+        for i, r in enumerate(self.waiting):
+            if r is req:
+                del self.waiting[i]
+                return True
+        return False
 
     @property
     def n_active(self) -> int:

@@ -105,16 +105,26 @@ def test_admission_gated_on_pool_headroom(cfg, ref):
     assert len(pool.pages) == 0
 
 
-def test_never_fitting_request_raises_before_any_work(cfg, ref):
-    """An impossible request fails at submit time — admitted requests are
-    not started and then abandoned with their pages leaked."""
-    params, prompts, _, _ = ref
-    pool = PagedKVPool(page_tokens=4, capacity_pages=3)
+def test_never_fitting_request_rejected_without_aborting(cfg, ref):
+    """An impossible request is rejected at submit time with a structured
+    verdict (reason + pages needed vs. budget) — it never does work, and
+    the REST of the workload completes normally."""
+    params, prompts, _, expected = ref
+    need = cfg.num_layers * (-(-(12 + 4) // 4) + 1)
+    pool = PagedKVPool(page_tokens=4, capacity_pages=need)
     eng = ServeEngine(cfg, params=params, kv_pool=pool)
-    with pytest.raises(ValueError, match="never be admitted"):
-        eng.serve([Request(prompts[0].copy(), 4),
-                   Request(prompts[1].copy(), 4)], max_active=2)
-    assert len(pool.pages) == 0                # nothing was prefilled
+    outs = eng.serve([Request(prompts[0].copy(), 4),
+                      Request(prompts[1].copy(), 40)],   # can never fit
+                     max_active=2)
+    assert len(outs[0]) == 4                   # first request unaffected
+    assert outs[1] is None                     # rejected, not raised
+    ok, bad = eng.last_rejections
+    assert ok is None
+    assert not bad.admitted and bad.reason == "pool_capacity"
+    assert bad.pages_needed > bad.pages_budget
+    assert "never be admitted" in bad.detail
+    assert eng.last_request_stats[1]["rejected"] == "pool_capacity"
+    assert len(pool.pages) == 0                # nothing leaked
 
 
 def test_admission_budget_excludes_preexisting_pages(cfg, ref):
@@ -126,8 +136,10 @@ def test_admission_budget_excludes_preexisting_pages(cfg, ref):
     eng = ServeEngine(cfg, params=params, kv_pool=pool)
     eng.generate([Request(prompts[2].copy(), 2)])     # leaves pages live
     assert len(pool.pages) > 0
-    with pytest.raises(ValueError, match="already live"):
-        eng.serve([Request(prompts[1].copy(), 4)])
+    [out] = eng.serve([Request(prompts[1].copy(), 4)])
+    assert out is None
+    [bad] = eng.last_rejections
+    assert bad.reason == "pool_capacity" and "already live" in bad.detail
 
 
 def test_generate_free_pages_returns_pool_to_empty(cfg, ref):

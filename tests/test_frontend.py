@@ -1,0 +1,244 @@
+"""Async streaming front end: streamed tokens must be token-for-token
+identical to `ServeEngine.serve` (plain and speculative), cancellation
+must free exactly the cancelled request's pages, a full queue must
+reject (structured, no deadlock) instead of blocking, and the collected
+per-request metrics must satisfy the latency-vocabulary invariants."""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.frontend import AsyncServeFrontend
+from repro.serve.kvcache import PagedKVPool
+from repro.serve.traffic import MIXES, make_trace, parse_spec, run_trace
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return smoke_config("starcoder2-7b")
+
+
+@pytest.fixture(scope="module")
+def ref(cfg):
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+               for _ in range(4)]
+    news = [3, 6, 4, 5]
+    eng = ServeEngine(cfg, kv_pool=PagedKVPool(page_tokens=4))
+    expected = eng.serve([Request(p.copy(), n)
+                          for p, n in zip(prompts, news)], max_active=2)
+    return eng.params, prompts, news, expected
+
+
+def _engine(cfg, params, **kw):
+    pool = PagedKVPool(page_tokens=4, **{k: kw.pop(k) for k in
+                       ("capacity_pages",) if k in kw})
+    return ServeEngine(cfg, params=params, kv_pool=pool, **kw), pool
+
+
+async def _stream_all(front, requests):
+    """Submit all, collect each stream AND its result, assert they agree."""
+    handles = [await front.submit(r) for r in requests]
+    outs = []
+    for h in handles:
+        toks = [t async for t in h]
+        final = await h.result()
+        assert toks == final.tolist()      # the stream IS the result
+        outs.append(final)
+    return handles, outs
+
+
+def test_stream_matches_serve_token_for_token(cfg, ref):
+    params, prompts, news, expected = ref
+    eng, pool = _engine(cfg, params)
+    reqs = [Request(p.copy(), n) for p, n in zip(prompts, news)]
+
+    async def go():
+        async with AsyncServeFrontend(eng, capacity=18,
+                                      max_active=2) as front:
+            _, outs = await _stream_all(front, reqs)
+            return outs, front.metrics.summary()
+
+    outs, summary = asyncio.run(go())
+    for want, got in zip(expected, outs):
+        np.testing.assert_array_equal(want, got)
+    assert summary["n_done"] == 4 and summary["n_rejected"] == 0
+    assert summary["tokens"] == sum(news)
+    assert len(pool.pages) == 0
+
+
+def test_stream_matches_serve_speculative(cfg, ref):
+    params, prompts, news, _ = ref
+    eng, _ = _engine(cfg, params, speculate=4)
+    reqs = lambda: [Request(p.copy(), n) for p, n in zip(prompts, news)]
+    expected = eng.serve(reqs(), max_active=2)
+
+    async def go():
+        async with AsyncServeFrontend(eng, capacity=18,
+                                      max_active=2) as front:
+            _, outs = await _stream_all(front, reqs())
+            return outs, front.metrics.summary()
+
+    outs, summary = asyncio.run(go())
+    for want, got in zip(expected, outs):
+        np.testing.assert_array_equal(want, got)
+    assert summary["accept_rate"] is not None      # SpecStats flowed through
+
+
+def test_cancel_frees_exactly_the_cancelled_pages(cfg, ref):
+    params, prompts, _, expected = ref
+    eng, pool = _engine(cfg, params)
+    keep_req = Request(prompts[0].copy(), 3)
+    drop_req = Request(prompts[1].copy(), 8)
+
+    async def go():
+        async with AsyncServeFrontend(eng, capacity=20,
+                                      max_active=2) as front:
+            keep = await front.submit(keep_req)
+            drop = await front.submit(drop_req)
+            got = 0
+            async for _t in drop:
+                got += 1
+                if got == 2:
+                    break
+            before = {pid: p.seq_id for pid, p in pool.pages.items()}
+            assert drop.cancel()
+            after = set(pool.pages)
+            partial = await drop.result()
+            return before, after, partial, await keep.result(), drop
+
+    before, after, partial, keep_out, drop = asyncio.run(go())
+    removed = set(before) - after
+    assert removed, "cancel freed no pages"
+    # every removed page belonged to the cancelled sequence, and no page
+    # of that sequence survived: exactly its pages were freed
+    seqs = {before[pid] for pid in removed}
+    assert len(seqs) == 1
+    assert all(before[pid] not in seqs for pid in after)
+    assert drop.cancelled and len(partial) == 2
+    np.testing.assert_array_equal(keep_out, expected[0])   # survivor clean
+    assert len(pool.pages) == 0
+
+
+def test_backpressure_rejects_instead_of_deadlocking(cfg, ref):
+    params, prompts, _, _ = ref
+    eng, pool = _engine(cfg, params)
+
+    async def go():
+        # max_active=1 and back-to-back submits: the driver never runs
+        # between them, so the waiting line alone absorbs a and b and the
+        # third submit must shed
+        async with AsyncServeFrontend(eng, capacity=20, max_active=1,
+                                      max_queue=2) as front:
+            a = await front.submit(Request(prompts[0].copy(), 3))
+            b = await front.submit(Request(prompts[1].copy(), 3))
+            c = await front.submit(Request(prompts[2].copy(), 3))
+            outs = [await h.result() for h in (a, b, c)]
+            return (a, b, c), outs, front.metrics.summary()
+
+    async def bounded():
+        # the whole exchange must complete promptly — shedding, not blocking
+        return await asyncio.wait_for(go(), timeout=120)
+
+    (a, b, c), outs, summary = asyncio.run(bounded())
+    assert not a.rejected and not b.rejected
+    assert c.rejected and c.admission.reason == "queue_full"
+    assert "max_queue=2" in c.admission.detail
+    assert len(outs[0]) == 3 and len(outs[1]) == 3
+    assert len(outs[2]) == 0                       # rejected stream is empty
+    assert summary["n_rejected"] == 1 and summary["n_done"] == 2
+    assert len(pool.pages) == 0
+
+
+def test_pool_capacity_rejection_through_frontend(cfg, ref):
+    params, prompts, _, _ = ref
+    need = cfg.num_layers * (-(-(12 + 4) // 4) + 1)
+    eng, pool = _engine(cfg, params, capacity_pages=need)
+
+    async def go():
+        async with AsyncServeFrontend(eng, capacity=60,
+                                      max_active=2) as front:
+            ok = await front.submit(Request(prompts[0].copy(), 4))
+            bad = await front.submit(Request(prompts[1].copy(), 40))
+            return await ok.result(), bad
+
+    out, bad = asyncio.run(go())
+    assert len(out) == 4                           # workload not aborted
+    assert bad.rejected and bad.admission.reason == "pool_capacity"
+    assert bad.admission.pages_needed > bad.admission.pages_budget
+    assert "never be admitted" in bad.admission.detail
+    assert len(pool.pages) == 0
+
+
+def test_session_capacity_and_speculate_rejections(cfg, ref):
+    params, prompts, _, _ = ref
+    eng, _ = _engine(cfg, params)
+
+    async def go():
+        # capacity=8 tokens rounds up to an 8-slot page table (32 tokens);
+        # a request spanning more than that cannot ever sit in the table
+        async with AsyncServeFrontend(eng, capacity=8,
+                                      max_active=1) as front:
+            too_long = await front.submit(Request(prompts[0].copy(), 24))
+            too_wide = await front.submit(Request(prompts[0][:4].copy(), 2,
+                                                  speculate=4))
+            await front.drain()
+            return too_long, too_wide
+
+    too_long, too_wide = asyncio.run(go())
+    assert too_long.rejected and too_long.admission.reason == "capacity"
+    assert too_wide.rejected and too_wide.admission.reason == "speculate"
+
+
+def test_metrics_invariants(cfg, ref):
+    params, prompts, news, _ = ref
+    eng, _ = _engine(cfg, params)
+    reqs = [Request(p.copy(), n) for p, n in zip(prompts, news)]
+
+    async def go():
+        async with AsyncServeFrontend(eng, capacity=18,
+                                      max_active=2) as front:
+            _, outs = await _stream_all(front, reqs)
+            return outs, front.metrics
+
+    outs, metrics = asyncio.run(go())
+    for m, out in zip(metrics.requests, outs):
+        assert m.status == "done"
+        assert m.tokens == len(out)                # count matches output
+        assert m.queue_wait_s >= 0
+        assert m.ttft_s >= m.queue_wait_s          # first token after admit
+        assert m.total_s >= m.ttft_s               # TTFT <= total latency
+        assert len(m.itl_s) == m.tokens - 1        # one gap per later token
+    s = metrics.summary()
+    for key in ("ttft", "tpot", "queue_wait"):
+        assert s[key]["p50_ms"] <= s[key]["p99_ms"]
+
+
+def test_trace_determinism_and_prefix_sharing(cfg, ref):
+    params, _, _, _ = ref
+    t1 = make_trace(MIXES["prefix_heavy"], cfg.vocab_size)
+    t2 = make_trace(MIXES["prefix_heavy"], cfg.vocab_size)
+    for a, b in zip(t1, t2):
+        assert a.arrival_s == b.arrival_s and a.max_new == b.max_new
+        np.testing.assert_array_equal(a.prompt, b.prompt)
+
+    eng, pool = _engine(cfg, params)
+    spec = MIXES["prefix_heavy"].override(n_requests=4, arrival_rate=500.0,
+                                          prefix_fraction=1.0, prefix_len=8)
+    out = run_trace(eng, spec, max_active=2)
+    assert out["n_done"] == 4
+    assert out["pool_shared_puts"] > 0             # prefix cache exercised
+    assert out["cancelled_pages_freed"] and pool.live_pages == 0
+
+
+def test_parse_spec(cfg):
+    s = parse_spec("uniform:n_requests=32,arrival_rate=100,prompt_lens=4+8")
+    assert (s.n_requests, s.arrival_rate, s.prompt_lens) == (32, 100.0,
+                                                            (4, 8))
+    assert parse_spec("speculative").speculate == 4
+    with pytest.raises(ValueError, match="unknown trace mix"):
+        parse_spec("bogus")
+    with pytest.raises(ValueError, match="unknown TraceSpec field"):
+        parse_spec("uniform:frobnicate=1")
