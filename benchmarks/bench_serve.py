@@ -19,6 +19,7 @@ import time
 
 import numpy as np
 
+from benchmarks.runmeta import mesh_from_env, run_metadata
 from repro.configs import smoke_config
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.kvcache import PagedKVPool
@@ -27,6 +28,7 @@ from repro.serve.metrics import toks_per_s, us_per
 PLEN = 64          # multiple of PAGE_TOKENS: prefill emits only full pages
 NEW = 12
 PAGE_TOKENS = 8
+SEED = 0
 
 
 def _reqs(cfg, n, seed=0, new=NEW):
@@ -40,10 +42,17 @@ def run():
     params = None
     rows = []
     batch = 4
+    meta = run_metadata(seed=SEED)
+    mesh = mesh_from_env()        # REPRO_SERVE_MESH=DxM shards the engines
+    rows.append(("serve.run_meta", 0.0,
+                 f"commit={meta['git_commit']}_seed={meta['seed']}"
+                 f"_devices={meta['devices']}"
+                 f"_mesh={meta['mesh'] or 'host'}"))
     step_us = {}
     for mode in ("numpy", "eager", "fused"):
         pool = PagedKVPool(page_tokens=PAGE_TOKENS)
-        eng = ServeEngine(cfg, params=params, kv_pool=pool, decode_mode=mode)
+        eng = ServeEngine(cfg, params=params, kv_pool=pool, decode_mode=mode,
+                          seed=SEED, mesh=mesh if mode == "fused" else None)
         params = eng.params
         eng.generate(_reqs(cfg, batch))        # warm the jit caches
         eng.stats["decode_s"] = 0.0
@@ -106,7 +115,8 @@ def run():
 
     # continuous batching (fused): staggered per-request lengths, 2 rows
     pool = PagedKVPool(page_tokens=PAGE_TOKENS)
-    eng = ServeEngine(cfg, params=params, kv_pool=pool)
+    eng = ServeEngine(cfg, params=params, kv_pool=pool, seed=SEED,
+                      mesh=mesh)
     reqs = _reqs(cfg, 4, seed=2)
     for i, r in enumerate(reqs):
         r.max_new_tokens = NEW - 3 + 2 * i         # per-request lengths
@@ -132,7 +142,8 @@ def run():
     def spec_run(mode, k, draft):
         pool = PagedKVPool(page_tokens=PAGE_TOKENS)
         eng = ServeEngine(cfg, params=params, kv_pool=pool,
-                          decode_mode=mode, speculate=k, draft=draft)
+                          decode_mode=mode, speculate=k, draft=draft,
+                          seed=SEED, mesh=mesh if mode == "fused" else None)
         eng.generate(_reqs(cfg, batch, seed=4, new=spec_new))  # warm jits
         pre = eng.generate(_reqs(cfg, batch, seed=5, new=1))
         pre_syncs = sum(eng.last_transfers)

@@ -20,6 +20,7 @@ import json
 import time
 from pathlib import Path
 
+from benchmarks.runmeta import mesh_from_env, run_metadata
 from repro.configs import smoke_config
 from repro.serve.engine import ServeEngine
 from repro.serve.kvcache import PagedKVPool
@@ -28,6 +29,7 @@ from repro.serve.traffic import MIXES, run_trace
 
 PAGE_TOKENS = 8
 MAX_ACTIVE = 3
+SEED = 0
 RESULT_PATH = Path(__file__).resolve().parent.parent / "BENCH_traffic.json"
 MAX_RUNS = 50          # history entries kept in BENCH_traffic.json
 
@@ -35,11 +37,13 @@ MAX_RUNS = 50          # history entries kept in BENCH_traffic.json
 def _bench_mixes(mix_names=("uniform", "prefix_heavy", "speculative")):
     params = None
     results = {}
+    mesh = mesh_from_env()        # REPRO_SERVE_MESH=DxM shards the engines
     for name in mix_names:
         spec = MIXES[name]
         pool = PagedKVPool(page_tokens=PAGE_TOKENS)
         eng = ServeEngine(smoke_config("starcoder2-7b"),
-                          params=params, kv_pool=pool)
+                          params=params, kv_pool=pool, seed=SEED,
+                          mesh=mesh)
         params = eng.params
         run_trace(eng, spec.override(arrival_rate=1000.0),
                   max_active=MAX_ACTIVE)           # warm pass: jit compiles
@@ -51,7 +55,8 @@ def _bench_mixes(mix_names=("uniform", "prefix_heavy", "speculative")):
 def persist(results: dict, path: Path = RESULT_PATH) -> dict:
     entry = {"timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
              "model": "starcoder2-7b(smoke)", "page_tokens": PAGE_TOKENS,
-             "max_active": MAX_ACTIVE, "mixes": results}
+             "max_active": MAX_ACTIVE, **run_metadata(seed=SEED),
+             "mixes": results}
     doc = {"schema": 1, "runs": []}
     if path.exists():
         try:

@@ -1,0 +1,50 @@
+"""Run provenance for persisted benchmark entries.
+
+Every `BENCH_traffic.json` entry (and the `bench_serve` CSV) is stamped
+with the git commit it measured, the RNG seed, and the device topology —
+a history file whose rows cannot be tied to a commit/mesh is a perf
+trajectory in name only. `REPRO_SERVE_MESH=DxM` (e.g. ``2x4``) runs the
+serving benchmarks on that `launch.mesh.make_serve_mesh` layout; unset,
+the engines use their default host mesh.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+
+
+def git_commit():
+    """Short commit hash of the benchmarked tree, or None outside git."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)))
+        return out.stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
+def mesh_spec() -> str | None:
+    return os.environ.get("REPRO_SERVE_MESH") or None
+
+
+def mesh_from_env():
+    """`make_serve_mesh` for REPRO_SERVE_MESH=DxM, or None (engine
+    default) when unset."""
+    spec = mesh_spec()
+    if spec is None:
+        return None
+    from repro.launch.mesh import make_serve_mesh
+    try:
+        d, m = (int(x) for x in spec.lower().split("x"))
+    except ValueError:
+        raise SystemExit(f"REPRO_SERVE_MESH wants DxM (e.g. 2x4), got "
+                         f"{spec!r}")
+    return make_serve_mesh(d, m)
+
+
+def run_metadata(seed: int = 0) -> dict:
+    import jax
+    return {"git_commit": git_commit(), "seed": seed,
+            "devices": jax.device_count(), "mesh": mesh_spec()}

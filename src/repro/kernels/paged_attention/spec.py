@@ -93,6 +93,42 @@ def example_inputs(shape=None, dtype=np.float32, seed: int = 0) -> dict:
     }
 
 
+def head_sharded_specs(k: int = 1, *, data_axis: str = "data",
+                       model_axis: str = "model",
+                       layer_stacked: bool = True) -> dict:
+    """The kernel's `shard_map` calling convention for mesh-sharded
+    serving: PartitionSpec per argument (plus ``"out"``) such that every
+    shard's kernel call is fully LOCAL — no cross-device page gather.
+
+    Page capacity shards over the data axis (each decode row's pages live
+    on the shard that decodes it, so the page table indexes only local
+    slots) and kv heads shard over the model axis. Query heads shard over
+    the model axis too, which is legal because query head ``h`` attends
+    kv head ``h // (hq // hkv)``: when the model axis divides both ``hq``
+    and ``hkv``, shard ``s``'s contiguous q-head block is exactly the
+    ``g = hq // hkv`` query heads of each of its kv heads, so the kernel's
+    GQA head folding is preserved per shard. Pools are the serve layer's
+    layer-stacked ``(L, C, t, hkv, hd)`` arrays (``layer_stacked=False``
+    drops the leading layer dim for the flat kernel-level layout);
+    ``k > 1`` is the multi-query-row verify shape ``(b, k, hq, d)``."""
+    from jax.sharding import PartitionSpec as P
+
+    d, m = data_axis, model_axis
+    ll = (None,) if layer_stacked else ()
+    pool = P(*ll, d, None, m, None)
+    scale = P(*ll, d, None, m)
+    q = P(d, m, None) if k == 1 else P(d, None, m, None)
+    return {
+        "q": q,
+        "k_pages": pool, "v_pages": pool,
+        "k_quant": pool, "v_quant": pool,
+        "k_scale": scale, "v_scale": scale,
+        "page_table": P(d, None), "lengths": P(d),
+        "layer": P(),
+        "out": q,
+    }
+
+
 def _grid_of(q, k_pages, v_pages, k_quant, v_quant, k_scale, v_scale,
              page_table, lengths, *layer):
     """Handles both the flat (P, T, hkv, d) pools and the serve layer's

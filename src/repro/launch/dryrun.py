@@ -8,7 +8,16 @@ Usage:
   python -m repro.launch.dryrun --arch mamba2-780m --shape train_4k
   python -m repro.launch.dryrun --all                 # every assigned cell
   python -m repro.launch.dryrun --all --multi-pod     # 2x16x16 pod mesh
+  python -m repro.launch.dryrun --serve-plan          # serving-memory report
 Results cached as JSON under experiments/dryrun/.
+
+``--serve-plan`` is a pure-arithmetic serving report (no compile, no
+devices): for every paged-servable arch x serve mesh it prints the
+per-device params bytes under `sharding.partition.SERVE_RULES`, the
+per-device `DevicePagePool` bytes at a single-host serving point, and
+the HBM headroom — flagging UNSERVABLE cells (e.g. llama3-405b on any
+single-host mesh) before anyone burns a pod discovering it deep inside
+pool allocation.
 """
 import argparse   # noqa: E402
 import json       # noqa: E402
@@ -155,6 +164,150 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     return rec
 
 
+# ---------------------------------------------------------------------------
+# --serve-plan: analytic serving-memory report. Everything below is plain
+# arithmetic over abstract shapes — no compile, no device allocation — so a
+# config that cannot fit is caught here, not deep inside DevicePagePool.
+# ---------------------------------------------------------------------------
+# single-host serving point: the fused decode path's natural scale (the
+# pod-scale decode_32k shape belongs to the compile dry-run above)
+SERVE_BATCH = 16           # decode rows
+SERVE_CONTEXT = 8_192      # KV tokens held per sequence
+SERVE_PAGE_TOKENS = 16     # serve launcher default page size
+
+
+class _AbstractServeMesh:
+    """axis_names/axis_sizes shim: lets `ServePlan` and `spec_for` resolve
+    a dp x tp serving layout without owning that many real devices."""
+
+    def __init__(self, data: int, model: int):
+        self.axis_names = ("data", "model")
+        self.axis_sizes = (data, model)
+
+
+def _spec_divisor(spec, sizes: dict) -> int:
+    """How many devices one leaf is split over under a PartitionSpec."""
+    div = 1
+    for entry in spec:
+        if entry is None:
+            continue
+        for ax in (entry if isinstance(entry, tuple) else (entry,)):
+            div *= sizes[ax]
+    return div
+
+
+def serve_plan_cell(arch: str, dp: int, tp: int, hw=TPU_V5E) -> dict:
+    """Per-device serving memory for one (arch, dp x tp mesh) cell at the
+    SERVE_BATCH x SERVE_CONTEXT serving point."""
+    from jax.sharding import PartitionSpec
+    from repro.serve.paged_decode import supports_paged
+    from repro.serve.sharding import ServePlan
+
+    cfg = get_config(arch)
+    rec = {"arch": arch, "mesh": f"{dp}x{tp}", "dp": dp, "tp": tp,
+           "hardware": hw.name, "status": "ok"}
+    if not supports_paged(cfg):
+        rec["status"] = "no_paged_path"
+        return rec
+    plan = ServePlan(_AbstractServeMesh(dp, tp))
+    try:
+        plan.check_config(cfg)
+    except ValueError as e:
+        rec["status"] = "indivisible"
+        rec["error"] = str(e)
+        return rec
+
+    # params: replicated except head/ffn dims over "model" (SERVE_RULES)
+    model = Model(cfg)
+    sizes = {"data": dp, "model": tp}
+    abstract = model.abstract_params()
+    specs = plan.param_specs(model)
+    params_dev = 0
+    for a, s in zip(jax.tree.leaves(abstract),
+                    jax.tree.leaves(specs, is_leaf=lambda x: isinstance(
+                        x, PartitionSpec))):
+        total = int(np_prod(a.shape)) * jnp.dtype(a.dtype).itemsize
+        params_dev += total // _spec_divisor(s, sizes)
+
+    # page pool: mirrors DevicePagePool sizing — per-shard slot space
+    # (rows over "data"), kv heads over "model", pow2 local capacity.
+    # Six layer-stacked arrays per slot x layer: fp32 K/V pages, int8
+    # quantized copies, fp32 per-token scales.
+    t, hkv, hd = SERVE_PAGE_TOKENS, cfg.num_kv_heads, cfg.head_dim
+    rows_per_shard = -(-SERVE_BATCH // dp)
+    slots_per_seq = -(-SERVE_CONTEXT // t) + 2     # + tail/spill headroom
+    cap_local = 1
+    while cap_local < max(8, rows_per_shard * slots_per_seq):
+        cap_local *= 2
+    hkv_local = hkv // tp
+    slot_bytes = (2 * t * hkv_local * hd * (4 + 1)    # pages + quant
+                  + 2 * t * hkv_local * 4)            # scales
+    pool_dev = cfg.num_layers * cap_local * slot_bytes
+
+    hbm = int(hw.hbm_gib * 2**30)
+    rec.update(params_bytes_per_device=params_dev,
+               pool_bytes_per_device=pool_dev,
+               pool_slots_per_device=cap_local,
+               rows_per_shard=rows_per_shard,
+               hbm_bytes=hbm,
+               headroom_bytes=hbm - params_dev - pool_dev)
+    if rec["headroom_bytes"] < 0:
+        rec["status"] = "UNSERVABLE"
+    return rec
+
+
+def np_prod(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+def serve_plan_main(args) -> int:
+    archs = [args.arch] if args.arch else list_archs()
+    meshes = []
+    for spec in args.serve_meshes.split(","):
+        try:
+            d, m = (int(x) for x in spec.strip().lower().split("x"))
+        except ValueError:
+            raise SystemExit(f"--serve-meshes wants DxM[,DxM...], got "
+                             f"{spec!r}")
+        meshes.append((d, m))
+    gib = 2**30
+    recs = []
+    n_unservable = 0
+    print(f"serving plan @ batch={SERVE_BATCH} context={SERVE_CONTEXT} "
+          f"page_tokens={SERVE_PAGE_TOKENS} hw={TPU_V5E.name} "
+          f"({TPU_V5E.hbm_gib:.0f} GiB/device)")
+    print(f"{'arch':24s} {'mesh':7s} {'params/dev':>11s} {'pool/dev':>11s} "
+          f"{'headroom':>11s} status")
+    for arch in archs:
+        for d, m in meshes:
+            rec = serve_plan_cell(arch, d, m)
+            recs.append(rec)
+            if rec["status"] == "no_paged_path":
+                print(f"{arch:24s} {rec['mesh']:7s} {'-':>11s} {'-':>11s} "
+                      f"{'-':>11s} {rec['status']}")
+                break                      # same verdict on every mesh
+            if rec["status"] == "indivisible":
+                print(f"{arch:24s} {rec['mesh']:7s} {'-':>11s} {'-':>11s} "
+                      f"{'-':>11s} indivisible")
+                continue
+            n_unservable += rec["status"] == "UNSERVABLE"
+            print(f"{arch:24s} {rec['mesh']:7s} "
+                  f"{rec['params_bytes_per_device'] / gib:10.2f}G "
+                  f"{rec['pool_bytes_per_device'] / gib:10.2f}G "
+                  f"{rec['headroom_bytes'] / gib:10.2f}G {rec['status']}")
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path = out_dir / "serve_plan.json"
+    out_path.write_text(json.dumps(
+        {"batch": SERVE_BATCH, "context": SERVE_CONTEXT,
+         "page_tokens": SERVE_PAGE_TOKENS, "cells": recs}, indent=2))
+    print(f"{n_unservable} unservable cells; wrote {out_path}")
+    return 0
+
+
 def all_cells():
     cells = []
     for arch in list_archs():
@@ -174,8 +327,17 @@ def main():
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--variant", default="baseline")
     ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--serve-plan", action="store_true",
+                    help="analytic serving-memory report per arch x serve "
+                         "mesh (no compile): params + page-pool bytes per "
+                         "device vs HBM, flagging UNSERVABLE cells")
+    ap.add_argument("--serve-meshes", default="1x1,1x8,2x4,4x8",
+                    help="comma-separated DxM serve meshes for --serve-plan")
     ap.add_argument("--out", default=str(OUT_DIR))
     args = ap.parse_args()
+
+    if args.serve_plan:
+        raise SystemExit(serve_plan_main(args))
 
     out_dir = Path(args.out)
     cells = all_cells() if args.all else [(args.arch, args.shape)]

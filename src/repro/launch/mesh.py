@@ -43,3 +43,23 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """Whatever devices exist locally (tests/examples): 1D data mesh."""
     return make_mesh_compat((len(jax.devices()),), ("data",))
+
+
+def make_serve_mesh(data: int = 1, model: int = 1):
+    """2-D serving mesh over the first ``data * model`` local devices:
+    decode rows shard over "data", attention/MLP heads over "model" (the
+    layout `serve.sharding.ServePlan` consumes). Built over an explicit
+    device slice — not `jax.make_mesh`, which may use every device — so
+    one 8-device host can carry 1x1, 2x2 and 2x4 meshes side by side."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    n = data * model
+    devs = jax.devices()
+    if n > len(devs):
+        raise ValueError(
+            f"serve mesh {data}x{model} needs {n} devices, have "
+            f"{len(devs)} (forced host devices: XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n})")
+    return Mesh(np.asarray(devs[:n]).reshape(data, model),
+                ("data", "model"))

@@ -81,6 +81,14 @@ def main():
     ap.add_argument("--max-queue", type=int, default=16,
                     help="front-end waiting-line bound: submissions past "
                          "it are rejected (reason queue_full), not blocked")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="serving mesh 'data x model', e.g. 2x4: decode "
+                         "rows shard over the data axis, attention/MLP "
+                         "heads over the model axis (requires that many "
+                         "devices — on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N). "
+                         "Default: the host mesh (single device -> the "
+                         "unsharded stack)")
     ap.add_argument("--knee-cache", default=None, metavar="PATH",
                     help="JSON cache of backend='auto' knee points (e.g. "
                          "<checkpoint-dir>/knee_cache.json): loaded at "
@@ -107,9 +115,18 @@ def main():
                            placement_policy=policy)
     if args.speculate > 1 and pool is None:
         raise SystemExit("--speculate needs --paged or --continuous")
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_serve_mesh
+        try:
+            d, m = (int(x) for x in args.mesh.lower().split("x"))
+        except ValueError:
+            raise SystemExit(f"--mesh wants DxM (e.g. 2x4), got "
+                             f"{args.mesh!r}")
+        mesh = make_serve_mesh(d, m)
     eng = ServeEngine(cfg, kv_pool=pool, decode_mode=args.decode_mode,
                       knee_cache=args.knee_cache, speculate=args.speculate,
-                      draft=args.draft)
+                      draft=args.draft, mesh=mesh)
     if args.frontend:
         _run_frontend(args, cfg, eng, pool)
         return

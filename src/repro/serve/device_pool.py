@@ -53,8 +53,12 @@ def _flat2(a):
     return a.reshape((a.shape[0] * a.shape[1],) + a.shape[2:])
 
 
+# The factories take the pool's NamedSharding tuple (hashable; None for
+# the unsharded pool) so a mesh-sharded pool's writes pin their outputs
+# to the same layout the donated inputs carry — the scatter stays an
+# in-place per-shard update rather than a resharding copy.
 @functools.lru_cache(maxsize=None)
-def _jit_write_fast():
+def _jit_write_fast(shardings=None):
     def f(kf, vf, kq, vq, ks, vs, idx, k, v):
         return (_flat2(kf).at[idx].set(k).reshape(kf.shape),
                 _flat2(vf).at[idx].set(v).reshape(vf.shape),
@@ -62,11 +66,12 @@ def _jit_write_fast():
                 _flat2(vq).at[idx].set(0).reshape(vq.shape),
                 _flat2(ks).at[idx].set(0.0).reshape(ks.shape),
                 _flat2(vs).at[idx].set(0.0).reshape(vs.shape))
-    return jax.jit(f, donate_argnums=(0, 1, 2, 3, 4, 5))
+    return jax.jit(f, donate_argnums=(0, 1, 2, 3, 4, 5),
+                   out_shardings=shardings)
 
 
 @functools.lru_cache(maxsize=None)
-def _jit_write_slow():
+def _jit_write_slow(shardings=None):
     def f(kf, vf, kq, vq, ks, vs, idx, kq_new, ks_new, vq_new, vs_new):
         return (_flat2(kf).at[idx].set(0.0).reshape(kf.shape),
                 _flat2(vf).at[idx].set(0.0).reshape(vf.shape),
@@ -74,11 +79,12 @@ def _jit_write_slow():
                 _flat2(vq).at[idx].set(vq_new).reshape(vq.shape),
                 _flat2(ks).at[idx].set(ks_new).reshape(ks.shape),
                 _flat2(vs).at[idx].set(vs_new).reshape(vs.shape))
-    return jax.jit(f, donate_argnums=(0, 1, 2, 3, 4, 5))
+    return jax.jit(f, donate_argnums=(0, 1, 2, 3, 4, 5),
+                   out_shardings=shardings)
 
 
 @functools.lru_cache(maxsize=None)
-def _jit_write_rows():
+def _jit_write_rows(shardings=None):
     # single-axis scatter on a flattened (layer, slot, row) index; `layer`
     # is an operand so one compiled scatter serves the whole layer stack
     def f(kf, vf, layer, slots, rows, k_rows, v_rows):
@@ -90,7 +96,7 @@ def _jit_write_rows():
             return a.reshape(flat).at[idx].set(x).reshape(a.shape)
 
         return upd(kf, k_rows), upd(vf, v_rows)
-    return jax.jit(f, donate_argnums=(0, 1))
+    return jax.jit(f, donate_argnums=(0, 1), out_shardings=shardings)
 
 
 def _pad_pow2(idx: np.ndarray, *stacks):
@@ -122,14 +128,26 @@ class DevicePagePool:
     """
 
     def __init__(self, num_layers: int, page_tokens: int, hkv: int, hd: int,
-                 init_slots: int = 8, dtype=jnp.float32):
+                 init_slots: int = 8, dtype=jnp.float32, plan=None):
         self.num_layers = num_layers
         self.t, self.hkv, self.hd = page_tokens, hkv, hd
         self.dtype = dtype
-        self.capacity = 1
-        while self.capacity < max(8, init_slots):
-            self.capacity *= 2
+        # mesh-aware slot space (`serve.sharding.ServePlan`): the global
+        # capacity axis splits into `dp` contiguous per-shard ranges —
+        # shard s owns global slots [s * lc, (s+1) * lc) — and the kv-head
+        # axis splits over the mesh's model axis. `init_slots` is the
+        # PER-SHARD requirement (== total for the 1-shard pool).
+        self.plan = plan
+        self.shards = plan.dp if plan is not None else 1
+        if plan is not None and hkv % plan.tp:
+            raise ValueError(f"hkv={hkv} not divisible by the model-axis "
+                             f"size {plan.tp}")
+        self.capacity_local = 1
+        while self.capacity_local < max(8, init_slots):
+            self.capacity_local *= 2
+        self.capacity = self.shards * self.capacity_local
         ll, c, t = num_layers, self.capacity, page_tokens
+        self._shardings = plan.pool_shardings() if plan is not None else None
         self.arrays = (
             jnp.zeros((ll, c, t, hkv, hd), dtype),      # k_pages (fast float)
             jnp.zeros((ll, c, t, hkv, hd), dtype),      # v_pages
@@ -138,48 +156,87 @@ class DevicePagePool:
             jnp.zeros((ll, c, t, hkv), dtype),          # k_scale
             jnp.zeros((ll, c, t, hkv), dtype),          # v_scale
         )
-        self._free = list(range(c - 1, -1, -1))     # pop() -> lowest first
-        self.slot_of: dict[int, int] = {}           # group key pid -> slot
-        self._synced: dict[int, int] = {}           # pid -> synced version
+        if self._shardings is not None:
+            self.arrays = tuple(jax.device_put(a, s) for a, s in
+                                zip(self.arrays, self._shardings))
+        # per-shard free lists of GLOBAL slot ids; pop() -> lowest first
+        lc = self.capacity_local
+        self._free = [list(range((s + 1) * lc - 1, s * lc - 1, -1))
+                      for s in range(self.shards)]
+        # group key pid -> slot; a prefix-shared page can occupy one slot
+        # PER data shard (each shard's rows attend their own copy), so a
+        # multi-shard pool keys by (shard, pid) while the 1-shard pool
+        # keeps the plain pid keys its tests and callers know
+        self.slot_of: dict = {}
+        self._synced: dict = {}                     # same keying -> version
         self._dirty: set[int] = set()               # slots ever written
         self.writes = 0     # device scatter calls (bench/test instrumentation)
         self.reads = 0      # device->host pulls (fill readbacks)
+
+    def _key(self, pid: int, shard: int):
+        return pid if self.shards == 1 else (shard, pid)
+
+    def slot(self, pid: int, shard: int = 0) -> int:
+        """Global slot id of page-group `pid` on `shard`."""
+        return self.slot_of[self._key(pid, shard)]
+
+    def local_slot(self, slot: int) -> int:
+        """Shard-local slot id — what page tables carry under shard_map,
+        where each shard sees only its own capacity_local slot rows."""
+        return slot % self.capacity_local
+
+    def shard_of_slot(self, slot: int) -> int:
+        return slot // self.capacity_local
 
     # -- slots ---------------------------------------------------------------
     def _grow(self):
         old = self.capacity
         self.capacity *= 2
+        self.capacity_local = self.capacity
         pad = [(0, 0), (0, old)] + [(0, 0)] * 3
         self.arrays = tuple(jnp.pad(a, pad[:a.ndim]) for a in self.arrays)
-        self._free.extend(range(self.capacity - 1, old - 1, -1))
+        if self._shardings is not None:     # tp-only plan: re-pin the layout
+            self.arrays = tuple(jax.device_put(a, s) for a, s in
+                                zip(self.arrays, self._shardings))
+        self._free[0].extend(range(self.capacity - 1, old - 1, -1))
 
-    def alloc(self) -> int:
-        if not self._free:
+    def alloc(self, shard: int = 0) -> int:
+        if not self._free[shard]:
+            if self.shards > 1:
+                # growth would re-partition the global slot axis and strand
+                # every shard's existing slot ids — sharded pools are sized
+                # up front (PagedKVState passes the per-shard worst case)
+                raise RuntimeError(
+                    f"data shard {shard} exhausted its {self.capacity_local}"
+                    f" device slots — size init_slots to the per-shard "
+                    f"worst case (sharded pools cannot grow)")
             self._grow()
-        return self._free.pop()
+        return self._free[shard].pop()
 
     def release_slot(self, slot: int):
-        self._free.append(slot)
+        self._free[self.shard_of_slot(slot)].append(slot)
 
     def release_pid(self, pid: int):
         """Forget a destroyed pool page. Only the group-key (layer-0) pid
         owns the slot; other layers' pids just drop their sync record."""
-        self._synced.pop(pid, None)
-        slot = self.slot_of.pop(pid, None)
-        if slot is not None:
-            self._free.append(slot)
+        for shard in range(self.shards):
+            key = self._key(pid, shard)
+            self._synced.pop(key, None)
+            slot = self.slot_of.pop(key, None)
+            if slot is not None:
+                self._free[self.shard_of_slot(slot)].append(slot)
 
-    def adopt(self, group, slot: int, pool):
+    def adopt(self, group, slot: int, pool, shard: int = 0):
         """Hand an already-written tail slot to a page group that just
         filled. Per layer: a fast placement's device cell already holds
         the full float rows, so it is marked synced; a slow placement
         stays dirty and the next sync rewrites the cell in place (int8 +
         zeroed float)."""
-        self.slot_of[group[0]] = slot
+        self.slot_of[self._key(group[0], shard)] = slot
         for pid in group:
             page = pool.pages[pid]
             if page.tier == "fast":
-                self._synced[pid] = page.version
+                self._synced[self._key(pid, shard)] = page.version
 
     # -- content writes ------------------------------------------------------
     def zero_slot(self, slot: int):
@@ -192,7 +249,8 @@ class DevicePagePool:
         ll = self.num_layers
         idx = np.arange(ll, dtype=np.int32) * self.capacity + slot
         z = np.zeros((ll, self.t, self.hkv, self.hd), np.float32)
-        self.arrays = _jit_write_fast()(*self.arrays, idx, z, z)
+        self.arrays = _jit_write_fast(self._shardings)(*self.arrays,
+                                                       idx, z, z)
         self._dirty.discard(slot)
         self.writes += 1
 
@@ -203,11 +261,12 @@ class DevicePagePool:
         so the compiled scatter never changes shape). Used by the eager
         reference path and prefill-tail writes; the fused step performs
         the same scatter inside its own jitted graph."""
-        kf, vf = _jit_write_rows()(self.arrays[0], self.arrays[1],
-                                   jnp.int32(layer),
-                                   jnp.asarray(slots), jnp.asarray(rows),
-                                   jnp.asarray(k_rows, self.arrays[0].dtype),
-                                   jnp.asarray(v_rows, self.arrays[0].dtype))
+        sh = None if self._shardings is None else self._shardings[:2]
+        kf, vf = _jit_write_rows(sh)(self.arrays[0], self.arrays[1],
+                                     jnp.int32(layer),
+                                     jnp.asarray(slots), jnp.asarray(rows),
+                                     jnp.asarray(k_rows, self.arrays[0].dtype),
+                                     jnp.asarray(v_rows, self.arrays[0].dtype))
         self.arrays = (kf, vf) + self.arrays[2:]
         self._dirty.update(int(s) for s in slots)
         self.writes += 1
@@ -222,32 +281,39 @@ class DevicePagePool:
                 np.asarray(self.arrays[1][:, slot]))
 
     # -- sync ----------------------------------------------------------------
-    def sync(self, pool, groups):
+    def sync(self, pool, groups, shards=None):
         """Bring the mirror current for an iterable of page groups (each a
         tuple of per-layer pids): allocate a slot for groups new to the
         mirror, rewrite (layer, slot) cells whose page version changed
-        (demotions). Batched into at most one fast + one slow scatter."""
+        (demotions). Batched into at most one fast + one slow scatter.
+        `shards` (aligned with `groups`, default all 0) pins each group to
+        the data shard whose rows attend it — the slot comes from that
+        shard's range and the sync record is keyed per shard."""
+        groups = list(groups)
+        if shards is None:
+            shards = [0] * len(groups)
         # allocate every slot FIRST: alloc() may _grow() (capacity doubles),
         # and the flattened (layer * capacity + slot) scatter indices must
         # be computed against the final capacity or every layer > 0 write
         # would land in the wrong cell of the grown arrays
         fresh = []
         seen = set()
-        for group in groups:
-            key = group[0]
+        for group, shard in zip(groups, shards):
+            key = self._key(group[0], shard)
             if key in seen:
                 continue
             seen.add(key)
-            fresh.append(group)
+            fresh.append((group, shard))
             if key not in self.slot_of:
-                self.slot_of[key] = self.alloc()
+                self.slot_of[key] = self.alloc(shard)
         fast_w, slow_w = [], []
         c = self.capacity
-        for group in fresh:
-            slot = self.slot_of[group[0]]
+        for group, shard in fresh:
+            slot = self.slot_of[self._key(group[0], shard)]
             for layer, pid in enumerate(group):
                 page = pool.pages[pid]
-                if self._synced.get(pid) == page.version:
+                key = self._key(pid, shard)
+                if self._synced.get(key) == page.version:
                     continue
                 idx = layer * c + slot
                 if page.tier == "fast":
@@ -256,21 +322,22 @@ class DevicePagePool:
                 else:
                     (kq, ks), (vq, vs) = page.data
                     slow_w.append((idx, kq, ks[..., 0], vq, vs[..., 0]))
-                self._synced[pid] = page.version
+                self._synced[key] = page.version
         if fast_w:
             idx = np.array([w[0] for w in fast_w], np.int32)
             k = np.stack([w[1] for w in fast_w]).astype(np.float32)
             v = np.stack([w[2] for w in fast_w]).astype(np.float32)
             idx, k, v = _pad_pow2(idx, k, v)
-            self.arrays = _jit_write_fast()(*self.arrays, idx, k, v)
+            self.arrays = _jit_write_fast(self._shardings)(*self.arrays,
+                                                           idx, k, v)
             self._dirty.update(int(i) % c for i in idx)
             self.writes += 1
         if slow_w:
             idx = np.array([w[0] for w in slow_w], np.int32)
             stacks = [np.stack([w[i] for w in slow_w]) for i in range(1, 5)]
             idx, kq, ks, vq, vs = _pad_pow2(idx, *stacks)
-            self.arrays = _jit_write_slow()(*self.arrays, idx, kq,
-                                            ks.astype(np.float32), vq,
-                                            vs.astype(np.float32))
+            self.arrays = _jit_write_slow(self._shardings)(
+                *self.arrays, idx, kq, ks.astype(np.float32), vq,
+                vs.astype(np.float32))
             self._dirty.update(int(i) % c for i in idx)
             self.writes += 1

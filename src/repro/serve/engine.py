@@ -48,6 +48,7 @@ from repro.serve.paged_decode import (MODES, PagedKVState, build_fused_step,
 from repro.serve.scheduler import (Admission,  # noqa: F401 (re-export)
                                    Request, Scheduler, effective_speculate,
                                    prefix_page_hashes)
+from repro.serve.sharding import ServePlan
 from repro.serve.speculative import SpecStats, make_draft
 from repro.serve.steps import prefill_all_positions
 
@@ -88,7 +89,8 @@ class ServeEngine:
                  kv_pool: Optional[PagedKVPool] = None,
                  device_gather: bool = True,
                  decode_mode: Optional[str] = None,
-                 knee_cache=None, speculate: int = 0, draft="ngram"):
+                 knee_cache=None, speculate: int = 0, draft="ngram",
+                 mesh=None):
         self.cfg = cfg
         self.model = Model(cfg)
         self.params = params if params is not None else \
@@ -99,6 +101,20 @@ class ServeEngine:
         if decode_mode not in MODES:
             raise ValueError(f"decode_mode {decode_mode!r} not in {MODES}")
         self.decode_mode = decode_mode
+        # mesh-aware serving (`serve.sharding.ServePlan`): default is the
+        # host mesh — on one device that collapses to plan=None, the exact
+        # pre-mesh stack; a multi-device mesh shards decode rows over
+        # "data" and attention/MLP heads over "model". Only the fused
+        # decode graph runs under shard_map (eager/numpy are the
+        # single-device references).
+        if mesh is None and decode_mode == "fused":
+            from repro.launch.mesh import make_host_mesh
+            mesh = make_host_mesh()
+        self.plan = ServePlan.from_mesh(mesh) \
+            if decode_mode == "fused" else None
+        if self.plan is not None:
+            self.plan.check_config(cfg)
+            self.params = self.plan.shard_params(self.model, self.params)
         self.knee_cache = knee_cache
         if knee_cache is not None:
             api.load_knee_cache(knee_cache)
@@ -170,7 +186,7 @@ class ServeEngine:
         return PagedKVState(self.kv_pool, capacity, self.cfg.num_layers,
                             self.cfg.num_kv_heads, self.cfg.head_dim,
                             mode=self.decode_mode, batch_hint=batch_hint,
-                            tail_slots=tail_slots)
+                            tail_slots=tail_slots, plan=self.plan)
 
     def _fused_step_fn(self, slots: int, greedy: bool, temperature: float,
                        k: int = 1):
@@ -178,7 +194,7 @@ class ServeEngine:
         fn = self._fused_cache.get(key)
         if fn is None:
             fn = build_fused_step(self.model, slots, k=k, greedy=greedy,
-                                  temperature=temperature)
+                                  temperature=temperature, plan=self.plan)
             self._fused_cache[key] = fn
         return fn
 
@@ -269,6 +285,10 @@ class ServeEngine:
         logits, caches = self._prefill(self.params,
                                        {"tokens": jnp.asarray(prompts)})
         paged = self.kv_pool is not None
+        plan = self.plan if (paged and self.decode_mode == "fused") else None
+        # a mesh plan decodes n_rows >= b rows so every data shard gets an
+        # equal block; the extra rows are seq -1 padding (trash slot)
+        n_rows = plan.pad_rows(b) if plan is not None else b
         state = None
         if paged:
             self._require_paged()
@@ -279,8 +299,14 @@ class ServeEngine:
             # remainder buffered until decode fills it
             seq_ids = list(range(self._next_seq, self._next_seq + b))
             self._next_seq += b
-            state = self._new_state(cap, batch_hint=b,
+            state = self._new_state(cap, batch_hint=n_rows,
                                     tail_slots=2 if spec_k > 1 else 1)
+            if plan is not None and plan.dp > 1:
+                # pin each sequence to its row's data shard BEFORE any
+                # prefill write so its pages land on the shard that
+                # decodes it
+                for i, seq in enumerate(seq_ids):
+                    state.bind_seq(seq, plan.shard_of_row(i, n_rows))
             extract_prefill_pages(self.model, caches, state, seq_ids)
         else:
             caches = pad_caches(self.model, caches, cap, plen)
@@ -304,6 +330,10 @@ class ServeEngine:
         else:
             step_fn = self._fused_step_fn(state.slots, greedy, temperature) \
                 if fused else None
+            step_seqs = seq_ids + [-1] * (n_rows - b) if paged else None
+            if fused and n_rows > b:    # device-side pad: no extra upload
+                tok = jnp.concatenate(
+                    [tok, jnp.zeros(n_rows - b, jnp.int32)])
             for step in range(max_new - 1):
                 pos = plen + step
                 if paged:
@@ -316,7 +346,7 @@ class ServeEngine:
                         # device
                         key, sub = jax.random.split(key)
                         tok_host, tok = state.run_fused(
-                            step_fn, self.params, tok, seq_ids, pos, sub)
+                            step_fn, self.params, tok, step_seqs, pos, sub)
                     else:
                         logits = paged_decode_step(self.model, self.params,
                                                    np.asarray(tok), state,
@@ -399,6 +429,8 @@ class ServeEngine:
                              "eff_k": eff_ks[i],
                              "limit": r.max_new_tokens - len(outs[i]),
                              "eos": r.eos_token, "stats": spec_stats[i]})
+            # mesh plan: pad to the equal-block row count (seq -1 rows)
+            rows.extend([None] * (state.batch_hint - len(rows)))
             hits0 = (self.kv_pool.stats["fast_hits"],
                      self.kv_pool.stats["slow_hits"])
             g0 = state.gather_s
@@ -539,12 +571,21 @@ class ServeSession:
         self.greedy, self.temperature = greedy, float(temperature)
         self.prefix_cache = prefix_cache
         self.metrics = metrics
+        plan = engine.plan
+        # under a mesh plan the decode batch carries an equal block of
+        # rows per data shard; admission fills rows (and page budget)
+        # per shard, so max_active rounds up to a multiple of dp
+        n_rows = plan.pad_rows(max_active) if plan is not None \
+            else max_active
+        dp = plan.dp if plan is not None else 1
         self.sched = Scheduler(self.pool, engine.cfg.num_layers,
                                max_active=max_active,
-                               default_speculate=engine.speculate)
-        self.state = engine._new_state(self.capacity, batch_hint=max_active,
+                               default_speculate=engine.speculate,
+                               data_shards=dp,
+                               rows_per_shard=n_rows // dp)
+        self.state = engine._new_state(self.capacity, batch_hint=n_rows,
                                        tail_slots=2 if k > 1 else 1)
-        self._rows: list[Optional[_Active]] = [None] * max_active
+        self._rows: list[Optional[_Active]] = [None] * n_rows
         self._recs: dict[int, _SessionRec] = {}
         self._key = jax.random.PRNGKey(seed)
         self._observe = getattr(self.pool.policy, "observe", None)
@@ -688,6 +729,15 @@ class ServeSession:
                 rec = self._recs[id(req)]
                 seq = eng._next_seq
                 eng._next_seq += 1
+                # the scheduler picked the request's data shard at admit();
+                # choose its row inside that shard's block and bind the
+                # sequence BEFORE the prefill writes, so its pages land on
+                # the shard that will decode it
+                shard = self.sched.assigned_shard(req)
+                rps = len(self._rows) // self.sched.data_shards
+                row_i = next(i for i in range(shard * rps, (shard + 1) * rps)
+                             if self._rows[i] is None)
+                self.state.bind_seq(seq, shard)
                 toks = np.asarray(req.prompt, np.int32)
                 plen = len(toks)
                 t0 = time.time()
@@ -713,7 +763,6 @@ class ServeSession:
                 eng.stats["tokens"] += 1
                 act = _Active(req, seq, plen, [tok],
                               eff_k=effective_speculate(req, eng.speculate))
-                row_i = self._rows.index(None)
                 self._rows[row_i] = act
                 rec.active, rec.row, rec.status = act, row_i, "active"
                 self._rows_dirty = True
@@ -739,10 +788,10 @@ class ServeSession:
             return events
         eng, pool, state = self.engine, self.pool, self.state
         spec = self.spec_k > 1
-        max_active = self.max_active
+        n_rows = len(rows)      # mesh plan: max_active padded to dp blocks
         if not spec:       # the spec branch derives these from srows
-            pos = np.zeros(max_active, np.int32)
-            seq_ids = [-1] * max_active
+            pos = np.zeros(n_rows, np.int32)
+            seq_ids = [-1] * n_rows
             for i, act in enumerate(rows):
                 if act is None:
                     continue
@@ -778,7 +827,7 @@ class ServeSession:
                 # rebuild the token vector once (run_fused counts the
                 # upload); steady-state steps feed the previous step's
                 # device tokens back
-                tok_in = np.zeros(max_active, np.int32)
+                tok_in = np.zeros(n_rows, np.int32)
                 for i, act in enumerate(rows):
                     if act is not None:
                         tok_in[i] = act.outs[-1]
@@ -787,7 +836,7 @@ class ServeSession:
             toks, self._tok_dev = state.run_fused(
                 self._step_fn, eng.params, tok_in, seq_ids, pos, sub)
         else:
-            tokens = np.zeros(max_active, np.int32)
+            tokens = np.zeros(n_rows, np.int32)
             for i, act in enumerate(rows):
                 if act is not None:
                     tokens[i] = act.outs[-1]

@@ -92,11 +92,14 @@ class PagedKVState:
 
     def __init__(self, pool: PagedKVPool, capacity: int, num_layers: int,
                  hkv: int, hd: int, mode: str = "fused",
-                 batch_hint: int = 1, tail_slots: int = 1):
+                 batch_hint: int = 1, tail_slots: int = 1, plan=None):
         if mode not in MODES:
             raise ValueError(f"mode {mode!r} not in {MODES}")
         if tail_slots not in (1, 2):
             raise ValueError(f"tail_slots must be 1 or 2, got {tail_slots}")
+        if plan is not None and mode != "fused":
+            raise ValueError(f"mesh-sharded serving requires the fused "
+                             f"decode mode, got {mode!r}")
         self.pool = pool
         self.num_layers = num_layers
         self.hkv, self.hd = hkv, hd
@@ -106,22 +109,47 @@ class PagedKVState:
         # one page boundary into a spill slot), rounded to a mult. of 8
         self.slots = -(-(slots + tail_slots) // 8) * 8
         self.mode = mode
+        self.plan = plan
         self.batch_hint = max(1, batch_hint)   # expected live sequences
         self.tail_len: dict[int, int] = {}     # seq -> tail rows (all layers)
         self.tail_data: dict[tuple, list] = {}  # (seq, layer) -> rows (numpy)
-        self._tail_slot: dict[int, int] = {}
+        self._tail_slot: dict[int, int] = {}   # seq -> GLOBAL device slot
         self._spill_slot: dict[int, int] = {}  # k>1: boundary-crossing rows
+        self._shard_of: dict[int, int] = {}    # seq -> data shard
         self._device: DevicePagePool | None = None
         self._trash = 0
         if mode != "numpy":
+            shards = plan.dp if plan is not None else 1
+            # init_slots is the PER-SHARD worst case: each shard carries
+            # its block of decode rows (batch_hint / dp of them)
+            rows_per_shard = -(-self.batch_hint // shards)
             self._device = DevicePagePool(
                 num_layers, t, hkv, hd,
-                init_slots=self.slots * self.batch_hint)
-            self._trash = self._device.alloc()
+                init_slots=self.slots * rows_per_shard, plan=plan)
+            self._trash = [self._device.alloc(s) for s in range(shards)]
         self._step = None         # per-step view (begin_step .. end_step)
         self.gather_s = 0.0       # host-side bookkeeping time (Sibyl reward)
         self.h2d = 0              # control/token uploads owned by the state
         self.d2h = 0
+
+    # -- data-shard binding --------------------------------------------------
+    def bind_seq(self, seq: int, shard: int):
+        """Pin a sequence to a data shard BEFORE its prefill pages are
+        written: all of its device slots (pages, tail, spill) come from
+        that shard's slot range, so its decode row attends purely local
+        pages. A no-op binding conflict is an error."""
+        prev = self._shard_of.setdefault(seq, shard)
+        if prev != shard:
+            raise RuntimeError(f"sequence {seq} already bound to data "
+                               f"shard {prev}, cannot rebind to {shard}")
+
+    def shard_of(self, seq: int) -> int:
+        shard = self._shard_of.get(seq, 0)
+        if (self._device is not None and self._device.shards > 1
+                and seq not in self._shard_of):
+            raise RuntimeError(f"sequence {seq} not bound to a data shard "
+                               f"— call bind_seq before prefill writes")
+        return shard
 
     @property
     def device_arrays(self):
@@ -175,7 +203,7 @@ class PagedKVState:
     def _ensure_tail_slot(self, seq: int) -> int:
         slot = self._tail_slot.get(seq)
         if slot is None:
-            slot = self._device.alloc()
+            slot = self._device.alloc(self.shard_of(seq))
             self._device.zero_slot(slot)
             self._tail_slot[seq] = slot
         return slot
@@ -186,7 +214,7 @@ class PagedKVState:
         the accepted tokens actually fill the page."""
         slot = self._spill_slot.get(seq)
         if slot is None:
-            slot = self._device.alloc()
+            slot = self._device.alloc(self.shard_of(seq))
             self._device.zero_slot(slot)
             self._spill_slot[seq] = slot
         return slot
@@ -249,39 +277,57 @@ class PagedKVState:
         # column offsets past the page table (k=1 keeps the PR-4 layout)
         c_tail, c_row, c_pos, c_len = (s, s + 1, s + 2, s + 3) if k == 1 \
             else (s, s + 2, s + 3, s + 4)
+        dev = self._device
+        shards = dev.shards if dev is not None else 1
+        if shards > 1 and b % shards:
+            raise ValueError(f"decode batch of {b} rows does not split "
+                             f"over {shards} data shards — pad with -1 "
+                             f"rows (ServePlan.pad_rows)")
+        # under shard_map every control value is shard-LOCAL: shard s sees
+        # only its block of rows and its capacity_local slot rows
+        row_shard = [i * shards // b for i in range(b)] if b else []
         control = np.zeros((b, width), np.int32)
-        control[:, c_tail] = self._trash
+        if dev is not None:
+            trash = np.array([dev.local_slot(self._trash[sh])
+                              for sh in row_shard], np.int32)
+            control[:, c_tail] = trash
         control[:, c_len] = 1
         if k > 1:
-            control[:, s + 1] = self._trash                   # spill slot
+            control[:, s + 1] = control[:, c_tail]            # spill slot
             if tokens is not None:
                 control[:, s + 5:] = np.asarray(tokens, np.int32)
-        groups_by_row, touch_pids, sync_groups = [], [], []
-        for seq in seq_ids:
+        groups_by_row, touch_pids = [], []
+        sync_groups, sync_shards = [], []
+        for i, seq in enumerate(seq_ids):
             if seq < 0:
                 groups_by_row.append(None)
                 continue
+            if shards > 1:
+                self.bind_seq(seq, row_shard[i])
             groups = self._page_groups(seq, tail_slots=1 if k == 1 else 2)
             for g in groups:
                 touch_pids.extend(g)
             sync_groups.extend(groups)
+            sync_shards.extend([row_shard[i]] * len(groups))
             groups_by_row.append(groups)
         self.pool.touch_many(touch_pids)
-        if self._device is not None:
-            self._device.sync(self.pool, sync_groups)
-            slot_of = self._device.slot_of
+        if dev is not None:
+            dev.sync(self.pool, sync_groups, sync_shards)
         for i, groups in enumerate(groups_by_row):
             if groups is None:
                 continue
             seq = seq_ids[i]
             tail = self.tail_len.get(seq, 0)
-            if self._device is not None:
+            if dev is not None:
+                sh = row_shard[i]
                 for n, g in enumerate(groups):
-                    control[i, n] = slot_of[g[0]]
-                control[i, c_tail] = self._ensure_tail_slot(seq)
+                    control[i, n] = dev.local_slot(dev.slot(g[0], sh))
+                control[i, c_tail] = \
+                    dev.local_slot(self._ensure_tail_slot(seq))
                 control[i, len(groups)] = control[i, c_tail]
                 if k > 1:
-                    control[i, s + 1] = self._ensure_spill_slot(seq)
+                    control[i, s + 1] = \
+                        dev.local_slot(self._ensure_spill_slot(seq))
                     control[i, len(groups) + 1] = control[i, s + 1]
             control[i, c_row] = tail
             control[i, c_pos] = positions[i]
@@ -307,10 +353,17 @@ class PagedKVState:
         host values (one extra upload: the first step, or a continuous
         admission). Returns ``(host_tokens, device_tokens)``."""
         control = self.begin_step(seq_ids, positions)
-        cdev = jnp.asarray(control)
+        # one logical upload either way; a mesh plan pins the layout so the
+        # jit ingests each shard's rows without a gather-and-reshard
+        if self.plan is not None:
+            cdev = jax.device_put(control, self.plan.control_sharding())
+        else:
+            cdev = jnp.asarray(control)
         self.h2d += 1
         if not isinstance(tokens, jax.Array):
-            tokens = jnp.asarray(np.asarray(tokens, np.int32))
+            tokens = np.asarray(tokens, np.int32)
+            tokens = jnp.asarray(tokens) if self.plan is None else \
+                jax.device_put(tokens, self.plan.token_sharding())
             self.h2d += 1
         tok_dev, arrays = step_fn(params, self.device_arrays, tokens,
                                   cdev, key)
@@ -334,7 +387,10 @@ class PagedKVState:
         control = self.begin_step(seq_ids, positions,
                                   k=int(np.asarray(tokens_k).shape[1]),
                                   tokens=tokens_k)
-        cdev = jnp.asarray(control)
+        if self.plan is not None:
+            cdev = jax.device_put(control, self.plan.control_sharding())
+        else:
+            cdev = jnp.asarray(control)
         self.h2d += 1
         out_dev, arrays = step_fn(params, self.device_arrays, cdev, key)
         self.adopt_device_arrays(arrays)
@@ -421,7 +477,8 @@ class PagedKVState:
                 group = tuple(
                     self.pool.put(seq, k_all[l], v_all[l], layer=l)
                     for l in range(self.num_layers))
-                self._device.adopt(group, slot, self.pool)
+                self._device.adopt(group, slot, self.pool,
+                                   self._device.shard_of_slot(slot))
                 spill = self._spill_slot.pop(seq, None)
                 if spill is not None:
                     # rows past the boundary were scattered here already
@@ -452,6 +509,7 @@ class PagedKVState:
             for pid, _layer in destroyed:
                 self._device.release_pid(pid)
         self.tail_len.pop(seq, None)
+        self._shard_of.pop(seq, None)
         for key in [k for k in self.tail_data if k[0] == seq]:
             self.tail_data.pop(key)
         for slot in (self._tail_slot.pop(seq, None),
@@ -623,9 +681,45 @@ def paged_decode_step(model, params, tokens, state: PagedKVState, seq_ids,
 # ---------------------------------------------------------------------------
 # Fused decode step: the whole token in one jitted, device-resident graph
 # ---------------------------------------------------------------------------
+def _mlp_tail_tp(cfg, kind, p, x, tp):
+    """`mlp_tail` with the tensor-parallel reduction seam: a dense MLP's
+    up/down projections are ffn-sharded over the mesh's model axis, so the
+    down-proj emits a partial sum that one psum completes. MoE subtrees
+    replicate (routing is local, every shard runs the full expert stack)
+    and MLP_NONE layers pass through — both fall back to plain mlp_tail."""
+    from repro.models.layers import mlp_apply
+    _mixer, mlp = kind
+    if tp <= 1 or mlp != MLP_DENSE:
+        x, _ = mlp_tail(cfg, kind, p, x)
+        return x
+    h = rms_norm(x, p["norm2"])
+    y = jax.lax.psum(mlp_apply(cfg, p["mlp"], h), "model")
+    return x + y
+
+
+def _wrap_step(step, model, plan, *, control_spec, out_spec):
+    """jit the step; under a mesh plan, shard_map it first: params by the
+    serve partition rules, pool arrays by the kernel's head-sharded
+    calling convention, decode rows over "data". check_rep=False because
+    the body's donated scatters + psum seams are not replication-safe to
+    infer; correctness is asserted by the sharded-vs-single-device
+    equivalence tests."""
+    if plan is None:
+        return jax.jit(step, donate_argnums=(1,))
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    pool_specs = plan.pool_specs()
+    mapped = shard_map(
+        step, mesh=plan.mesh,
+        in_specs=(plan.param_specs(model), pool_specs) + control_spec
+        + (P(),),
+        out_specs=(out_spec, pool_specs), check_rep=False)
+    return jax.jit(mapped, donate_argnums=(1,))
+
+
 def build_fused_step(model, num_slots: int, *, k: int = 1,
                      backend: str = "auto", greedy: bool = True,
-                     temperature: float = 1.0):
+                     temperature: float = 1.0, plan=None):
     """Build the jitted fused decode step.
 
     ``k == 1`` — the plain PR-4 step. Returned callable:
@@ -656,15 +750,26 @@ def build_fused_step(model, num_slots: int, *, k: int = 1,
     single download. Greedy verification emits exactly the tokens the
     k=1 step would; sampling draws each position from its true
     conditional (drafts are deterministic), so the distribution is exact
-    though the stream consumes keys differently than the k=1 path."""
+    though the stream consumes keys differently than the k=1 path.
+
+    ``plan`` (a `serve.sharding.ServePlan`) runs the identical step body
+    under shard_map: decode rows shard over the mesh's "data" axis (each
+    shard's rows attend only its own page-pool slice — the control block
+    carries shard-local slot ids), attention/MLP heads shard over "model"
+    with psum seams after the wo- and down-projections, and sampling
+    folds the data-shard index into the key so concurrent rows draw
+    independent noise. ``plan=None`` is the exact single-device graph."""
     cfg = model.cfg
     gs = len(model.group_kinds)
     s = num_slots
+    tp = plan.tp if plan is not None else 1
+    dp = plan.dp if plan is not None else 1
     if k < 1:
         raise ValueError(f"k must be >= 1, got {k}")
     if k > 1:
         return _build_spec_step(model, num_slots, k, backend=backend,
-                                greedy=greedy, temperature=temperature)
+                                greedy=greedy, temperature=temperature,
+                                plan=plan)
 
     def step(params, arrays, tokens, control, key):
         kf, vf, kq, vq, ks, vs = arrays
@@ -690,9 +795,11 @@ def build_fused_step(model, num_slots: int, *, k: int = 1,
             y = api.run("paged_attention", q[:, 0], kf, vf, kq, vq, ks, vs,
                         table, lengths, jnp.asarray(layer, jnp.int32),
                         backend=backend)
-            y = jnp.einsum("bhk,hkd->bd", y.astype(x.dtype), ap["wo"])[:, None]
-            x = x + y
-            x, _ = mlp_tail(cfg, kind, p, x)
+            y = jnp.einsum("bhk,hkd->bd", y.astype(x.dtype), ap["wo"])
+            if tp > 1:          # complete the head-sharded partial sum
+                y = jax.lax.psum(y, "model")
+            x = x + y[:, None]
+            x = _mlp_tail_tp(cfg, kind, p, x, tp)
             return x, kf, vf
 
         def group_body(carry, xs):
@@ -715,20 +822,28 @@ def build_fused_step(model, num_slots: int, *, k: int = 1,
         if greedy:
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         else:
+            if dp > 1:      # independent noise per data shard's rows
+                key = jax.random.fold_in(key, jax.lax.axis_index("data"))
             tok = jax.random.categorical(key, logits / temperature,
                                          axis=-1).astype(jnp.int32)
         return tok, (kf, vf, kq, vq, ks, vs)
 
-    return jax.jit(step, donate_argnums=(1,))
+    from jax.sharding import PartitionSpec as P
+    return _wrap_step(step, model, plan,
+                      control_spec=(P("data"), P("data", None)),
+                      out_spec=P("data"))
 
 
 def _build_spec_step(model, num_slots: int, k: int, *, backend: str = "auto",
-                     greedy: bool = True, temperature: float = 1.0):
+                     greedy: bool = True, temperature: float = 1.0,
+                     plan=None):
     """The k-row speculative verify graph behind `build_fused_step(k>1)`;
     see that docstring for the contract."""
     cfg = model.cfg
     gs = len(model.group_kinds)
     s = num_slots
+    tp = plan.tp if plan is not None else 1
+    dp = plan.dp if plan is not None else 1
 
     def step(params, arrays, control, key):
         kf, vf, kq, vq, ks, vs = arrays
@@ -769,8 +884,10 @@ def _build_spec_step(model, num_slots: int, k: int, *, backend: str = "auto",
                         table, lengths, jnp.asarray(layer, jnp.int32),
                         backend=backend)
             y = jnp.einsum("bshk,hkd->bsd", y.astype(x.dtype), ap["wo"])
+            if tp > 1:          # complete the head-sharded partial sum
+                y = jax.lax.psum(y, "model")
             x = x + y
-            x, _ = mlp_tail(cfg, kind, p, x)
+            x = _mlp_tail_tp(cfg, kind, p, x, tp)
             return x, kf, vf
 
         def group_body(carry, xs):
@@ -793,6 +910,8 @@ def _build_spec_step(model, num_slots: int, k: int, *, backend: str = "auto",
         if greedy:
             samp = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         else:
+            if dp > 1:      # independent noise per data shard's rows
+                key = jax.random.fold_in(key, jax.lax.axis_index("data"))
             samp = jax.random.categorical(key, logits / temperature,
                                           axis=-1).astype(jnp.int32)
         # accept rule: draft j (input column j, j >= 1) survives while it
@@ -804,4 +923,7 @@ def _build_spec_step(model, num_slots: int, k: int, *, backend: str = "auto",
         verdict = jnp.concatenate([samp, n_acc[:, None]], axis=1)
         return verdict, (kf, vf, kq, vq, ks, vs)
 
-    return jax.jit(step, donate_argnums=(1,))
+    from jax.sharding import PartitionSpec as P
+    return _wrap_step(step, model, plan,
+                      control_spec=(P("data", None),),
+                      out_spec=P("data", None))

@@ -100,7 +100,8 @@ class Scheduler:
     """Waiting queue + admission gate over a `PagedKVPool`."""
 
     def __init__(self, pool, num_layers: int, max_active: int = 4,
-                 default_speculate: int = 0):
+                 default_speculate: int = 0, data_shards: int = 1,
+                 rows_per_shard: Optional[int] = None):
         if max_active < 1:
             raise ValueError(f"max_active must be >= 1, got {max_active}")
         self.pool = pool
@@ -109,6 +110,17 @@ class Scheduler:
         # engine-level speculation default, used to resolve each request's
         # effective k for the admission budget (Request.speculate wins)
         self.default_speculate = default_speculate
+        # mesh-sharded serving: each data shard owns an equal block of
+        # decode rows AND an equal share of the page budget (its device
+        # pool slice holds only its own rows' pages), so admission gates
+        # per shard: a request admits into the least-loaded shard that
+        # has a free row and headroom
+        self.data_shards = max(1, data_shards)
+        self.rows_per_shard = rows_per_shard if rows_per_shard is not None \
+            else max_active
+        self._shard_active = [0] * self.data_shards
+        self._shard_reserved = [0] * self.data_shards
+        self._shard_of: dict[int, int] = {}    # id(request) -> data shard
         self.waiting: deque[Request] = deque()
         self._reserved: dict[int, int] = {}    # id(request) -> page need
         # pages already live when this serve call started (e.g. left by
@@ -123,22 +135,51 @@ class Scheduler:
             return None
         return self.pool.capacity_pages - self._base_pages
 
+    def _shard_budget(self):
+        """Per-shard page budget: the pool splits its capacity equally
+        over the data shards (each shard's slice holds only its rows'
+        pages), so admission must fit the OWNING shard's share."""
+        budget = self._budget()
+        return None if budget is None else budget // self.data_shards
+
+    def _pick_shard(self, need: int) -> Optional[int]:
+        """Least-reserved data shard with a free row and page headroom;
+        None when no shard fits right now."""
+        budget = self._shard_budget()
+        best = None
+        for s in range(self.data_shards):
+            if self._shard_active[s] >= self.rows_per_shard:
+                continue
+            if budget is not None and \
+                    self._shard_reserved[s] + need > budget:
+                continue
+            if best is None or \
+                    self._shard_reserved[s] < self._shard_reserved[best]:
+                best = s
+        return best
+
+    def assigned_shard(self, req: Request) -> int:
+        """Data shard `admit()` placed this request on (0 unsharded)."""
+        return self._shard_of.get(id(req), 0)
+
     def submit(self, req: Request) -> Admission:
         """Queue a request. A request whose worst case can never fit the
         pool budget is rejected immediately (before any admitted work)
         with a structured verdict — it is NOT queued, and nothing else in
         the workload is affected."""
-        budget = self._budget()
+        budget = self._shard_budget()
         need = self.pages_needed(req)
         if budget is not None and need > budget:
+            per_shard = f" per data shard (x{self.data_shards})" \
+                if self.data_shards > 1 else ""
             return Admission(
                 False, reason="pool_capacity", pages_needed=need,
                 pages_budget=budget,
                 detail=f"request needs {need} pages worst-case but only "
                        f"{budget} of the pool's capacity_pages="
-                       f"{self.pool.capacity_pages} budget are available "
-                       f"({self._base_pages} pages already live) — it can "
-                       f"never be admitted")
+                       f"{self.pool.capacity_pages} budget are available"
+                       f"{per_shard} ({self._base_pages} pages already "
+                       f"live) — it can never be admitted")
         self.waiting.append(req)
         return Admission(True, pages_needed=need, pages_budget=budget)
 
@@ -170,24 +211,32 @@ class Scheduler:
         return self.num_layers * pages
 
     def admit(self) -> list[Request]:
-        """Pop every waiting request that fits right now (FIFO prefix)."""
+        """Pop every waiting request that fits right now (FIFO prefix):
+        a free decode row under ``max_active`` AND a data shard with row
+        + page headroom (the unsharded scheduler is the 1-shard case)."""
         out: list[Request] = []
-        budget = self._budget()
         while self.waiting and self.n_active < self.max_active:
             req = self.waiting[0]
             need = self.pages_needed(req)
-            reserved = sum(self._reserved.values())
-            if budget is not None and reserved + need > budget:
+            shard = self._pick_shard(need)
+            if shard is None:
                 break
             self.waiting.popleft()
             self._reserved[id(req)] = need
+            self._shard_of[id(req)] = shard
+            self._shard_active[shard] += 1
+            self._shard_reserved[shard] += need
             out.append(req)
             self.admitted += 1
         self.peak_active = max(self.peak_active, self.n_active)
         return out
 
     def retire(self, req: Request):
-        self._reserved.pop(id(req), None)
+        need = self._reserved.pop(id(req), None)
+        shard = self._shard_of.pop(id(req), None)
+        if need is not None and shard is not None:
+            self._shard_active[shard] -= 1
+            self._shard_reserved[shard] -= need
 
     @property
     def done(self) -> bool:

@@ -38,6 +38,20 @@ DEFAULT_RULES: dict = {
     "capacity": [],
 }
 
+# Serving-time rules (the serve layer's `ServePlan`): inference holds no
+# optimizer state worth FSDP-sharding, and the fused decode step cannot
+# afford an embedding all-gather per token — embeddings, lm_head and norms
+# replicate, only head/ffn dims are tensor-parallel over "model", and the
+# decode batch rows ride the "data" axis. "vocab" replicates so every
+# shard sees full logits (greedy argmax and categorical sampling need no
+# collective); "experts" replicates because MoE top-k routing is local
+# per token and must score every expert.
+SERVE_RULES: dict = {**DEFAULT_RULES,
+                     "embed": [],
+                     "vocab": [],
+                     "experts": [],
+                     "batch": [("data",)]}
+
 # axes resolved before others (so e.g. kv_heads grabs "model" before kv_seq)
 PRIORITY = [
     "vocab", "heads", "kv_heads", "ffn", "experts", "ssm_inner", "ssm_heads",

@@ -1,0 +1,156 @@
+"""serve/metrics edge cases: empty series, one-sample percentiles, and
+the speculative run-splitting rule for per-token latency — driven by an
+injectable fake clock so every expected latency is exact."""
+import pytest
+
+from repro.serve.metrics import (MetricsRegistry, RequestMetrics,
+                                 percentile, toks_per_s, us_per)
+
+
+class FakeClock:
+    """Deterministic monotonic clock: `advance` then read."""
+
+    def __init__(self):
+        self.now = 0.0
+
+    def __call__(self):
+        return self.now
+
+    def advance(self, dt):
+        self.now += dt
+        return self.now
+
+
+# ---------------------------------------------------------------------------
+# percentile
+# ---------------------------------------------------------------------------
+def test_percentile_empty_is_none():
+    assert percentile([], 50) is None
+    assert percentile([], 99) is None
+    assert percentile([None, None], 99) is None     # all-None filters empty
+
+
+def test_percentile_single_sample_p50_equals_p99():
+    assert percentile([0.25], 50) == 0.25
+    assert percentile([0.25], 99) == 0.25
+    assert percentile([None, 0.25], 99) == 0.25
+
+
+def test_unit_helpers_guard_zero():
+    assert us_per(1.0, 0) == 1e6          # max(n, 1): no ZeroDivisionError
+    assert toks_per_s(0, 0.0) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# RequestMetrics lifecycle with a fake clock
+# ---------------------------------------------------------------------------
+def test_first_delivery_gap_is_ttft_not_itl():
+    """The first delivery's gap is the TTFT; a 1-token first delivery
+    contributes ZERO per-token samples (n_gaps = n - 1)."""
+    clk = FakeClock()
+    m = RequestMetrics(clk)
+    clk.advance(0.5)
+    m.on_admit()
+    clk.advance(1.5)
+    m.on_tokens(1)
+    assert m.queue_wait_s == 0.5
+    assert m.ttft_s == 2.0
+    assert m.itl_s == []
+    assert m.tpot_s is None
+
+
+def test_first_delivery_speculative_run_splits_remainder():
+    """A first delivery of n > 1 tokens (accepted speculative run)
+    contributes n - 1 samples of gap / n."""
+    clk = FakeClock()
+    m = RequestMetrics(clk)
+    clk.advance(3.0)
+    m.on_tokens(4)
+    assert m.ttft_s == 3.0
+    assert m.itl_s == pytest.approx([0.75, 0.75, 0.75])
+
+
+def test_later_delivery_n1_is_one_full_gap():
+    """Steady-state plain decode: each later 1-token delivery is one
+    sample of the whole gap (n_accept=1 speculative steps look identical
+    — no free speedup from a rejected draft)."""
+    clk = FakeClock()
+    m = RequestMetrics(clk)
+    clk.advance(1.0)
+    m.on_tokens(1)                        # TTFT, no itl
+    clk.advance(0.2)
+    m.on_tokens(1)
+    clk.advance(0.4)
+    m.on_tokens(1)
+    assert m.itl_s == pytest.approx([0.2, 0.4])
+    assert m.tpot_s == pytest.approx(0.3)
+
+
+def test_later_delivery_speculative_run_splits_gap():
+    """An accepted run of n tokens after the first delivery contributes n
+    samples of gap / n — speculation lowers per-token latency rather than
+    producing fewer, larger gaps."""
+    clk = FakeClock()
+    m = RequestMetrics(clk)
+    clk.advance(1.0)
+    m.on_tokens(1)
+    clk.advance(0.6)
+    m.on_tokens(3)
+    assert m.itl_s == pytest.approx([0.2, 0.2, 0.2])
+    assert m.tokens == 4
+
+
+def test_finish_trusts_engine_token_count():
+    clk = FakeClock()
+    m = RequestMetrics(clk)
+    clk.advance(1.0)
+    m.on_tokens(5)
+    m.on_finish(tokens=4, accept_rate=0.5)    # eos clamp dropped one
+    assert m.tokens == 4
+    assert m.accept_rate == 0.5
+    assert m.status == "done"
+
+
+# ---------------------------------------------------------------------------
+# MetricsRegistry summaries
+# ---------------------------------------------------------------------------
+def test_summary_empty_registry():
+    s = MetricsRegistry(FakeClock()).summary()
+    assert s["n_requests"] == 0 and s["tokens"] == 0
+    assert s["throughput_tok_s"] is None
+    for key in ("ttft", "tpot", "queue_wait"):
+        assert s[key] == {"p50_ms": None, "p99_ms": None, "mean_ms": None}
+    assert s["accept_rate"] is None
+
+
+def test_summary_all_rejected_has_no_latencies():
+    clk = FakeClock()
+    reg = MetricsRegistry(clk)
+    reg.reject("queue_full")
+    reg.reject("pool_capacity")
+    s = reg.summary()
+    assert s["n_rejected"] == 2 and s["n_done"] == 0
+    assert s["wall_s"] == 0.0 and s["throughput_tok_s"] is None
+    assert s["ttft"]["p99_ms"] is None
+    assert reg.requests[0].reject_reason == "queue_full"
+
+
+def test_summary_single_request_p50_equals_p99():
+    clk = FakeClock()
+    reg = MetricsRegistry(clk)
+    m = reg.submit()
+    clk.advance(0.5)
+    m.on_admit()
+    clk.advance(0.5)
+    m.on_tokens(1)
+    clk.advance(0.1)
+    m.on_tokens(1)
+    m.on_finish(tokens=2)
+    s = reg.summary()
+    assert s["ttft"]["p50_ms"] == s["ttft"]["p99_ms"] \
+        == pytest.approx(1000.0)
+    assert s["tpot"]["p50_ms"] == s["tpot"]["p99_ms"] \
+        == pytest.approx(100.0)
+    assert s["queue_wait"]["mean_ms"] == pytest.approx(500.0)
+    assert s["tokens"] == 2
+    assert s["throughput_tok_s"] == pytest.approx(2 / 1.1)
