@@ -34,7 +34,8 @@ RESULT_PATH = Path(__file__).resolve().parent.parent / "BENCH_traffic.json"
 MAX_RUNS = 50          # history entries kept in BENCH_traffic.json
 
 
-def _bench_mixes(mix_names=("uniform", "prefix_heavy", "speculative")):
+def _bench_mixes(mix_names=("uniform", "prefix_heavy", "speculative",
+                            "chunked")):
     params = None
     results = {}
     mesh = mesh_from_env()        # REPRO_SERVE_MESH=DxM shards the engines
@@ -88,13 +89,24 @@ def run():
         rows.append((f"traffic.{name}.accounting", 0.0,
                      f"done{r['n_done']}_cancel{r['n_cancelled']}"
                      f"_shared{r['pool_shared_puts']}"
+                     f"_adopted{r['pool_adopted_pages']}"
                      f"_{'clean' if ok else 'LEAKED'}"))
+        if r.get("prefix_hit_rate") is not None:
+            p99 = r.get("decode_p99_during_prefill_ms")
+            rows.append((f"traffic.{name}.prefix_cache",
+                         r["prefix_hit_rate"],
+                         f"hit{r['prefix_hit_rate']:.2f}_decodep99adm"
+                         f"{p99:.2f}ms" if p99 is not None else
+                         f"hit{r['prefix_hit_rate']:.2f}"))
         if not ok:
             raise AssertionError(
                 f"traffic mix {name}: pages leaked or requests lost "
                 f"({json.dumps({k: r[k] for k in ('n_done', 'n_cancelled', 'n_rejected', 'n_trace', 'pool_live_pages_end')})})")
-    # the prefix-heavy mix must actually exercise the prefix cache
-    if results.get("prefix_heavy", {}).get("pool_shared_puts", 0) <= 0:
+    # the prefix-heavy mix must actually exercise prefix reuse, one way
+    # or the other: dedup'd hashed puts or radix adoption
+    ph = results.get("prefix_heavy", {})
+    if ph and ph.get("pool_shared_puts", 0) + \
+            ph.get("pool_adopted_pages", 0) <= 0:
         raise AssertionError("prefix_heavy mix shared no pages")
     return rows
 

@@ -89,6 +89,16 @@ def main():
                          "--xla_force_host_platform_device_count=N). "
                          "Default: the host mesh (single device -> the "
                          "unsharded stack)")
+    ap.add_argument("--no-chunked-prefill", action="store_true",
+                    help="prefill prompts monolithically at admission "
+                         "instead of streaming page-sized chunks through "
+                         "the fused decode steps")
+    ap.add_argument("--prefill-budget", type=int, default=1, metavar="N",
+                    help="chunk rows that may ride one fused decode step "
+                         "(default 1)")
+    ap.add_argument("--no-radix", action="store_true",
+                    help="disable the radix prefix cache (no cross-"
+                         "request prompt-page adoption or pinning)")
     ap.add_argument("--knee-cache", default=None, metavar="PATH",
                     help="JSON cache of backend='auto' knee points (e.g. "
                          "<checkpoint-dir>/knee_cache.json): loaded at "
@@ -136,7 +146,11 @@ def main():
             for _ in range(args.batch)]
     t0 = time.time()
     if args.continuous:
-        outs = eng.serve(reqs, max_active=args.max_active)
+        outs = eng.serve(reqs, max_active=args.max_active,
+                         chunked_prefill=False
+                         if args.no_chunked_prefill else None,
+                         prefill_budget=args.prefill_budget,
+                         radix=False if args.no_radix else None)
     else:
         outs = eng.generate(reqs)
     dt = time.time() - t0
@@ -186,7 +200,11 @@ def _run_frontend(args, cfg, eng, pool):
     if args.trace:
         summary = run_trace(eng, parse_spec(args.trace),
                             max_active=args.max_active,
-                            max_queue=args.max_queue)
+                            max_queue=args.max_queue,
+                            chunked_prefill=False
+                            if args.no_chunked_prefill else None,
+                            prefill_budget=args.prefill_budget,
+                            radix=False if args.no_radix else None)
         _print_summary(summary)
         print(f"kv pool: {pool.stats} live_pages={len(pool.pages)}")
         return
@@ -200,7 +218,10 @@ def _run_frontend(args, cfg, eng, pool):
         async with AsyncServeFrontend(
                 eng, capacity=args.prompt_len + args.new_tokens,
                 max_active=args.max_active, max_queue=args.max_queue,
-                speculate=args.speculate or None) as front:
+                speculate=args.speculate or None,
+                chunked_prefill=False if args.no_chunked_prefill else None,
+                prefill_budget=args.prefill_budget,
+                radix=False if args.no_radix else None) as front:
             handles = [await front.submit(r) for r in reqs]
             outs = [await h.result() for h in handles]
             return front.metrics.summary(), outs

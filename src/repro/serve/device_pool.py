@@ -231,8 +231,16 @@ class DevicePagePool:
         filled. Per layer: a fast placement's device cell already holds
         the full float rows, so it is marked synced; a slow placement
         stays dirty and the next sync rewrites the cell in place (int8 +
-        zeroed float)."""
-        self.slot_of[self._key(group[0], shard)] = slot
+        zeroed float). A group already mapped (the fill's hashed `put`
+        deduped onto an existing page — chunked prefill rebuilding a
+        cached prompt page) keeps its synced slot and the incoming tail
+        slot is recycled instead of leaking."""
+        key = self._key(group[0], shard)
+        prev = self.slot_of.get(key)
+        if prev is not None and prev != slot:
+            self.release_slot(slot)
+            return
+        self.slot_of[key] = slot
         for pid in group:
             page = pool.pages[pid]
             if page.tier == "fast":

@@ -45,6 +45,7 @@ from repro.serve.kvcache import PagedKVPool, pad_caches
 from repro.serve.paged_decode import (MODES, PagedKVState, build_fused_step,
                                       extract_prefill_pages,
                                       paged_decode_step, supports_paged)
+from repro.serve.prefix_cache import RadixPrefixCache
 from repro.serve.scheduler import (Admission,  # noqa: F401 (re-export)
                                    Request, Scheduler, effective_speculate,
                                    prefix_page_hashes)
@@ -54,15 +55,23 @@ from repro.serve.steps import prefill_all_positions
 
 
 class _Active:
-    """One occupied decode row of the continuous batch."""
+    """One occupied decode row of the continuous batch. A chunked-prefill
+    row starts with ``pending`` suffix tokens still to stream into the
+    KV pool (``prefilled`` counts tokens already resident, adopted prefix
+    included) and an empty ``outs`` — it joins decode once the final
+    chunk produces its first token."""
 
-    __slots__ = ("req", "seq", "plen", "outs", "eff_k", "stats")
+    __slots__ = ("req", "seq", "plen", "outs", "eff_k", "stats",
+                 "pending", "prefilled", "hashes")
 
     def __init__(self, req: Request, seq: int, plen: int, outs: list,
                  eff_k: int = 1):
         self.req, self.seq, self.plen, self.outs = req, seq, plen, outs
         self.eff_k = eff_k
         self.stats = SpecStats()
+        self.pending: Optional[np.ndarray] = None
+        self.prefilled = 0
+        self.hashes: Optional[list] = None
 
     @property
     def pos(self) -> int:
@@ -70,7 +79,13 @@ class _Active:
         return self.plen + len(self.outs) - 1
 
     @property
+    def prefilling(self) -> bool:
+        return self.pending is not None and len(self.pending) > 0
+
+    @property
     def finished(self) -> bool:
+        if not self.outs:               # still prefilling: no token yet
+            return False
         return (len(self.outs) >= self.req.max_new_tokens
                 or self.outs[-1] == self.req.eos_token)
 
@@ -210,7 +225,18 @@ class ServeEngine:
         (`SpecStats`). Proposes drafts, runs the widened fused step, and
         advances the state by exactly the per-row kept counts — the
         accepted prefix + bonus token, clamped by limit/eos; everything
-        else rolls back. Returns the per-row kept-token lists."""
+        else rolls back. Returns the per-row kept-token lists.
+
+        A row may instead carry a prefill CHUNK (``{"seq", "pos",
+        "chunk", "final"}``): up to k TRUE prompt tokens fed through the
+        same verify graph — the causal row mask and in-graph accept rule
+        need no changes, the row simply advances by the full chunk length
+        unconditionally (true tokens are always "accepted"). Columns past
+        the chunk repeat its last token; their K/V rows are phantom
+        (`end_step` overwrites them). A ``final`` chunk's request keeps
+        exactly one token — the argmax/sample after the last prompt
+        token, i.e. the request's first generated token — read from
+        ``verdict[i, m - 1]``; earlier chunks keep nothing."""
         b = len(rows)
         toks = np.zeros((b, k), np.int32)
         seq_ids = [-1] * b
@@ -221,6 +247,13 @@ class ServeEngine:
                 continue
             seq_ids[i] = r["seq"]
             pos[i] = r["pos"]
+            chunk = r.get("chunk")
+            if chunk is not None:
+                m = len(chunk)
+                toks[i, :m] = chunk
+                if m < k:               # pad: repeat the last true token
+                    toks[i, m:] = chunk[-1]
+                continue
             hist = r["history"]
             toks[i, 0] = hist[-1]
             n_d = min(r["eff_k"], k) - 1
@@ -236,6 +269,12 @@ class ServeEngine:
         advanced = [0] * b
         for i, r in enumerate(rows):
             if r is None:
+                continue
+            chunk = r.get("chunk")
+            if chunk is not None:
+                m = len(chunk)
+                kept[i] = [int(verdict[i, m - 1])] if r["final"] else []
+                advanced[i] = m
                 continue
             # padding columns never count as accepted (a non-speculative
             # row always keeps exactly its 1 bonus token)
@@ -281,7 +320,7 @@ class ServeEngine:
         for i, r in enumerate(requests):
             prompts[i, plen - len(r.prompt):] = r.prompt   # left-pad
 
-        t0 = time.time()
+        t0 = time.perf_counter()
         logits, caches = self._prefill(self.params,
                                        {"tokens": jnp.asarray(prompts)})
         paged = self.kv_pool is not None
@@ -310,7 +349,7 @@ class ServeEngine:
             extract_prefill_pages(self.model, caches, state, seq_ids)
         else:
             caches = pad_caches(self.model, caches, cap, plen)
-        self.stats["prefill_s"] += time.time() - t0
+        self.stats["prefill_s"] += time.perf_counter() - t0
 
         key = jax.random.PRNGKey(seed)
         outs = [[] for _ in range(b)]
@@ -322,7 +361,7 @@ class ServeEngine:
             if paged else None
         fused = paged and self.decode_mode == "fused"
         spec_stats = [SpecStats() for _ in requests]
-        t0 = time.time()
+        t0 = time.perf_counter()
         if spec_k > 1:
             self._generate_spec(requests, eff_ks, spec_k, state, seq_ids,
                                 outs, spec_stats, plen, greedy, temperature,
@@ -368,7 +407,7 @@ class ServeEngine:
                 for i in range(b):
                     outs[i].append(int(tok_host[i]))
                 self.stats["decode_steps"] += 1
-        self.stats["decode_s"] += time.time() - t0
+        self.stats["decode_s"] += time.perf_counter() - t0
         if paged:
             # counter snapshot only — holding the state itself would pin
             # the batch's device pool arrays for the engine's lifetime
@@ -454,7 +493,10 @@ class ServeEngine:
     # ------------------------------------------------------------------
     def serve(self, requests: list[Request], max_active: int = 4,
               greedy: bool = True, temperature: float = 1.0, seed: int = 0,
-              prefix_cache: bool = True, metrics=None) -> list[np.ndarray]:
+              prefix_cache: bool = True, metrics=None,
+              chunked_prefill: Optional[bool] = None,
+              prefill_budget: int = 1,
+              radix: Optional[bool] = None) -> list[np.ndarray]:
         """Continuous-batching decode: requests join free rows mid-flight
         and retire at their own lengths; finished requests' pages are
         freed. Returns outputs in submission order. Greedy outputs match
@@ -481,7 +523,9 @@ class ServeEngine:
         session = ServeSession(self, capacity=cap, max_active=max_active,
                                speculate=spec_k, greedy=greedy,
                                temperature=temperature, seed=seed,
-                               prefix_cache=prefix_cache, metrics=metrics)
+                               prefix_cache=prefix_cache, metrics=metrics,
+                               chunked_prefill=chunked_prefill,
+                               prefill_budget=prefill_budget, radix=radix)
         self.last_rejections = []
         for r in requests:
             verdict = session.submit(r)
@@ -490,8 +534,10 @@ class ServeEngine:
             session.step()
         self.last_peak_active = session.sched.peak_active
         self.last_transfers = session.state.transfer_counts()
+        self.last_prefix_hit_rate = session.prefix_hit_rate
         self.last_request_stats = [session.request_stats(r)
                                    for r in requests]
+        session.close()    # drop radix pins: the pool tracks live work
         self._maybe_save_knees()
         return [session.result(r) for r in requests]
 
@@ -559,7 +605,9 @@ class ServeSession:
     def __init__(self, engine: ServeEngine, capacity: int,
                  max_active: int = 4, speculate: Optional[int] = None,
                  greedy: bool = True, temperature: float = 1.0,
-                 seed: int = 0, prefix_cache: bool = True, metrics=None):
+                 seed: int = 0, prefix_cache: bool = True, metrics=None,
+                 chunked_prefill: Optional[bool] = None,
+                 prefill_budget: int = 1, radix: Optional[bool] = None):
         engine._require_paged()
         k = max(1, engine.speculate if speculate is None else int(speculate))
         engine._check_spec_width(k)
@@ -571,6 +619,23 @@ class ServeSession:
         self.greedy, self.temperature = greedy, float(temperature)
         self.prefix_cache = prefix_cache
         self.metrics = metrics
+        fused = engine.decode_mode == "fused"
+        # chunked prefill streams prompt suffixes through the widened
+        # fused verify graph in page-sized chunks riding the decode batch
+        # (None -> on for the fused mode); eager/numpy keep the monolithic
+        # reference prefill
+        if chunked_prefill and not fused:
+            raise ValueError(
+                f"chunked prefill rides the fused verify graph; "
+                f"decode_mode={engine.decode_mode!r} stays monolithic")
+        self.chunked = fused if chunked_prefill is None \
+            else bool(chunked_prefill)
+        self.prefill_budget = max(1, int(prefill_budget))
+        # radix prefix tree: pins completed prompts' pages so later
+        # requests adopt cached prefixes (adoption itself needs the
+        # chunked path; with chunked off the tree still pins/credits and
+        # the pool dedups by content hash)
+        self.radix = (bool(prefix_cache) if radix is None else bool(radix))
         plan = engine.plan
         # under a mesh plan the decode batch carries an equal block of
         # rows per data shard; admission fills rows (and page budget)
@@ -578,13 +643,28 @@ class ServeSession:
         n_rows = plan.pad_rows(max_active) if plan is not None \
             else max_active
         dp = plan.dp if plan is not None else 1
+        self.prefix_index = RadixPrefixCache(
+            self.pool, engine.cfg.num_layers, shards=dp,
+            on_release=self._release_pinned) if self.radix else None
         self.sched = Scheduler(self.pool, engine.cfg.num_layers,
                                max_active=max_active,
                                default_speculate=engine.speculate,
                                data_shards=dp,
-                               rows_per_shard=n_rows // dp)
-        self.state = engine._new_state(self.capacity, batch_hint=n_rows,
-                                       tail_slots=2 if k > 1 else 1)
+                               rows_per_shard=n_rows // dp,
+                               prefix_index=self.prefix_index)
+        # a chunk-fill step reuses the spill-slot protocol (decode rows
+        # riding a wide step may cross their page boundary), so chunked
+        # sessions need the second tail slot even at k == 1
+        self.state = engine._new_state(
+            self.capacity, batch_hint=n_rows,
+            tail_slots=2 if (k > 1 or self.chunked) else 1)
+        # prefix-cache hit accounting (pages adopted / adoptable pages)
+        # and per-step wall time of decode work that shared a step with a
+        # prefill chunk — bench_traffic derives hit rate and decode-p99-
+        # during-admission from these
+        self.pages_adopted_total = 0
+        self.pages_needed_total = 0
+        self.prefill_step_decode_ms: list[float] = []
         self._rows: list[Optional[_Active]] = [None] * n_rows
         self._recs: dict[int, _SessionRec] = {}
         self._key = jax.random.PRNGKey(seed)
@@ -620,7 +700,7 @@ class ServeSession:
             raise ValueError("Request object already submitted to this "
                              "session")
         t = self.pool.page_tokens
-        tail = 2 if self.spec_k > 1 else 1
+        tail = 2 if (self.spec_k > 1 or self.chunked) else 1
         need_tokens = len(req.prompt) + req.max_new_tokens
         pages = -(-need_tokens // t)
         eff_k = effective_speculate(req, self.engine.speculate)
@@ -701,6 +781,26 @@ class ServeSession:
     def transfer_counts(self) -> tuple[int, int]:
         return self.state.transfer_counts()
 
+    def _release_pinned(self, pid: int):
+        # radix-tree unpin destroyed a pool page: recycle its device slot
+        self.state.release_page(pid)
+
+    @property
+    def prefix_hit_rate(self) -> Optional[float]:
+        """Pages adopted / adoptable prompt pages across the session's
+        chunked admissions; None before any chunked admission."""
+        if self.pages_needed_total == 0:
+            return None
+        return self.pages_adopted_total / self.pages_needed_total
+
+    def close(self):
+        """Release the session's cross-request state: unpin every radix
+        tree node (pages whose last holder was the tree are destroyed and
+        their device slots recycled), so a drained, closed session leaves
+        ``pool.live_pages == 0``."""
+        if self.prefix_index is not None:
+            self.prefix_index.clear()
+
     # -- the step -----------------------------------------------------------
     def _finish(self, rec: _SessionRec):
         act = rec.active
@@ -717,12 +817,29 @@ class ServeSession:
             rec.metrics.on_finish(len(rec.result),
                                   accept_rate=d.get("accept_rate"))
 
+    def _reject_late(self, events: list):
+        """Surface scheduler late rejections (queue head that can never
+        fit even after full pin eviction): the request is accounted like
+        a submit-time rejection, plus a terminal empty event so streaming
+        consumers finalize it."""
+        for req, verdict in self.sched.late_rejections:
+            rec = self._recs[id(req)]
+            rec.admission = verdict
+            rec.status = "rejected"
+            rec.stats = {"rejected": verdict.reason, "tokens": 0,
+                         **verdict.as_dict()}
+            if rec.metrics is not None:
+                rec.metrics.on_reject(verdict.reason)
+            events.append(StreamEvent(req, [], done=True))
+        self.sched.late_rejections.clear()
+
     def _admit(self, events: list):
         eng = self.engine
         while True:
             # loop: an admitted request finishing at its very first token
             # frees its row + reservation, unblocking the queue head again
             batch = self.sched.admit()
+            self._reject_late(events)
             if not batch:
                 return
             for req in batch:
@@ -740,7 +857,36 @@ class ServeSession:
                 self.state.bind_seq(seq, shard)
                 toks = np.asarray(req.prompt, np.int32)
                 plen = len(toks)
-                t0 = time.time()
+                act = _Active(req, seq, plen, [],
+                              eff_k=effective_speculate(req, eng.speculate))
+                if self.chunked:
+                    # adopt the radix-cached prefix (the exact pages the
+                    # admission gate credited) and queue the suffix for
+                    # page-sized chunk fills riding the decode steps —
+                    # no prefill work happens at admission time
+                    hashes = self.sched._prompt_hashes(req) \
+                        if self.radix else \
+                        (prefix_page_hashes(toks, self.pool.page_tokens)
+                         if self.prefix_cache else [])
+                    match = self.sched.take_match(req) \
+                        if self.radix else None
+                    adopted = match.pages if match is not None else 0
+                    t = self.pool.page_tokens
+                    self.state.adopt_prefix(
+                        seq, match.groups if match is not None else (),
+                        pending_hashes=hashes[adopted:])
+                    act.pending = toks[adopted * t:]
+                    act.prefilled = adopted * t
+                    act.hashes = hashes
+                    self.pages_adopted_total += adopted
+                    self.pages_needed_total += self.sched.adopt_cap(req)
+                    self._rows[row_i] = act
+                    rec.active, rec.row, rec.status = act, row_i, "active"
+                    self._rows_dirty = True
+                    if rec.metrics is not None:
+                        rec.metrics.on_admit()
+                    continue
+                t0 = time.perf_counter()
                 # right-pad to a power-of-two bucket: bounded compile
                 # count across prompt lengths, exact prefix under the
                 # causal mask
@@ -752,17 +898,21 @@ class ServeSession:
                 logits_all, caches = eng._prefill_all(
                     eng.params, {"tokens": jnp.asarray(padded[None])})
                 logits = logits_all[:, plen - 1]
+                want_hashes = self.prefix_cache or self.radix
                 hashes = ([prefix_page_hashes(toks, self.pool.page_tokens)]
-                          if self.prefix_cache else None)
+                          if want_hashes else None)
                 extract_prefill_pages(eng.model, caches, self.state, [seq],
                                       page_hashes=hashes, valid_len=plen)
-                eng.stats["prefill_s"] += time.time() - t0
+                if self.radix and hashes:
+                    # pin the completed prompt's full pages so later
+                    # requests are credited for (and, chunked, adopt) them
+                    self.prefix_index.insert(hashes[0], shard)
+                eng.stats["prefill_s"] += time.perf_counter() - t0
                 self._key, sub = jax.random.split(self._key)
                 tok = int(eng._sample(logits, self.greedy, self.temperature,
                                       sub)[0])
                 eng.stats["tokens"] += 1
-                act = _Active(req, seq, plen, [tok],
-                              eff_k=effective_speculate(req, eng.speculate))
+                act.outs.append(tok)
                 self._rows[row_i] = act
                 rec.active, rec.row, rec.status = act, row_i, "active"
                 self._rows_dirty = True
@@ -777,7 +927,14 @@ class ServeSession:
     def step(self) -> list[StreamEvent]:
         """One admission round + one decode step over the live rows.
         Returns the per-request token events (admission prefill tokens
-        included); an idle session returns an empty list."""
+        included); an idle session returns an empty list.
+
+        When chunked-prefill rows are live, the step widens to
+        ``max(spec_k, page_tokens)`` columns: up to ``prefill_budget``
+        chunk rows stream one prompt page each through the verify graph
+        while every decode row keeps decoding in the same fused launch —
+        long prompts admit page-by-page without stalling in-flight
+        requests."""
         events: list[StreamEvent] = []
         self._admit(events)
         rows = self._rows
@@ -787,7 +944,10 @@ class ServeSession:
                                    "requests and no active rows")
             return events
         eng, pool, state = self.engine, self.pool, self.state
-        spec = self.spec_k > 1
+        t = pool.page_tokens
+        chunk_rows: dict[int, tuple[int, bool]] = {}   # row -> (m, final)
+        wide = any(a is not None and a.prefilling for a in rows)
+        spec = self.spec_k > 1 or wide
         n_rows = len(rows)      # mesh plan: max_active padded to dp blocks
         if not spec:       # the spec branch derives these from srows
             pos = np.zeros(n_rows, np.int32)
@@ -797,17 +957,37 @@ class ServeSession:
                     continue
                 pos[i] = act.pos
                 seq_ids[i] = act.seq
-        t0 = time.time()
+        t0 = time.perf_counter()
         hits0 = (pool.stats["fast_hits"], pool.stats["slow_hits"])
         g0 = state.gather_s
         if spec:
             # speculative verify step: k rows per live request, mixed
-            # freely with eff_k=1 (plain) rows; tokens ride in the
-            # control block, so no device-token feedback is needed
+            # freely with eff_k=1 (plain) rows and prefill chunk rows;
+            # tokens ride in the control block, so no device-token
+            # feedback is needed
+            k = max(self.spec_k, t) if wide else self.spec_k
+            step_fn = eng._fused_step_fn(state.slots, self.greedy,
+                                         self.temperature, k=k) \
+                if wide else self._step_fn
+            budget = self.prefill_budget
             srows: list[Optional[dict]] = []
             for act in rows:
                 if act is None:
                     srows.append(None)
+                    continue
+                if act.prefilling:
+                    if budget <= 0:
+                        srows.append(None)   # over budget: wait a step
+                        continue
+                    budget -= 1
+                    # fill to the page boundary, never across it: one
+                    # chunk completes at most one page, so the fill path
+                    # in end_step sees whole pages exactly as decode does
+                    m = min(t - act.prefilled % t, len(act.pending))
+                    final = m == len(act.pending)
+                    chunk_rows[len(srows)] = (m, final)
+                    srows.append({"seq": act.seq, "pos": act.prefilled,
+                                  "chunk": act.pending[:m], "final": final})
                     continue
                 srows.append({
                     "seq": act.seq,
@@ -818,8 +998,12 @@ class ServeSession:
                     "limit": act.req.max_new_tokens - len(act.outs),
                     "eos": act.req.eos_token, "stats": act.stats})
             self._key, sub = jax.random.split(self._key)
-            kept = eng._spec_step(state, self._step_fn, self.spec_k, srows,
-                                  sub)
+            kept = eng._spec_step(state, step_fn, k, srows, sub)
+            if wide:
+                # the wide graph did not refresh the 1-token device
+                # feedback vector — rebuild it on the next plain step
+                self._rows_dirty = True
+                self._tok_dev = None
         elif self._fused:
             tok_in = self._tok_dev
             if self._rows_dirty or tok_in is None:
@@ -845,18 +1029,44 @@ class ServeSession:
             self._key, sub = jax.random.split(self._key)
             toks = np.asarray(eng._sample(logits, self.greedy,
                                           self.temperature, sub))
-        eng.stats["decode_s"] += time.time() - t0
+        dt = time.perf_counter() - t0
+        eng.stats["decode_s"] += dt
         eng.stats["decode_steps"] += 1
         self.steps += 1
         if self._observe is not None:
             self._observe(state.gather_s - g0,
                           pool.stats["fast_hits"] - hits0[0],
                           pool.stats["slow_hits"] - hits0[1])
+        decode_tokens = 0
         for i, act in enumerate(rows):
             if act is None:
                 continue
             rec = self._recs[id(act.req)]
+            if i in chunk_rows:
+                m, final = chunk_rows[i]
+                act.prefilled += m
+                act.pending = act.pending[m:]
+                if not final:
+                    continue        # mid-prefill: nothing to stream yet
+                tok = int(kept[i][0])    # first generated token
+                act.outs.append(tok)
+                act.pending = None
+                eng.stats["tokens"] += 1
+                if self.radix and act.hashes:
+                    # prompt fully resident: pin its full pages so later
+                    # requests adopt them
+                    self.prefix_index.insert(
+                        act.hashes, self.sched.assigned_shard(act.req))
+                if rec.metrics is not None:
+                    rec.metrics.on_tokens(1)
+                done = act.finished
+                if done:
+                    self._finish(rec)
+                events.append(StreamEvent(act.req, [tok], done=done))
+                continue
             if spec:
+                if kept[i] is None:      # over-budget prefill row idled
+                    continue
                 new = [int(x) for x in kept[i]]
                 act.outs.extend(new)
             else:
@@ -864,6 +1074,7 @@ class ServeSession:
                 act.outs.append(new[0])
                 act.stats.steps += 1
                 act.stats.tokens += 1
+            decode_tokens += len(new)
             eng.stats["tokens"] += len(new)
             if rec.metrics is not None:
                 rec.metrics.on_tokens(len(new))
@@ -871,5 +1082,9 @@ class ServeSession:
             if done:
                 self._finish(rec)
             events.append(StreamEvent(act.req, new, done=done))
+        if chunk_rows and decode_tokens:
+            # per-token wall time of decode work that shared its fused
+            # step with a prefill chunk — "decode p99 during admission"
+            self.prefill_step_decode_ms.append(dt * 1e3 / decode_tokens)
         self.peak_live_pages = max(self.peak_live_pages, pool.live_pages)
         return events

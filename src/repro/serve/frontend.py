@@ -129,12 +129,16 @@ class AsyncServeFrontend:
                  max_active: int = 4, max_queue: int = 16,
                  speculate: Optional[int] = None, greedy: bool = True,
                  temperature: float = 1.0, seed: int = 0,
-                 prefix_cache: bool = True, metrics=None):
+                 prefix_cache: bool = True, metrics=None,
+                 chunked_prefill: Optional[bool] = None,
+                 prefill_budget: int = 1, radix: Optional[bool] = None):
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.session = ServeSession(
             engine, capacity=capacity, max_active=max_active,
             speculate=speculate, greedy=greedy, temperature=temperature,
-            seed=seed, prefix_cache=prefix_cache, metrics=self.metrics)
+            seed=seed, prefix_cache=prefix_cache, metrics=self.metrics,
+            chunked_prefill=chunked_prefill, prefill_budget=prefill_budget,
+            radix=radix)
         self.engine = engine
         self.max_queue = max_queue
         self._handles: dict[int, StreamHandle] = {}
@@ -159,6 +163,9 @@ class AsyncServeFrontend:
         self._wake.set()
         await self._task
         self._task = None
+        # drop the session's radix pins so a closed front end leaves
+        # only truly in-flight pages live in the pool
+        self.session.close()
 
     async def __aenter__(self) -> "AsyncServeFrontend":
         self.start()
@@ -228,6 +235,11 @@ class AsyncServeFrontend:
                         continue
                     handle._push(ev.tokens)
                     if ev.done:
+                        # a late pool-capacity rejection replaces the
+                        # admission verdict — refresh so handle.rejected
+                        # reflects it
+                        handle.admission = self.session.admission(
+                            ev.request)
                         handle._finalize(self.session.result(ev.request))
                         self._handles.pop(id(ev.request), None)
                 # let submitters / consumers / cancellers interleave

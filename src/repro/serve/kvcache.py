@@ -118,7 +118,7 @@ class PagedKVPool:
         self.recorder = None          # optional DecodeTraceRecorder
         self.stats = {"fast_hits": 0, "slow_hits": 0, "evictions": 0,
                       "fast_bytes": 0, "slow_bytes": 0, "freed": 0,
-                      "shared_puts": 0}
+                      "shared_puts": 0, "adopted_pages": 0}
 
     def _fast_pages(self):
         """Inspection helper only — the put/touch/evict hot paths must not
@@ -227,13 +227,61 @@ class PagedKVPool:
         pool scan (gather calls this per layer per decode step)."""
         return list(self._by_seq.get((seq_id, layer), ()))
 
+    # -- reference management (prefix cache / radix tree hooks) -------------
+    def page_by_hash(self, layer: int, content_hash) -> Optional[int]:
+        """Page id currently storing `(layer, content_hash)`, or None —
+        how the radix prefix index resolves hashes to live pages."""
+        return self._by_hash.get((layer, content_hash))
+
+    def ref_page(self, pid: int) -> None:
+        """Take an extra reference on a live page (the radix tree's pin:
+        the page now survives every sequence that wrote it retiring)."""
+        self.pages[pid].refs += 1
+
+    def unref_page(self, pid: int) -> list[tuple]:
+        """Drop one reference (the tree's unpin). Returns the destroyed
+        ``(page_id, layer)`` pairs — empty while other holders remain —
+        in `free`'s format so device-slot recycling is uniform."""
+        page = self.pages.get(pid)
+        if page is None:
+            return []
+        page.refs -= 1
+        if page.refs > 0:
+            return []
+        self._destroy(page)
+        return [(pid, page.layer)]
+
+    def adopt_page(self, seq_id: int, pid: int, layer: int) -> None:
+        """Attach a cached page to a sequence WITHOUT storing anything:
+        refs grow, the page joins the sequence's per-layer page list, and
+        the prefill that would have re-computed it never runs. Counted
+        separately from `shared_puts` (those still re-compute and dedup
+        on store; adoption skips the compute entirely)."""
+        self.clock += 1
+        page = self.pages[pid]
+        page.refs += 1
+        page.last_access = self.clock
+        if page.tier == "fast":
+            self._fast_lru.move_to_end(pid)
+        self._by_seq.setdefault((seq_id, layer), []).append(pid)
+        self.stats["adopted_pages"] += 1
+        self._record(page, is_write=False)
+
+    def _destroy(self, page: Page) -> None:
+        del self.pages[page.page_id]
+        self._fast_lru.pop(page.page_id, None)
+        if page.content_hash is not None:
+            self._by_hash.pop(page.content_hash, None)
+        self.stats[f"{page.tier}_bytes"] -= page.nbytes
+        self.stats["freed"] += 1
+
     def free(self, seq_id: int) -> list[tuple]:
         """Release every (seq_id, layer) page reference of a retired
         request. Pages whose last holder this was are destroyed (byte stats
-        shrink back to the live working set); prefix-shared pages survive
-        until the final holder frees them. Returns destroyed
-        ``(page_id, layer)`` pairs (the layer routes device-slot
-        recycling without scanning every layer's mirror)."""
+        shrink back to the live working set); prefix-shared and
+        radix-pinned pages survive until the final holder frees them.
+        Returns destroyed ``(page_id, layer)`` pairs (the layer routes
+        device-slot recycling without scanning every layer's mirror)."""
         destroyed: list[tuple] = []
         # key scan is O(live (seq, layer) entries) — bounded by active
         # requests x layers, not by pool size
@@ -245,12 +293,7 @@ class PagedKVPool:
                 page.refs -= 1
                 if page.refs > 0:
                     continue
-                del self.pages[pid]
-                self._fast_lru.pop(pid, None)
-                if page.content_hash is not None:
-                    self._by_hash.pop(page.content_hash, None)
-                self.stats[f"{page.tier}_bytes"] -= page.nbytes
-                self.stats["freed"] += 1
+                self._destroy(page)
                 destroyed.append((pid, page.layer))
         return destroyed
 

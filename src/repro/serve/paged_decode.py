@@ -113,6 +113,10 @@ class PagedKVState:
         self.batch_hint = max(1, batch_hint)   # expected live sequences
         self.tail_len: dict[int, int] = {}     # seq -> tail rows (all layers)
         self.tail_data: dict[tuple, list] = {}  # (seq, layer) -> rows (numpy)
+        # chunked prefill: content hashes awaiting the seq's next page
+        # fills, so prompt pages built by chunk scatters dedup/share and
+        # are insertable into the radix prefix tree
+        self._pending_hashes: dict[int, list] = {}
         self._tail_slot: dict[int, int] = {}   # seq -> GLOBAL device slot
         self._spill_slot: dict[int, int] = {}  # k>1: boundary-crossing rows
         self._shard_of: dict[int, int] = {}    # seq -> data shard
@@ -199,6 +203,25 @@ class PagedKVState:
         else:
             self.tail_data[(seq, layer)] = \
                 [(rest_k[r], rest_v[r]) for r in range(n_rest)]
+
+    def adopt_prefix(self, seq: int, groups, pending_hashes=()):
+        """Start a sequence from cached pages instead of a prefill:
+        each group (per-layer pool pids of one prompt page, from the
+        radix prefix index) is adopted by reference — the pool stores
+        nothing new, the device mirror already holds (or will sync) the
+        slots — and ``pending_hashes`` (the cumulative digests of the
+        prompt pages the suffix chunks will fill) are queued so
+        `end_step`'s fills store them hash-shared. Must run BEFORE any
+        suffix write; the tail starts empty."""
+        prev = self.tail_len.setdefault(seq, 0)
+        if prev != 0 or self.pool.seq_pages(seq, 0):
+            raise RuntimeError(f"sequence {seq}: adopt_prefix must run "
+                               f"before any prefill write")
+        for group in groups:
+            for layer, pid in enumerate(group):
+                self.pool.adopt_page(seq, pid, layer)
+        if pending_hashes:
+            self._pending_hashes[seq] = list(pending_hashes)
 
     def _ensure_tail_slot(self, seq: int) -> int:
         slot = self._tail_slot.get(seq)
@@ -474,8 +497,14 @@ class PagedKVState:
             if self._device is not None:
                 slot = self._tail_slot.pop(seq)
                 k_all, v_all = self._device.read_slot(slot)
+                # a chunked prefill queued this page's cumulative prompt
+                # hash: store it shared (identical content dedups onto a
+                # live/pinned page; `adopt` then recycles the tail slot)
+                pending = self._pending_hashes.get(seq)
+                h = pending.pop(0) if pending else None
                 group = tuple(
-                    self.pool.put(seq, k_all[l], v_all[l], layer=l)
+                    self.pool.put(seq, k_all[l], v_all[l], layer=l,
+                                  content_hash=h)
                     for l in range(self.num_layers))
                 self._device.adopt(group, slot, self.pool,
                                    self._device.shard_of_slot(slot))
@@ -499,6 +528,14 @@ class PagedKVState:
         self._step = None
         self.gather_s += time.perf_counter() - t0
 
+    def release_page(self, pid: int):
+        """Recycle a destroyed pool page's device slot — the radix
+        prefix tree hooks this (``on_release``) so an evicted/cleared
+        pin frees its device slot exactly like `free_seq` does for a
+        retired sequence's pages."""
+        if self._device is not None:
+            self._device.release_pid(pid)
+
     # -- retire -------------------------------------------------------------
     def free_seq(self, seq: int) -> list[int]:
         """Retire a request: drop its pool page refs (destroying pages
@@ -510,6 +547,7 @@ class PagedKVState:
                 self._device.release_pid(pid)
         self.tail_len.pop(seq, None)
         self._shard_of.pop(seq, None)
+        self._pending_hashes.pop(seq, None)
         for key in [k for k in self.tail_data if k[0] == seq]:
             self.tail_data.pop(key)
         for slot in (self._tail_slot.pop(seq, None),

@@ -1,0 +1,222 @@
+"""Radix prefix index over the pool's content-hashed pages.
+
+The `PagedKVPool` already dedups *stored* pages by cumulative
+token-prefix hash, but only while some live sequence holds a reference —
+a retired request's prompt pages die with it, and a new request always
+re-computes (prefills) every prompt page even when identical K/V just
+left the pool. `RadixPrefixCache` turns the pool into a real
+cross-request cache: the tree *pins* every full prompt page it has seen
+(one pool reference per node), so a new request can walk its prompt's
+cumulative page hashes, adopt the longest cached page-aligned prefix —
+including prefixes whose owners retired long ago — and prefill only the
+suffix. This is the thesis' data-centric argument applied to prompt
+reuse: compute where the data already lives instead of re-materializing
+K/V the pool already holds.
+
+Because page hashes are *cumulative* (hash p covers tokens[:(p+1)*t]),
+a node is fully identified by its page hash and the radix walk reduces
+to successive dict lookups; the parent/child links exist for leaf-first
+eviction, not for matching.
+
+Pinning and eviction rules (the scheduler's budget soundness depends on
+them — see `Scheduler._pick_shard`):
+
+- Each node holds exactly ONE pool reference per layer page of its
+  group. Destroying a node drops those references; pages whose last
+  holder was the tree are destroyed (and their device slots recycled via
+  ``on_release``).
+- Eviction is leaf-first in LRU order and only touches *exclusive*
+  nodes — every page of the group is held by the tree alone
+  (``refs == 1``). A page some live sequence adopted can never be
+  evicted out from under it, and (because adoption always takes the
+  whole prefix path) neither can any of its ancestors.
+- A mesh-sharded pool keeps one tree root PER data shard: a sequence
+  bound to shard s only matches/inserts shard s's tree, so adoption
+  never references a page whose device slot lives on another shard.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+
+class _Node:
+    """One cached full prompt page: its cumulative hash, the per-layer
+    pool page ids it pins, and the tree links for leaf-first eviction."""
+
+    __slots__ = ("hash", "group", "parent", "children", "last_access")
+
+    def __init__(self, h: str, group: tuple, parent: Optional["_Node"]):
+        self.hash = h
+        self.group = group                  # per-layer pool pids
+        self.parent = parent
+        self.children: dict[str, "_Node"] = {}
+        self.last_access = 0
+
+
+@dataclasses.dataclass
+class PrefixMatch:
+    """Longest cached page-aligned prefix for one prompt on one shard:
+    ``groups[p]`` is the per-layer pid tuple of prompt page p, ``hashes``
+    the matched node hashes (protected from eviction while the admission
+    that looked them up is still being budgeted)."""
+    shard: int
+    groups: list
+    hashes: list
+
+    @property
+    def pages(self) -> int:
+        return len(self.groups)
+
+
+class RadixPrefixCache:
+    """Per-data-shard radix index of pinned prompt pages.
+
+    ``on_release(pid)`` is called for every pool page the tree's unpin
+    destroyed — the serving state hooks it to recycle the page's device
+    slots (mirroring what `PagedKVState.free_seq` does for sequence
+    pages)."""
+
+    def __init__(self, pool, num_layers: int, shards: int = 1,
+                 on_release: Optional[Callable[[int], None]] = None):
+        self.pool = pool
+        self.num_layers = num_layers
+        self.shards = max(1, shards)
+        self.on_release = on_release
+        self._roots = [_Node("", (), None) for _ in range(self.shards)]
+        self._nodes: list[dict[str, _Node]] = [{} for _ in
+                                               range(self.shards)]
+        self._clock = 0
+        self.stats = {"inserted": 0, "evicted": 0, "hits": 0, "misses": 0}
+
+    # -- inspection ----------------------------------------------------------
+    def nodes(self, shard: int = 0) -> int:
+        return len(self._nodes[shard])
+
+    def pinned_pages(self, shard: int = 0) -> int:
+        """Pool pages the tree currently holds references on for `shard`
+        (each node pins one page per layer) — the scheduler counts these
+        against the shard's budget because nothing in the active
+        requests' reservations covers them."""
+        return len(self._nodes[shard]) * self.num_layers
+
+    def _exclusive(self, node: _Node) -> bool:
+        """True when the tree is the only holder of every page of the
+        node's group — the only nodes eviction may destroy."""
+        return all(self.pool.pages[pid].refs == 1 for pid in node.group)
+
+    def reclaimable_pages(self, shard: int = 0,
+                          protect: frozenset = frozenset()) -> int:
+        """Pages eviction could free right now: exclusive, unprotected
+        nodes whose whole subtree is also reclaimable (a node under a
+        protected/shared descendant must survive to keep the path
+        walkable)."""
+        out = 0
+        for node in self._nodes[shard].values():
+            if node.hash in protect or not self._exclusive(node):
+                continue
+            if self._subtree_blocked(node, protect):
+                continue
+            out += self.num_layers
+        return out
+
+    def _subtree_blocked(self, node: _Node, protect) -> bool:
+        stack = list(node.children.values())
+        while stack:
+            n = stack.pop()
+            if n.hash in protect or not self._exclusive(n):
+                return True
+            stack.extend(n.children.values())
+        return False
+
+    # -- insert / match ------------------------------------------------------
+    def insert(self, page_hashes: list, shard: int = 0) -> int:
+        """Pin a completed prompt's full pages into `shard`'s tree. The
+        walk extends only while the pool actually stores a hashed page at
+        every layer (a demoted-then-destroyed page breaks the chain).
+        Returns the number of NEW nodes pinned."""
+        self._clock += 1
+        node = self._roots[shard]
+        created = 0
+        for h in page_hashes:
+            child = node.children.get(h)
+            if child is None:
+                group = tuple(self.pool.page_by_hash(l, h)
+                              for l in range(self.num_layers))
+                if any(pid is None for pid in group):
+                    break
+                child = _Node(h, group, node)
+                for pid in group:
+                    self.pool.ref_page(pid)
+                node.children[h] = child
+                self._nodes[shard][h] = child
+                created += 1
+                self.stats["inserted"] += 1
+            child.last_access = self._clock
+            node = child
+        return created
+
+    def match(self, page_hashes: list, shard: int = 0,
+              limit: Optional[int] = None) -> PrefixMatch:
+        """Longest cached page-aligned prefix of `page_hashes` on
+        `shard`, capped at `limit` pages (admission caps at
+        ``(prompt_len - 1) // page_tokens`` so at least one suffix token
+        remains to produce first-token logits). Touches the path."""
+        self._clock += 1
+        node = self._roots[shard]
+        groups, hashes = [], []
+        cap = len(page_hashes) if limit is None else min(limit,
+                                                         len(page_hashes))
+        for h in page_hashes[:cap]:
+            child = node.children.get(h)
+            if child is None:
+                break
+            child.last_access = self._clock
+            groups.append(child.group)
+            hashes.append(h)
+            node = child
+        self.stats["hits" if groups else "misses"] += 1
+        return PrefixMatch(shard=shard, groups=groups, hashes=hashes)
+
+    # -- eviction ------------------------------------------------------------
+    def _destroy(self, node: _Node, shard: int):
+        del self._nodes[shard][node.hash]
+        node.parent.children.pop(node.hash, None)
+        for pid in node.group:
+            for dead_pid, _layer in self.pool.unref_page(pid):
+                if self.on_release is not None:
+                    self.on_release(dead_pid)
+        self.stats["evicted"] += 1
+
+    def make_room(self, shard: int, pages: int,
+                  protect: frozenset = frozenset()) -> int:
+        """Evict leaf-first in LRU order until `pages` pool pages of
+        `shard`'s pins have been released (or nothing evictable is
+        left). Only exclusive, unprotected leaves go; evicting a leaf
+        may expose its parent as the next candidate. Returns the pages
+        actually released."""
+        freed = 0
+        while freed < pages:
+            victim = None
+            for node in self._nodes[shard].values():
+                if node.children or node.hash in protect \
+                        or not self._exclusive(node):
+                    continue
+                if victim is None or node.last_access < victim.last_access:
+                    victim = node
+            if victim is None:
+                break
+            self._destroy(victim, shard)
+            freed += self.num_layers
+        return freed
+
+    def clear(self):
+        """Release every pin on every shard (session teardown): pages
+        whose last holder was the tree are destroyed, so a closed
+        session leaves ``pool.live_pages == 0`` exactly as before."""
+        for shard in range(self.shards):
+            while self._nodes[shard]:
+                leaf = next(n for n in self._nodes[shard].values()
+                            if not n.children)
+                self._destroy(leaf, shard)
+            self._roots[shard].children.clear()

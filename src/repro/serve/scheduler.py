@@ -101,12 +101,22 @@ class Scheduler:
 
     def __init__(self, pool, num_layers: int, max_active: int = 4,
                  default_speculate: int = 0, data_shards: int = 1,
-                 rows_per_shard: Optional[int] = None):
+                 rows_per_shard: Optional[int] = None, prefix_index=None):
         if max_active < 1:
             raise ValueError(f"max_active must be >= 1, got {max_active}")
         self.pool = pool
         self.num_layers = num_layers
         self.max_active = max_active
+        # radix prefix index (`serve.prefix_cache.RadixPrefixCache`):
+        # admission credits a request's cached prompt pages — they are
+        # already resident (tree-pinned), so budgeting them as new pages
+        # caused false pool_capacity rejections under prefix-heavy
+        # traffic. Tree pins count against the budget (nothing in the
+        # active reservations covers them) and are LRU-evicted on demand.
+        self.prefix_index = prefix_index
+        self._hashes: dict[int, list] = {}     # id(request) -> page hashes
+        self._admit_match: dict = {}           # id(request) -> PrefixMatch
+        self.late_rejections: list[tuple] = []  # (request, Admission)
         # engine-level speculation default, used to resolve each request's
         # effective k for the admission budget (Request.speculate wins)
         self.default_speculate = default_speculate
@@ -142,21 +152,90 @@ class Scheduler:
         budget = self._budget()
         return None if budget is None else budget // self.data_shards
 
-    def _pick_shard(self, need: int) -> Optional[int]:
+    def _prompt_hashes(self, req: Request) -> list:
+        """Cumulative page hashes of a request's prompt, cached per
+        request object (submit, shard-picking and adoption all need
+        them)."""
+        if self.prefix_index is None:
+            return []
+        h = self._hashes.get(id(req))
+        if h is None:
+            h = prefix_page_hashes(req.prompt, self.pool.page_tokens)
+            self._hashes[id(req)] = h
+        return h
+
+    def adopt_cap(self, req: Request) -> int:
+        """Max prompt pages a request may adopt from the radix index:
+        at least one suffix token must be prefilled to produce the
+        first-token logits."""
+        return max(0, (len(req.prompt) - 1) // self.pool.page_tokens)
+
+    def _credit(self, req: Request, shard: int):
+        """(match, credited pages) for `req` on `shard`: prompt pages the
+        radix tree already pins there. Credited pages are resident either
+        way (pinned), so admission charges the request only for the pages
+        it may newly create."""
+        if self.prefix_index is None:
+            return None, 0
+        hashes = self._prompt_hashes(req)
+        if not hashes:
+            return None, 0
+        m = self.prefix_index.match(hashes, shard,
+                                    limit=self.adopt_cap(req))
+        return m, self.num_layers * m.pages
+
+    def _pick_shard(self, req: Request, need: int):
         """Least-reserved data shard with a free row and page headroom;
-        None when no shard fits right now."""
+        None when no shard fits right now, else ``(shard, eff_need,
+        match)``. With a radix index the gate per shard is::
+
+            reserved[s] + (need - credit) + (pinned[s] - credit) <= budget
+
+        i.e. every resident page counts once — active reservations cover
+        pages requests may still create, tree pins cover cached pages —
+        and the candidate's own matched path is exempt because it will be
+        adopted, not re-created. When the gate fails, LRU eviction of
+        unprotected exclusive pins (`make_room`) may free the shortfall;
+        a shard only qualifies if enough pins are reclaimable, and the
+        eviction runs once the winning shard is chosen."""
         budget = self._shard_budget()
         best = None
         for s in range(self.data_shards):
             if self._shard_active[s] >= self.rows_per_shard:
                 continue
-            if budget is not None and \
-                    self._shard_reserved[s] + need > budget:
-                continue
+            match, credit = self._credit(req, s)
+            eff = need - credit
+            shortfall = 0
+            if budget is not None:
+                pinned = self.prefix_index.pinned_pages(s) \
+                    if self.prefix_index is not None else 0
+                shortfall = self._shard_reserved[s] + eff \
+                    + (pinned - credit) - budget
+                if shortfall > 0:
+                    protect = frozenset(match.hashes) if match else \
+                        frozenset()
+                    if self.prefix_index is None or \
+                            self.prefix_index.reclaimable_pages(
+                                s, protect) < shortfall:
+                        continue
             if best is None or \
-                    self._shard_reserved[s] < self._shard_reserved[best]:
-                best = s
-        return best
+                    self._shard_reserved[s] < self._shard_reserved[best[0]]:
+                best = (s, eff, match, max(0, shortfall))
+        if best is None:
+            return None
+        s, eff, match, shortfall = best
+        if shortfall > 0:
+            protect = frozenset(match.hashes) if match else frozenset()
+            freed = self.prefix_index.make_room(s, shortfall, protect)
+            if freed < shortfall:
+                return None
+        return s, eff, match
+
+    def take_match(self, req: Request):
+        """Pop the `PrefixMatch` recorded when `admit()` placed this
+        request (None when nothing was cached) — the engine adopts
+        exactly the pages the admission gate credited."""
+        return self._admit_match.pop(id(req), None)
 
     def assigned_shard(self, req: Request) -> int:
         """Data shard `admit()` placed this request on (0 unsharded)."""
@@ -169,14 +248,20 @@ class Scheduler:
         the workload is affected."""
         budget = self._shard_budget()
         need = self.pages_needed(req)
-        if budget is not None and need > budget:
+        credit = 0
+        if budget is not None and self.prefix_index is not None:
+            credit = max(self._credit(req, s)[1]
+                         for s in range(self.data_shards))
+        if budget is not None and need - credit > budget:
             per_shard = f" per data shard (x{self.data_shards})" \
                 if self.data_shards > 1 else ""
+            credited = f" after crediting {credit} radix-cached pages" \
+                if credit else ""
             return Admission(
                 False, reason="pool_capacity", pages_needed=need,
                 pages_budget=budget,
-                detail=f"request needs {need} pages worst-case but only "
-                       f"{budget} of the pool's capacity_pages="
+                detail=f"request needs {need} pages worst-case{credited} "
+                       f"but only {budget} of the pool's capacity_pages="
                        f"{self.pool.capacity_pages} budget are available"
                        f"{per_shard} ({self._base_pages} pages already "
                        f"live) — it can never be admitted")
@@ -191,6 +276,7 @@ class Scheduler:
         for i, r in enumerate(self.waiting):
             if r is req:
                 del self.waiting[i]
+                self._drop_request_state(req)
                 return True
         return False
 
@@ -218,22 +304,48 @@ class Scheduler:
         while self.waiting and self.n_active < self.max_active:
             req = self.waiting[0]
             need = self.pages_needed(req)
-            shard = self._pick_shard(need)
-            if shard is None:
+            pick = self._pick_shard(req, need)
+            if pick is None:
+                if self.n_active == 0 and not out:
+                    # nothing is active, so no retirement or insertion
+                    # can ever change the verdict: the head's credit has
+                    # shrunk since submit (its cached prefix was evicted)
+                    # and even full eviction cannot fit it. Reject it
+                    # late instead of stalling the queue forever.
+                    self.waiting.popleft()
+                    self._drop_request_state(req)
+                    self.late_rejections.append((req, Admission(
+                        False, reason="pool_capacity",
+                        pages_needed=need,
+                        pages_budget=self._shard_budget(),
+                        detail=f"request needs {need} pages worst-case "
+                               f"but no data shard can fit it even "
+                               f"after evicting every reclaimable "
+                               f"prefix pin — it can never be "
+                               f"admitted")))
+                    continue
                 break
+            shard, eff, match = pick
             self.waiting.popleft()
-            self._reserved[id(req)] = need
+            self._reserved[id(req)] = eff
             self._shard_of[id(req)] = shard
             self._shard_active[shard] += 1
-            self._shard_reserved[shard] += need
+            self._shard_reserved[shard] += eff
+            if match is not None and match.pages:
+                self._admit_match[id(req)] = match
             out.append(req)
             self.admitted += 1
         self.peak_active = max(self.peak_active, self.n_active)
         return out
 
+    def _drop_request_state(self, req: Request):
+        self._hashes.pop(id(req), None)
+        self._admit_match.pop(id(req), None)
+
     def retire(self, req: Request):
         need = self._reserved.pop(id(req), None)
         shard = self._shard_of.pop(id(req), None)
+        self._drop_request_state(req)
         if need is not None and shard is not None:
             self._shard_active[shard] -= 1
             self._shard_reserved[shard] -= need

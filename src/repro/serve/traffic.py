@@ -28,7 +28,7 @@ from typing import Optional
 import numpy as np
 
 from repro.serve.frontend import AsyncServeFrontend
-from repro.serve.metrics import MetricsRegistry
+from repro.serve.metrics import MetricsRegistry, percentile
 from repro.serve.scheduler import Request
 
 
@@ -74,6 +74,12 @@ MIXES = {
     "speculative": TraceSpec(name="speculative", n_requests=8,
                              arrival_rate=40.0, prompt_lens=(16, 24),
                              new_tokens=(8,), speculate=4, seed=2),
+    # long prompts + heavy prefix reuse: exercises chunked prefill (the
+    # suffix streams page-by-page through wide fused steps while earlier
+    # requests decode) and radix adoption across retired requests
+    "chunked": TraceSpec(name="chunked", n_requests=8, arrival_rate=60.0,
+                         prompt_lens=(64, 48), new_tokens=(4, 8),
+                         prefix_fraction=0.5, prefix_len=32, seed=3),
 }
 
 
@@ -115,7 +121,10 @@ def trace_capacity(trace: list[TraceItem]) -> int:
 
 
 async def replay(engine, spec: TraceSpec, *, max_active: int = 4,
-                 max_queue: int = 16, seed: int = 0) -> dict:
+                 max_queue: int = 16, seed: int = 0,
+                 chunked_prefill: Optional[bool] = None,
+                 prefill_budget: int = 1,
+                 radix: Optional[bool] = None) -> dict:
     """Replay a trace open-loop against a fresh front end over `engine`.
 
     Each request is submitted at its trace arrival time (not when a row
@@ -128,7 +137,8 @@ async def replay(engine, spec: TraceSpec, *, max_active: int = 4,
     front = AsyncServeFrontend(
         engine, capacity=trace_capacity(trace), max_active=max_active,
         max_queue=max_queue, speculate=max(1, spec.speculate), seed=seed,
-        metrics=metrics)
+        metrics=metrics, chunked_prefill=chunked_prefill,
+        prefill_budget=prefill_budget, radix=radix)
     n_cancelled = 0
 
     async def consume(item: TraceItem, handle):
@@ -165,6 +175,14 @@ async def replay(engine, spec: TraceSpec, *, max_active: int = 4,
     out["peak_live_pages"] = front.session.peak_live_pages
     out["pool_live_pages_end"] = pool.live_pages
     out["pool_shared_puts"] = pool.stats.get("shared_puts", 0)
+    out["pool_adopted_pages"] = pool.stats.get("adopted_pages", 0)
+    # radix prefix cache: pages adopted / adoptable prompt pages across
+    # the chunked admissions (None when the mix never chunk-prefilled)
+    out["prefix_hit_rate"] = front.session.prefix_hit_rate
+    # per-token wall time of decode steps that shared their fused launch
+    # with a prefill chunk — "decode p99 while a long prompt admits"
+    ms = front.session.prefill_step_decode_ms
+    out["decode_p99_during_prefill_ms"] = percentile(ms, 99) if ms else None
     # cancellation correctness: every cancelled (and finished) request's
     # pages must be freed — anything still live leaked
     out["cancelled_pages_freed"] = pool.live_pages == 0
@@ -173,10 +191,14 @@ async def replay(engine, spec: TraceSpec, *, max_active: int = 4,
 
 
 def run_trace(engine, spec: TraceSpec, *, max_active: int = 4,
-              max_queue: int = 16, seed: int = 0) -> dict:
+              max_queue: int = 16, seed: int = 0,
+              chunked_prefill: Optional[bool] = None,
+              prefill_budget: int = 1, radix: Optional[bool] = None) -> dict:
     """Synchronous wrapper: replay one mix and return its summary."""
     return asyncio.run(replay(engine, spec, max_active=max_active,
-                              max_queue=max_queue, seed=seed))
+                              max_queue=max_queue, seed=seed,
+                              chunked_prefill=chunked_prefill,
+                              prefill_budget=prefill_budget, radix=radix))
 
 
 def parse_spec(arg: str) -> TraceSpec:

@@ -1,0 +1,261 @@
+"""Radix prefix cache + chunked prefill: adoption of tree-pinned prompt
+pages across retired requests, page-sized suffix prefill riding the
+fused decode steps, admission that credits cached pages, LRU eviction of
+pins under pool pressure, and mid-prefill cancellation accounting.
+
+The headline claim (ISSUE 8 acceptance): radix-adopted + chunked-prefill
+decode is token-for-token identical to the monolithic-prefill path,
+plain and speculative."""
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.serve.engine import Request, ServeEngine, ServeSession
+from repro.serve.kvcache import PagedKVPool
+from repro.serve.prefix_cache import RadixPrefixCache
+from repro.serve.scheduler import prefix_page_hashes
+
+T = 4          # page tokens: small so short prompts span several pages
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return smoke_config("starcoder2-7b")
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return ServeEngine(cfg, kv_pool=PagedKVPool(page_tokens=T)).params
+
+
+def _engine(cfg, params, capacity_pages=None, **kw):
+    pool = PagedKVPool(page_tokens=T, capacity_pages=capacity_pages)
+    return ServeEngine(cfg, params=params, kv_pool=pool, **kw), pool
+
+
+def _drive(session):
+    while not session.done:
+        session.step()
+
+
+# ---------------------------------------------------------------------------
+# Greedy equivalence: chunked + radix == monolithic
+# ---------------------------------------------------------------------------
+def test_chunked_radix_matches_monolithic_greedy(cfg, params):
+    """Mixed prompt lengths (page-aligned and not, shorter and longer
+    than a page) under staggered admission: the chunked + radix session
+    must match the monolithic-prefill session token-for-token."""
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (13, 24, 3, 17)]
+    news = [5, 4, 6, 3]
+    reqs = lambda: [Request(p.copy(), n) for p, n in zip(prompts, news)]
+
+    eng, _ = _engine(cfg, params)
+    expected = eng.serve(reqs(), max_active=2, chunked_prefill=False,
+                         radix=False)
+    for budget in (1, 2):
+        eng2, pool2 = _engine(cfg, params)
+        outs = eng2.serve(reqs(), max_active=2, prefill_budget=budget)
+        for want, got in zip(expected, outs):
+            np.testing.assert_array_equal(want, got)
+        assert pool2.live_pages == 0      # serve() closed the radix pins
+
+
+def test_chunked_radix_matches_monolithic_speculative(cfg, params):
+    """Same equivalence with the k=4 verify graph: chunk rows and
+    speculative decode rows share the widened fused steps."""
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (18, 11, 21)]
+    news = [6, 5, 4]
+    reqs = lambda: [Request(p.copy(), n, speculate=4)
+                    for p, n in zip(prompts, news)]
+
+    eng, _ = _engine(cfg, params, speculate=4)
+    expected = eng.serve(reqs(), max_active=2, chunked_prefill=False,
+                         radix=False)
+    eng2, pool2 = _engine(cfg, params, speculate=4)
+    outs = eng2.serve(reqs(), max_active=2)
+    for want, got in zip(expected, outs):
+        np.testing.assert_array_equal(want, got)
+    assert pool2.live_pages == 0
+
+
+# ---------------------------------------------------------------------------
+# Adoption across retired requests
+# ---------------------------------------------------------------------------
+def test_adoption_across_retired_requests(cfg, params):
+    """A retired request's prompt pages stay pinned in the tree; a later
+    request with the same head adopts them (no re-prefill) and still
+    produces the monolithic-path tokens. Hit-rate accounting matches."""
+    rng = np.random.default_rng(2)
+    head = rng.integers(0, cfg.vocab_size, 2 * T).astype(np.int32)
+    p1 = np.concatenate([head,
+                         rng.integers(0, cfg.vocab_size, 5).astype(np.int32)])
+    p2 = np.concatenate([head,
+                         rng.integers(0, cfg.vocab_size, 7).astype(np.int32)])
+
+    eng_ref, _ = _engine(cfg, params)
+    want1 = eng_ref.serve([Request(p1.copy(), 4)], chunked_prefill=False,
+                          radix=False)[0]
+    want2 = eng_ref.serve([Request(p2.copy(), 5)], chunked_prefill=False,
+                          radix=False)[0]
+
+    eng, pool = _engine(cfg, params)
+    session = ServeSession(eng, capacity=32, max_active=1)
+    r1, r2 = Request(p1.copy(), 4), Request(p2.copy(), 5)
+    assert session.submit(r1)
+    _drive(session)
+    # r1 retired, but its full prompt pages survive as tree pins
+    assert pool.live_pages == cfg.num_layers * (len(p1) // T)
+    assert session.pages_adopted_total == 0
+
+    assert session.submit(r2)
+    _drive(session)
+    np.testing.assert_array_equal(session.result(r1), want1)
+    np.testing.assert_array_equal(session.result(r2), want2)
+    # r2 adopted exactly the shared head (2 pages per layer)
+    assert pool.stats["adopted_pages"] == cfg.num_layers * 2
+    assert session.pages_adopted_total == 2
+    assert session.prefix_hit_rate == pytest.approx(
+        2 / ((len(p1) - 1) // T + (len(p2) - 1) // T))
+
+    session.close()
+    assert pool.live_pages == 0
+
+
+# ---------------------------------------------------------------------------
+# Satellite: admission credits radix-cached pages
+# ---------------------------------------------------------------------------
+def test_admission_credits_cached_prefix(cfg, params):
+    """A request whose worst case exceeds the raw budget admits when the
+    radix tree already pins its prompt prefix (the pages are resident
+    either way) — the old worst-case gate falsely rejected it."""
+    L = cfg.num_layers
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, 4 * T).astype(np.int32)
+
+    # control: without the radix index the big request can never fit
+    # (needs ceil((16+8)/4)+1 = 7 pages/layer > 6) and submit rejects it
+    eng0, _ = _engine(cfg, params, capacity_pages=6 * L)
+    s0 = ServeSession(eng0, capacity=24, max_active=2, radix=False)
+    v0 = s0.submit(Request(prompt.copy(), 8))
+    assert not v0.admitted and v0.reason == "pool_capacity"
+
+    eng, pool = _engine(cfg, params, capacity_pages=6 * L)
+    session = ServeSession(eng, capacity=24, max_active=2)
+    small = Request(prompt.copy(), 4)       # 6 pages/layer: fits exactly
+    assert session.submit(small)
+    _drive(session)
+
+    big = Request(prompt.copy(), 8)         # 7 pages/layer worst case
+    verdict = session.submit(big)
+    assert verdict.admitted                 # 3 pages/layer credited
+    _drive(session)
+    assert len(session.result(big)) == 8
+    session.close()
+    assert pool.live_pages == 0
+
+
+# ---------------------------------------------------------------------------
+# Satellite: cancellation mid-prefill
+# ---------------------------------------------------------------------------
+def test_cancel_mid_prefill_frees_exactly_the_suffix_pages(cfg, params):
+    """Cancelling a request mid-chunked-prefill frees exactly the suffix
+    pages it wrote; the radix-pinned prefix it adopted drops back to the
+    tree's refcount and stays live for the next request."""
+    rng = np.random.default_rng(4)
+    head = rng.integers(0, cfg.vocab_size, 2 * T).astype(np.int32)
+    p_seed = np.concatenate([head, rng.integers(
+        0, cfg.vocab_size, 5).astype(np.int32)])
+    p_long = np.concatenate([head, rng.integers(
+        0, cfg.vocab_size, 7 * T).astype(np.int32)])
+
+    eng, pool = _engine(cfg, params)
+    session = ServeSession(eng, capacity=48, max_active=1)
+    seed_req = Request(p_seed.copy(), 3)
+    session.submit(seed_req)
+    _drive(session)                       # tree now pins p_seed's pages
+    live_before = set(pool.pages)
+    assert live_before and all(pool.pages[pid].refs == 1
+                               for pid in live_before)
+
+    long_req = Request(p_long.copy(), 4)
+    session.submit(long_req)
+    session.step()                        # admit + first suffix chunk
+    session.step()                        # second chunk
+    act = session._recs[id(long_req)].active
+    assert act.prefilling                 # genuinely mid-prefill
+    assert act.prefilled > 2 * T          # adopted head + written chunks
+    assert pool.live_pages > len(live_before)
+    adopted = [pid for pid in live_before if pool.pages[pid].refs == 2]
+    assert len(adopted) == cfg.num_layers * 2    # head pages: tree + seq
+
+    assert session.cancel(long_req)
+    # exactly the cancelled suffix pages died; every pinned page
+    # survives with the tree as its sole holder again
+    assert set(pool.pages) == live_before
+    assert all(pool.pages[pid].refs == 1 for pid in live_before)
+    assert len(session.result(long_req)) == 0    # no token was produced
+
+    session.close()
+    assert pool.live_pages == 0
+
+
+# ---------------------------------------------------------------------------
+# Eviction under pool pressure
+# ---------------------------------------------------------------------------
+def test_pins_evict_lru_under_pool_pressure(cfg, params):
+    """Distinct prompts grow the tree until the page budget forces LRU
+    eviction of the oldest exclusive pins — admission keeps working and
+    every request completes."""
+    L = cfg.num_layers
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, 3 * T).astype(np.int32)
+               for _ in range(4)]
+
+    eng, pool = _engine(cfg, params, capacity_pages=8 * L)
+    session = ServeSession(eng, capacity=20, max_active=1)
+    reqs = [Request(p.copy(), 4) for p in prompts]
+    for r in reqs:
+        assert session.submit(r)
+    _drive(session)
+    for r in reqs:
+        assert len(session.result(r)) == 4
+    assert session.prefix_index.stats["evicted"] > 0
+    # the budget held: pins + live work never exceeded capacity
+    assert session.peak_live_pages <= 8 * L
+    session.close()
+    assert pool.live_pages == 0
+
+
+# ---------------------------------------------------------------------------
+# Tree unit behaviour over a bare pool
+# ---------------------------------------------------------------------------
+def test_radix_tree_pin_match_protect_clear():
+    pool = PagedKVPool(page_tokens=2)
+    toks = np.arange(6, dtype=np.int32)
+    hashes = prefix_page_hashes(toks, 2)
+    rng = np.random.default_rng(6)
+    for p, h in enumerate(hashes):
+        k = rng.standard_normal((2, 1, 4)).astype(np.float32)
+        pool.put(0, k, k, layer=0, content_hash=h)
+    tree = RadixPrefixCache(pool, num_layers=1)
+    assert tree.insert(hashes) == 3
+    assert tree.insert(hashes) == 0          # idempotent: path re-touched
+    pool.free(0)                             # owner retires; pins hold
+    assert pool.live_pages == 3 and tree.pinned_pages() == 3
+
+    m = tree.match(hashes, limit=2)
+    assert m.pages == 2 and m.hashes == hashes[:2]
+    assert tree.match([hashes[1]]).pages == 0    # cumulative: no mid-entry
+
+    # protected head survives; leaf-first eviction frees the rest
+    assert tree.reclaimable_pages(protect=frozenset(hashes[:1])) == 2
+    freed = tree.make_room(0, 3, protect=frozenset(hashes[:1]))
+    assert freed == 2 and pool.live_pages == 1
+    assert tree.match(hashes).pages == 1
+
+    tree.clear()
+    assert pool.live_pages == 0 and tree.nodes() == 0

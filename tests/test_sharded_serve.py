@@ -93,6 +93,34 @@ def test_sharded_continuous_matches_single_device(cfg, params):
     assert len(eng.kv_pool.pages) == 0
 
 
+@needs8
+@pytest.mark.parametrize("spec_k", [1, 4])
+def test_sharded_chunked_prefill_matches_monolithic(cfg, params, spec_k):
+    """Radix-adopted + chunked-prefill serving on a 2x2 mesh is
+    token-for-token identical to the monolithic-prefill path (the radix
+    tree keys per data shard, so adoption never pulls a remote page);
+    plain and k=4 speculative."""
+    def shared_head():
+        rng = np.random.default_rng(7)
+        head = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+        rs = []
+        for i in range(4):
+            tail = rng.integers(0, cfg.vocab_size, 5 + i).astype(np.int32)
+            rs.append(Request(np.concatenate([head, tail]), 3 + i,
+                              speculate=spec_k if spec_k > 1 else None))
+        return rs
+
+    kw = {"speculate": spec_k, "draft": "ngram"} if spec_k > 1 else {}
+    ref = _engine(cfg, params, (2, 2), **kw)
+    outs_ref = ref.serve(shared_head(), max_active=2,
+                         chunked_prefill=False, radix=False)
+    eng = _engine(cfg, params, (2, 2), **kw)
+    outs = eng.serve(shared_head(), max_active=2)
+    for a, b in zip(outs_ref, outs):
+        np.testing.assert_array_equal(a, b)
+    assert len(eng.kv_pool.pages) == 0     # serve() dropped the pins
+
+
 # ---------------------------------------------------------------------------
 # Transfer accounting: 2 host<->device crossings per token, mesh-blind
 # ---------------------------------------------------------------------------
