@@ -1,8 +1,8 @@
 """Trace-driven traffic benchmark: open-loop load against the async
 streaming front end, persisted as a per-PR perf trajectory.
 
-Each standing mix in `repro.serve.traffic.MIXES` (uniform,
-prefix-heavy, speculative) replays twice on one engine — the first pass
+Each standing mix in `repro.serve.traffic.MIXES` (uniform, prefix-heavy,
+speculative, chunked, overload) replays twice on one engine — the first pass
 warms the fused-step jit cache for the trace's shapes, the second is
 measured — and reports client-observed latency from `serve.metrics`:
 throughput, p50/p99 TTFT, p50/p99 per-token latency, plus pool-side
@@ -35,7 +35,7 @@ MAX_RUNS = 50          # history entries kept in BENCH_traffic.json
 
 
 def _bench_mixes(mix_names=("uniform", "prefix_heavy", "speculative",
-                            "chunked")):
+                            "chunked", "overload")):
     params = None
     results = {}
     mesh = mesh_from_env()        # REPRO_SERVE_MESH=DxM shards the engines
@@ -78,7 +78,7 @@ def run():
     rows = []
     for name, r in results.items():
         ok = r["cancelled_pages_freed"] and r["n_done"] + r["n_cancelled"] \
-            + r["n_rejected"] == r["n_trace"]
+            + r["n_rejected"] + r.get("n_errors", 0) == r["n_trace"]
         rows.append((f"traffic.{name}.throughput",
                      us_per(r["wall_s"], r["tokens"]),
                      f"{r['throughput_tok_s']:.1f}tok_s"))
@@ -98,16 +98,30 @@ def run():
                          f"hit{r['prefix_hit_rate']:.2f}_decodep99adm"
                          f"{p99:.2f}ms" if p99 is not None else
                          f"hit{r['prefix_hit_rate']:.2f}"))
+        if r.get("slo_attainment") is not None:
+            # SLO-aware overload control: attainment over the deadline-
+            # carrying population plus the preempt/swap work done for it
+            rows.append((f"traffic.{name}.slo", r["slo_attainment"],
+                         f"miss{r['deadline_misses']}"
+                         f"_preempt{r['preemptions']}"
+                         f"_resume{r['n_resumed']}"
+                         f"_swapKiB{r['swap_out_bytes'] // 1024}"))
         if not ok:
             raise AssertionError(
                 f"traffic mix {name}: pages leaked or requests lost "
-                f"({json.dumps({k: r[k] for k in ('n_done', 'n_cancelled', 'n_rejected', 'n_trace', 'pool_live_pages_end')})})")
+                f"({json.dumps({k: r.get(k) for k in ('n_done', 'n_cancelled', 'n_rejected', 'n_errors', 'n_trace', 'pool_live_pages_end')})})")
     # the prefix-heavy mix must actually exercise prefix reuse, one way
     # or the other: dedup'd hashed puts or radix adoption
     ph = results.get("prefix_heavy", {})
     if ph and ph.get("pool_shared_puts", 0) + \
             ph.get("pool_adopted_pages", 0) <= 0:
         raise AssertionError("prefix_heavy mix shared no pages")
+    # the overload mix must exercise the SLO machinery: deadlines were
+    # attached, so attainment must be measurable (preemption/shed counts
+    # vary with host timing and are reported, not asserted)
+    ov = results.get("overload", {})
+    if ov and ov.get("slo_attainment") is None:
+        raise AssertionError("overload mix recorded no SLO attainment")
     return rows
 
 

@@ -98,13 +98,19 @@ class SibylAgent:
         frac = min(1.0, self.t / max(c.eps_decay_steps, 1))
         return c.eps + (c.eps_final - c.eps) * frac
 
+    def q_values(self, obs: np.ndarray) -> np.ndarray:
+        """Q(obs, ·) for every action WITHOUT committing a decision —
+        for adapters that rank many candidates per decision (the serve
+        preemption policy scores each eligible victim's preempt-advantage
+        Q[1] - Q[0]) and feed transitions back via `experience`."""
+        return np.asarray(_q(self.params, jnp.asarray(obs[None])))[0]
+
     def act(self, obs: np.ndarray, n_devices: int) -> int:
         n_act = min(self.cfg.n_actions, n_devices)
         if self.rng.random() < self.epsilon:
             a = int(self.rng.integers(0, n_act))
         else:
-            q = np.asarray(_q(self.params, jnp.asarray(obs[None])))[0]
-            a = int(np.argmax(q[:n_act]))
+            a = int(np.argmax(self.q_values(obs)[:n_act]))
         self._pending = (obs.copy(), a)
         return a
 

@@ -99,6 +99,15 @@ def main():
     ap.add_argument("--no-radix", action="store_true",
                     help="disable the radix prefix cache (no cross-"
                          "request prompt-page adoption or pinning)")
+    ap.add_argument("--no-preempt", action="store_true",
+                    help="disable SLO-aware preemption: more-urgent "
+                         "arrivals wait for rows instead of parking "
+                         "eligible active requests on the host tier")
+    ap.add_argument("--sibyl-preempt", action="store_true",
+                    help="rank preemption victims with the Sibyl DQN "
+                         "(learned from decode latency + deadline-miss "
+                         "penalties) instead of the deterministic "
+                         "least-progress fallback")
     ap.add_argument("--knee-cache", default=None, metavar="PATH",
                     help="JSON cache of backend='auto' knee points (e.g. "
                          "<checkpoint-dir>/knee_cache.json): loaded at "
@@ -174,7 +183,20 @@ def _print_summary(summary: dict) -> None:
             f"p50 {d['p50_ms']:.2f}ms  p99 {d['p99_ms']:.2f}ms"
     print(f"requests: {summary['n_done']} done, "
           f"{summary['n_cancelled']} cancelled, "
-          f"{summary['n_rejected']} rejected")
+          f"{summary['n_rejected']} rejected, "
+          f"{summary.get('n_errors', 0)} errors")
+    if summary.get("slo_attainment") is not None:
+        print(f"slo attainment: {summary['slo_attainment']:.2f} "
+              f"({summary['deadline_misses']} misses)")
+    if summary.get("preemptions"):
+        rw = summary["resume_wait"]
+        wait = "n/a" if rw["p50_ms"] is None else \
+            f"p50 {rw['p50_ms']:.2f}ms p99 {rw['p99_ms']:.2f}ms"
+        print(f"preemptions: {summary['preemptions']} "
+              f"({summary.get('n_resumed', 0)} resumed, "
+              f"swap out {summary.get('swap_out_bytes', 0)}B / "
+              f"in {summary.get('swap_in_bytes', 0)}B, "
+              f"resume wait {wait})")
     print(f"tokens: {summary['tokens']} in {summary['wall_s']:.2f}s "
           f"({summary['throughput_tok_s']:.1f} tok/s)")
     print(f"queue wait: {ms(summary['queue_wait'])}")
@@ -197,6 +219,10 @@ def _run_frontend(args, cfg, eng, pool):
     from repro.serve.frontend import AsyncServeFrontend
     from repro.serve.traffic import parse_spec, run_trace
 
+    preempt_policy = None
+    if args.sibyl_preempt:
+        from repro.serve.placement import SibylPreemption
+        preempt_policy = SibylPreemption()
     if args.trace:
         summary = run_trace(eng, parse_spec(args.trace),
                             max_active=args.max_active,
@@ -204,7 +230,9 @@ def _run_frontend(args, cfg, eng, pool):
                             chunked_prefill=False
                             if args.no_chunked_prefill else None,
                             prefill_budget=args.prefill_budget,
-                            radix=False if args.no_radix else None)
+                            radix=False if args.no_radix else None,
+                            preempt=not args.no_preempt,
+                            preempt_policy=preempt_policy)
         _print_summary(summary)
         print(f"kv pool: {pool.stats} live_pages={len(pool.pages)}")
         return
@@ -221,7 +249,9 @@ def _run_frontend(args, cfg, eng, pool):
                 speculate=args.speculate or None,
                 chunked_prefill=False if args.no_chunked_prefill else None,
                 prefill_budget=args.prefill_budget,
-                radix=False if args.no_radix else None) as front:
+                radix=False if args.no_radix else None,
+                preempt=not args.no_preempt,
+                preempt_policy=preempt_policy) as front:
             handles = [await front.submit(r) for r in reqs]
             outs = [await h.result() for h in handles]
             return front.metrics.summary(), outs

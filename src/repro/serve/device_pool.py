@@ -35,6 +35,7 @@ of scatter shapes as the pool grows.
 from __future__ import annotations
 
 import functools
+import weakref
 
 import jax
 import jax.numpy as jnp
@@ -127,6 +128,9 @@ class DevicePagePool:
     through a free list.
     """
 
+    # every live mirror, for test-teardown invariant sweeps (conftest)
+    _instances: "weakref.WeakSet[DevicePagePool]" = weakref.WeakSet()
+
     def __init__(self, num_layers: int, page_tokens: int, hkv: int, hd: int,
                  init_slots: int = 8, dtype=jnp.float32, plan=None):
         self.num_layers = num_layers
@@ -172,6 +176,7 @@ class DevicePagePool:
         self._dirty: set[int] = set()               # slots ever written
         self.writes = 0     # device scatter calls (bench/test instrumentation)
         self.reads = 0      # device->host pulls (fill readbacks)
+        DevicePagePool._instances.add(self)
 
     def _key(self, pid: int, shard: int):
         return pid if self.shards == 1 else (shard, pid)
@@ -288,6 +293,31 @@ class DevicePagePool:
         return (np.asarray(self.arrays[0][:, slot]),
                 np.asarray(self.arrays[1][:, slot]))
 
+    def check_invariants(self) -> None:
+        """Structural self-check (satellite: every serve-suite teardown):
+        free lists hold unique in-range slots from their own shard's range
+        and are disjoint from every mapped slot; no two group keys share a
+        slot. Raises AssertionError on the first breach."""
+        used: dict[int, object] = {}
+        for key, slot in self.slot_of.items():
+            assert 0 <= slot < self.capacity, \
+                f"slot_of[{key}] = {slot} outside capacity {self.capacity}"
+            assert slot not in used, \
+                f"slot {slot} mapped by both {used[slot]} and {key}"
+            used[slot] = key
+        for shard, free in enumerate(self._free):
+            uniq = set(free)
+            assert len(uniq) == len(free), \
+                f"shard {shard} free list holds duplicate slots"
+            for slot in uniq:
+                assert 0 <= slot < self.capacity, \
+                    f"shard {shard} freed out-of-range slot {slot}"
+                assert self.shard_of_slot(slot) == shard, \
+                    f"slot {slot} on shard {shard}'s free list belongs to " \
+                    f"shard {self.shard_of_slot(slot)}"
+                assert slot not in used, \
+                    f"slot {slot} is both free and mapped by {used[slot]}"
+
     # -- sync ----------------------------------------------------------------
     def sync(self, pool, groups, shards=None):
         """Bring the mirror current for an iterable of page groups (each a
@@ -323,6 +353,10 @@ class DevicePagePool:
                 key = self._key(pid, shard)
                 if self._synced.get(key) == page.version:
                     continue
+                if page.tier == "host":
+                    raise RuntimeError(
+                        f"sync asked to mirror parked (host-tier) page {pid}"
+                        " — swap the sequence in before scheduling it")
                 idx = layer * c + slot
                 if page.tier == "fast":
                     k, v = page.data

@@ -31,6 +31,7 @@ for any draft; both engines report per-request ``accept_rate`` and
 from __future__ import annotations
 
 import functools
+import os
 import time
 from typing import Optional
 
@@ -45,6 +46,7 @@ from repro.serve.kvcache import PagedKVPool, pad_caches
 from repro.serve.paged_decode import (MODES, PagedKVState, build_fused_step,
                                       extract_prefill_pages,
                                       paged_decode_step, supports_paged)
+from repro.serve.preemption import LRUVictimPolicy, RequestView
 from repro.serve.prefix_cache import RadixPrefixCache
 from repro.serve.scheduler import (Admission,  # noqa: F401 (re-export)
                                    Request, Scheduler, effective_speculate,
@@ -496,7 +498,9 @@ class ServeEngine:
               prefix_cache: bool = True, metrics=None,
               chunked_prefill: Optional[bool] = None,
               prefill_budget: int = 1,
-              radix: Optional[bool] = None) -> list[np.ndarray]:
+              radix: Optional[bool] = None,
+              preempt: bool = True,
+              preempt_policy=None) -> list[np.ndarray]:
         """Continuous-batching decode: requests join free rows mid-flight
         and retire at their own lengths; finished requests' pages are
         freed. Returns outputs in submission order. Greedy outputs match
@@ -525,7 +529,9 @@ class ServeEngine:
                                temperature=temperature, seed=seed,
                                prefix_cache=prefix_cache, metrics=metrics,
                                chunked_prefill=chunked_prefill,
-                               prefill_budget=prefill_budget, radix=radix)
+                               prefill_budget=prefill_budget, radix=radix,
+                               preempt=preempt,
+                               preempt_policy=preempt_policy)
         self.last_rejections = []
         for r in requests:
             verdict = session.submit(r)
@@ -552,17 +558,28 @@ class ServeEngine:
 # ---------------------------------------------------------------------------
 # Step-granular continuous batching: the resumable serving core
 # ---------------------------------------------------------------------------
+class SwapInError(RuntimeError):
+    """A parked sequence's host pages could not be restored to the device
+    (injected via ``REPRO_SERVE_FAULT=swap_fail:p`` for testing). The
+    session converts it into a structured per-request error event — the
+    victim's pages free, the rest of the batch is untouched."""
+
+
 class StreamEvent:
     """Per-request outcome of one `ServeSession.step`: the tokens the
     request emitted this step (the admission prefill token included) and
     whether it just finished. The streamed tokens are already eos/max_new
     clamped — concatenating a request's events reproduces its final
-    output exactly."""
+    output exactly. ``error`` names a structured mid-flight failure
+    (e.g. ``"swap_fail"``) on a terminal event; the tokens streamed
+    before it stand as the partial result."""
 
-    __slots__ = ("request", "tokens", "done")
+    __slots__ = ("request", "tokens", "done", "error")
 
-    def __init__(self, request: Request, tokens: list, done: bool = False):
+    def __init__(self, request: Request, tokens: list, done: bool = False,
+                 error: Optional[str] = None):
         self.request, self.tokens, self.done = request, tokens, done
+        self.error = error
 
 
 class _SessionRec:
@@ -575,7 +592,8 @@ class _SessionRec:
         self.req = req
         self.admission = admission
         self.metrics = metrics
-        self.status = "waiting"   # waiting|active|done|cancelled|rejected
+        # waiting|active|preempted|done|cancelled|rejected|error
+        self.status = "waiting"
         self.active: Optional[_Active] = None
         self.row = -1
         self.result: Optional[np.ndarray] = None
@@ -607,7 +625,8 @@ class ServeSession:
                  greedy: bool = True, temperature: float = 1.0,
                  seed: int = 0, prefix_cache: bool = True, metrics=None,
                  chunked_prefill: Optional[bool] = None,
-                 prefill_budget: int = 1, radix: Optional[bool] = None):
+                 prefill_budget: int = 1, radix: Optional[bool] = None,
+                 preempt: bool = True, preempt_policy=None):
         engine._require_paged()
         k = max(1, engine.speculate if speculate is None else int(speculate))
         engine._check_spec_width(k)
@@ -677,6 +696,29 @@ class ServeSession:
         self._rows_dirty = True   # host-known token entered/left a row
         self.steps = 0
         self.peak_live_pages = 0
+        # SLO-aware preemption: when the admission round leaves a
+        # strictly-more-urgent head blocked, park an eligible active row
+        # (swap its KV to the host tier) to free a seat. Eligibility is
+        # the scheduler's deterministic rule; the policy only ranks.
+        self.preempt_enabled = bool(preempt)
+        self.preempt_policy = preempt_policy if preempt_policy is not None \
+            else LRUVictimPolicy()
+        self._preempt_observe = getattr(self.preempt_policy, "observe",
+                                        None)
+        self.preemptions = 0      # rows parked to the host tier
+        self.resumes = 0          # parked rows re-placed
+        self._step_misses = 0     # deadline misses since last policy reward
+        self._pending_events: list[StreamEvent] = []
+        # fault injection (tests): REPRO_SERVE_FAULT=swap_fail:p makes a
+        # resume's swap-in fail with probability p — the victim surfaces
+        # a structured error event, the batch keeps decoding
+        self._fault: Optional[tuple[str, float]] = None
+        fault = os.environ.get("REPRO_SERVE_FAULT")
+        if fault:
+            kind, _, p = fault.partition(":")
+            self._fault = (kind, float(p) if p else 1.0)
+        self._fault_rng = np.random.default_rng(seed ^ 0x5EED)
+        self._debug = bool(os.environ.get("REPRO_SERVE_DEBUG"))
 
     # -- lifecycle ----------------------------------------------------------
     @property
@@ -722,6 +764,8 @@ class ServeSession:
         else:
             verdict = self.sched.submit(req)
         m = self.metrics.submit() if self.metrics is not None else None
+        if m is not None:
+            m.deadline_s = req.deadline
         rec = _SessionRec(req, verdict, m)
         self._recs[id(req)] = rec
         if not verdict:
@@ -740,12 +784,21 @@ class ServeSession:
         result. Returns False if it already finished/was never
         submitted."""
         rec = self._recs.get(id(req))
-        if rec is None or rec.status in ("done", "cancelled", "rejected"):
+        if rec is None or rec.status in ("done", "cancelled", "rejected",
+                                         "error"):
             return False
         outs: list = []
         stats = SpecStats()
         if rec.status == "waiting":
             self.sched.remove_waiting(req)
+        elif rec.status == "preempted":
+            # a swapped-out sequence: it sits in the waiting queue
+            # (parked) and holds no row — free its host-tier pages and
+            # parked tail, drop the scheduler's parked bookkeeping
+            act = rec.active
+            outs, stats = act.outs, act.stats
+            self.sched.remove_waiting(req)
+            self.state.free_seq(act.seq)
         else:
             act = rec.active
             outs, stats = act.outs, act.stats
@@ -804,6 +857,10 @@ class ServeSession:
     # -- the step -----------------------------------------------------------
     def _finish(self, rec: _SessionRec):
         act = rec.active
+        if rec.req.deadline is not None and self.sched.overdue(rec.req):
+            # finished past its SLO: feeds the preemption policy's
+            # per-step miss penalty (the learned victim ranking)
+            self._step_misses += 1
         self.state.free_seq(act.seq)
         self._rows[rec.row] = None
         self.sched.retire(rec.req)
@@ -817,33 +874,199 @@ class ServeSession:
             rec.metrics.on_finish(len(rec.result),
                                   accept_rate=d.get("accept_rate"))
 
+    # -- preemption / resume ------------------------------------------------
+    def preempt(self, req: Request) -> bool:
+        """Park an active request: its KV pages swap to the host tier,
+        its row and reservation free for more urgent work, and it
+        re-enters the waiting queue at its urgency position. Resuming
+        (automatic at a later admission round, or explicit via `resume`)
+        restores the pages bit-identically, so its greedy output is
+        token-for-token what the never-preempted run produces. Returns
+        False unless the request is currently active."""
+        rec = self._recs.get(id(req))
+        if rec is None or rec.status != "active":
+            return False
+        self._preempt_rec(rec)
+        return True
+
+    def resume(self, req: Request) -> bool:
+        """Explicitly un-park a preempted request now (the admission loop
+        also resumes parked requests by urgency order on its own).
+        Returns False if it is not parked or its shard has no free
+        row/page headroom yet."""
+        rec = self._recs.get(id(req))
+        if rec is None or rec.status != "preempted":
+            return False
+        if not self.sched.try_resume(req):
+            return False
+        return self._place_resumed(rec, self._pending_events)
+
+    def _preempt_rec(self, rec: _SessionRec):
+        act = rec.active
+        self.state.swap_out(act.seq)
+        self._rows[rec.row] = None
+        rec.row = -1
+        rec.status = "preempted"
+        self.sched.preempt(rec.req)
+        self._rows_dirty = True
+        self.preemptions += 1
+        if rec.metrics is not None:
+            rec.metrics.on_preempt()
+
+    def _place_resumed(self, rec: _SessionRec, events: list) -> bool:
+        """Give a just-re-reserved parked request a decode row back and
+        swap its pages in. A failed swap-in (fault injection) surfaces as
+        a structured terminal error event: the scheduler reservation and
+        every page the victim held free, nothing else in the batch is
+        touched."""
+        req, act = rec.req, rec.active
+        shard = self.sched.assigned_shard(req)
+        rps = len(self._rows) // self.sched.data_shards
+        row_i = next(i for i in range(shard * rps, (shard + 1) * rps)
+                     if self._rows[i] is None)
+        try:
+            if self._fault is not None and self._fault[0] == "swap_fail" \
+                    and self._fault_rng.random() < self._fault[1]:
+                # fires BEFORE any state mutation: the sequence is still
+                # cleanly parked, so free_seq below releases exactly its
+                # host pages + parked tail
+                raise SwapInError(
+                    f"injected swap-in fault for seq {act.seq}")
+            self.state.swap_in(act.seq)
+        except SwapInError as e:
+            self.sched.retire(req)
+            self.state.free_seq(act.seq)
+            rec.status = "error"
+            rec.active = None
+            rec.result = np.array(act.outs[:req.max_new_tokens], np.int64)
+            d = act.stats.as_dict()
+            d["tokens"] = len(rec.result)
+            d["error"] = "swap_fail"
+            d["detail"] = str(e)
+            rec.stats = d
+            if rec.metrics is not None:
+                rec.metrics.on_error("swap_fail")
+            events.append(StreamEvent(req, [], done=True,
+                                      error="swap_fail"))
+            return False
+        self._rows[row_i] = act
+        rec.row = row_i
+        rec.status = "active"
+        self._rows_dirty = True
+        self.resumes += 1
+        if rec.metrics is not None:
+            rec.metrics.on_resume()
+        return True
+
+    def _maybe_preempt(self) -> bool:
+        """One preemption pass after a blocked admission round: if the
+        waiting head strictly outranks some active row (scheduler's
+        deterministic eligibility), ask the policy which eligible victim
+        to park and park it. Returns True when a row was freed (the
+        caller re-runs admission). Candidates shrink every pass, so the
+        admit/preempt loop terminates."""
+        if not self.preempt_enabled:
+            return False
+        sched = self.sched
+        head = sched.head_blocked()
+        if head is None:
+            return False
+        # a parked head can only resume on its own shard — victims on
+        # other shards free nothing it can use
+        need_shard = sched.assigned_shard(head) if sched.is_parked(head) \
+            else None
+        cands = [rec for rec in self._recs.values()
+                 if rec.status == "active"
+                 and sched.preempts(head, rec.req)
+                 and (need_shard is None
+                      or sched.assigned_shard(rec.req) == need_shard)]
+        if not cands:
+            return False
+        now = sched._clock()
+
+        def slack(r):
+            if r.deadline is None:
+                return None
+            sub = sched._submit_s.get(id(r))
+            return None if sub is None else sub + r.deadline - now
+
+        views = []
+        for rec in cands:
+            act = rec.active
+            views.append(RequestView(
+                priority=rec.req.priority,
+                deadline_slack_s=slack(rec.req),
+                tokens_done=len(act.outs),
+                tokens_left=rec.req.max_new_tokens - len(act.outs),
+                prefilling=act.prefilling,
+                pages=len(self.pool.seq_pages(act.seq)),
+                admit_seq=sched._order.get(id(rec.req), 0)))
+        head_view = RequestView(
+            priority=head.priority, deadline_slack_s=slack(head),
+            tokens_left=head.max_new_tokens,
+            queue_depth=len(sched.waiting))
+        pick = self.preempt_policy.pick(head_view, views)
+        if pick is None:
+            return False
+        self._preempt_rec(cands[pick])
+        return True
+
     def _reject_late(self, events: list):
-        """Surface scheduler late rejections (queue head that can never
-        fit even after full pin eviction): the request is accounted like
-        a submit-time rejection, plus a terminal empty event so streaming
-        consumers finalize it."""
+        """Surface scheduler late rejections: a queue head that can never
+        fit even after full pin eviction, a head whose deadline expired
+        while it waited, or a parked request no batch can re-host. A
+        never-admitted request is accounted like a submit-time rejection;
+        a shed *parked* one already did work — its swapped pages free and
+        it terminates as a structured error with its partial result."""
         for req, verdict in self.sched.late_rejections:
             rec = self._recs[id(req)]
             rec.admission = verdict
+            if rec.active is not None:       # shed while parked
+                act = rec.active
+                self.state.free_seq(act.seq)
+                rec.status = "error"
+                rec.active = None
+                rec.result = np.array(act.outs[:req.max_new_tokens],
+                                      np.int64)
+                d = act.stats.as_dict()
+                d["tokens"] = len(rec.result)
+                d["error"] = verdict.reason
+                d.update(verdict.as_dict())
+                rec.stats = d
+                if rec.metrics is not None:
+                    rec.metrics.on_error(verdict.reason)
+                events.append(StreamEvent(req, [], done=True,
+                                          error=verdict.reason))
+                continue
             rec.status = "rejected"
             rec.stats = {"rejected": verdict.reason, "tokens": 0,
                          **verdict.as_dict()}
             if rec.metrics is not None:
                 rec.metrics.on_reject(verdict.reason)
-            events.append(StreamEvent(req, [], done=True))
+            events.append(StreamEvent(req, [], done=True,
+                                      error=verdict.reason))
         self.sched.late_rejections.clear()
 
     def _admit(self, events: list):
         eng = self.engine
         while True:
             # loop: an admitted request finishing at its very first token
-            # frees its row + reservation, unblocking the queue head again
+            # frees its row + reservation, unblocking the queue head
+            # again; a blocked round may park an eligible active row
+            # (preemption) and retry
             batch = self.sched.admit()
             self._reject_late(events)
             if not batch:
+                if self._maybe_preempt():
+                    continue
                 return
             for req in batch:
                 rec = self._recs[id(req)]
+                if rec.status == "preempted":
+                    # a parked request the scheduler just re-reserved:
+                    # swap its pages back in and rejoin mid-decode
+                    self._place_resumed(rec, events)
+                    continue
                 seq = eng._next_seq
                 eng._next_seq += 1
                 # the scheduler picked the request's data shard at admit();
@@ -935,7 +1158,8 @@ class ServeSession:
         while every decode row keeps decoding in the same fused launch —
         long prompts admit page-by-page without stalling in-flight
         requests."""
-        events: list[StreamEvent] = []
+        events: list[StreamEvent] = list(self._pending_events)
+        self._pending_events.clear()
         self._admit(events)
         rows = self._rows
         if all(a is None for a in rows):
@@ -1033,6 +1257,7 @@ class ServeSession:
         eng.stats["decode_s"] += dt
         eng.stats["decode_steps"] += 1
         self.steps += 1
+        self.sched.observe_step(dt)   # service-rate EMA (deadline sheds)
         if self._observe is not None:
             self._observe(state.gather_s - g0,
                           pool.stats["fast_hits"] - hits0[0],
@@ -1086,5 +1311,16 @@ class ServeSession:
             # per-token wall time of decode work that shared its fused
             # step with a prefill chunk — "decode p99 during admission"
             self.prefill_step_decode_ms.append(dt * 1e3 / decode_tokens)
+        if self._preempt_observe is not None:
+            # per-step reward for the learned victim ranking: decode
+            # latency + the deadline misses the finishes above counted
+            self._preempt_observe(dt, self._step_misses)
+            self._step_misses = 0
+        if self._debug:     # REPRO_SERVE_DEBUG: per-step pool invariants
+            pins = self.prefix_index.pin_counts() \
+                if self.prefix_index is not None else None
+            pool.check_invariants(pins=pins)
+            if state._device is not None:
+                state._device.check_invariants()
         self.peak_live_pages = max(self.peak_live_pages, pool.live_pages)
         return events

@@ -60,6 +60,10 @@ class StreamHandle:
         self.admission: Optional[Admission] = None
         self.cancelled = False
         self.error: Optional[BaseException] = None
+        # structured mid-flight failure reason ("swap_fail", a late
+        # deadline shed, ...) — the stream still ends cleanly with the
+        # tokens delivered so far as the partial result
+        self.error_reason: Optional[str] = None
         self._queue: asyncio.Queue = asyncio.Queue()
         self._done = asyncio.Event()
         self._result: Optional[np.ndarray] = None
@@ -131,14 +135,15 @@ class AsyncServeFrontend:
                  temperature: float = 1.0, seed: int = 0,
                  prefix_cache: bool = True, metrics=None,
                  chunked_prefill: Optional[bool] = None,
-                 prefill_budget: int = 1, radix: Optional[bool] = None):
+                 prefill_budget: int = 1, radix: Optional[bool] = None,
+                 preempt: bool = True, preempt_policy=None):
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.session = ServeSession(
             engine, capacity=capacity, max_active=max_active,
             speculate=speculate, greedy=greedy, temperature=temperature,
             seed=seed, prefix_cache=prefix_cache, metrics=self.metrics,
             chunked_prefill=chunked_prefill, prefill_budget=prefill_budget,
-            radix=radix)
+            radix=radix, preempt=preempt, preempt_policy=preempt_policy)
         self.engine = engine
         self.max_queue = max_queue
         self._handles: dict[int, StreamHandle] = {}
@@ -234,6 +239,8 @@ class AsyncServeFrontend:
                     if handle is None:        # cancelled mid-step
                         continue
                     handle._push(ev.tokens)
+                    if ev.error is not None:
+                        handle.error_reason = ev.error
                     if ev.done:
                         # a late pool-capacity rejection replaces the
                         # admission verdict — refresh so handle.rejected

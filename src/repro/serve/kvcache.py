@@ -15,6 +15,7 @@ decode-step gather.
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from collections import OrderedDict
 from typing import Optional
 
@@ -64,13 +65,14 @@ from repro.kernels.paged_attention.quant import (  # noqa: E402,F401
 
 
 # ---------------------------------------------------------------------------
-# Paged KV pool with two tiers (HBM "fast" / host "slow") — Sibyl's substrate
+# Paged KV pool with three tiers (device "fast" float / device "slow" int8 /
+# host "host" swap space) — Sibyl's substrate
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
 class Page:
     page_id: int
     seq_id: int        # first owner (refs may span several sequences)
-    tier: str          # "fast" | "slow"
+    tier: str          # "fast" | "slow" | "host" (swapped out, no mirror)
     quantized: bool
     layer: int = 0     # model layer the page belongs to
     access_count: int = 0
@@ -80,6 +82,7 @@ class Page:
     content_hash: Optional[tuple] = None   # (layer, token-prefix hash)
     version: int = 0               # bumped on tier change (mirror sync key)
     nbytes: int = 0
+    resident_tier: Optional[str] = None  # pre-swap tier while tier == "host"
 
 
 def _data_nbytes(data) -> int:
@@ -94,12 +97,23 @@ def _data_nbytes(data) -> int:
 
 class PagedKVPool:
     """Page-granular KV store with tier placement decided by a policy object
-    (heuristic or Sibyl RL agent). Host tier stores pages int8-quantized.
+    (heuristic or Sibyl RL agent). The slow tier stores pages int8-quantized.
 
     ``capacity_pages`` is the soft total-page budget the serve scheduler's
     admission gate checks (`headroom()`); the pool itself never refuses a
     put — overflowing ``fast_capacity_pages`` LRU-demotes to slow instead.
+
+    A third "host" tier holds swapped-out (preempted) sequences:
+    `swap_out_seq` parks a sequence's exclusively-held pages on the host
+    *keeping their exact resident representation* (fast pages stay float,
+    slow pages stay int8) so `swap_in_seq` restores bit-identical content
+    and a resumed sequence decodes token-for-token as if never preempted.
+    Host pages don't count against `headroom()` and are unreachable via
+    `page_by_hash` (no dedup or radix pin can land on a parked page).
     """
+
+    # every live pool, for test-teardown invariant sweeps (conftest)
+    _instances: "weakref.WeakSet[PagedKVPool]" = weakref.WeakSet()
 
     def __init__(self, page_tokens: int = 128, fast_capacity_pages: int = 1024,
                  placement_policy=None, capacity_pages: Optional[int] = None):
@@ -115,10 +129,14 @@ class PagedKVPool:
         self._fast_lru: OrderedDict[int, None] = OrderedDict()
         self.clock = 0
         self.next_id = 0
+        self.host_pages = 0           # pages currently in the "host" tier
         self.recorder = None          # optional DecodeTraceRecorder
-        self.stats = {"fast_hits": 0, "slow_hits": 0, "evictions": 0,
-                      "fast_bytes": 0, "slow_bytes": 0, "freed": 0,
-                      "shared_puts": 0, "adopted_pages": 0}
+        self.stats = {"fast_hits": 0, "slow_hits": 0, "host_hits": 0,
+                      "evictions": 0, "fast_bytes": 0, "slow_bytes": 0,
+                      "host_bytes": 0, "freed": 0, "shared_puts": 0,
+                      "adopted_pages": 0, "swapped_out": 0, "swapped_in": 0,
+                      "swap_out_bytes": 0, "swap_in_bytes": 0}
+        PagedKVPool._instances.add(self)
 
     def _fast_pages(self):
         """Inspection helper only — the put/touch/evict hot paths must not
@@ -129,11 +147,17 @@ class PagedKVPool:
     def live_pages(self) -> int:
         return len(self.pages)
 
+    @property
+    def resident_pages(self) -> int:
+        """Pages on the device tiers — host-parked pages are excluded, so
+        a preempted sequence releases its whole budget footprint."""
+        return len(self.pages) - self.host_pages
+
     def headroom(self) -> float:
         """Pages left under the soft budget (inf when unbounded)."""
         if self.capacity_pages is None:
             return float("inf")
-        return self.capacity_pages - len(self.pages)
+        return self.capacity_pages - self.resident_pages
 
     def _record(self, page: Page, is_write: bool):
         if self.recorder is not None:
@@ -192,6 +216,8 @@ class PagedKVPool:
         if page.tier == "fast":
             self._fast_lru.move_to_end(pid)
             self.stats["fast_hits"] += 1
+        elif page.tier == "host":
+            self.stats["host_hits"] += 1
         else:
             self.stats["slow_hits"] += 1
         self._record(page, is_write=False)
@@ -217,7 +243,7 @@ class PagedKVPool:
 
     def get(self, pid: int):
         page = self.touch(pid)
-        if page.tier == "fast":
+        if not page.quantized:     # fast, or a host page swapped from fast
             return page.data
         (kq, ks), (vq, vs) = page.data
         return dequantize_page(kq, ks), dequantize_page(vq, vs)
@@ -270,8 +296,13 @@ class PagedKVPool:
     def _destroy(self, page: Page) -> None:
         del self.pages[page.page_id]
         self._fast_lru.pop(page.page_id, None)
-        if page.content_hash is not None:
-            self._by_hash.pop(page.content_hash, None)
+        # only drop the hash mapping if it still points at THIS page — a
+        # swapped-out page's hash may have been re-claimed by a new page
+        if page.content_hash is not None and \
+                self._by_hash.get(page.content_hash) == page.page_id:
+            del self._by_hash[page.content_hash]
+        if page.tier == "host":
+            self.host_pages -= 1
         self.stats[f"{page.tier}_bytes"] -= page.nbytes
         self.stats["freed"] += 1
 
@@ -296,6 +327,131 @@ class PagedKVPool:
                 self._destroy(page)
                 destroyed.append((pid, page.layer))
         return destroyed
+
+    # -- host tier: whole-sequence swap (preemption substrate) --------------
+    def swap_out_seq(self, seq_id: int) -> list[tuple]:
+        """Park a sequence's exclusively-held pages on the host tier.
+
+        Refcount- and radix-pin-aware: pages with ``refs > 1`` (shared with
+        another live sequence or pinned by the radix tree) stay resident —
+        they still serve other readers, so only this sequence's private KV
+        leaves the device budget. Parked pages keep their exact resident
+        representation (float stays float, int8 stays int8): swap-in is a
+        bit-identical restore, which is what makes a resumed sequence's
+        greedy output token-for-token equal to the never-preempted run.
+        The page's content hash is unregistered so no new put/adoption can
+        dedup onto a page with no device mirror.
+
+        Returns the parked ``(page_id, layer)`` pairs so the caller can
+        release the matching device slots.
+        """
+        swapped: list[tuple] = []
+        seen: set[int] = set()
+        for key in [k for k in self._by_seq if k[0] == seq_id]:
+            for pid in self._by_seq[key]:
+                if pid in seen:
+                    continue
+                seen.add(pid)
+                page = self.pages[pid]
+                if page.refs > 1 or page.tier == "host":
+                    continue
+                self.stats[f"{page.tier}_bytes"] -= page.nbytes
+                if page.tier == "fast":
+                    self._fast_lru.pop(pid, None)
+                page.resident_tier = page.tier
+                page.tier = "host"
+                page.version += 1
+                if page.content_hash is not None and \
+                        self._by_hash.get(page.content_hash) == pid:
+                    del self._by_hash[page.content_hash]
+                self.host_pages += 1
+                self.stats["host_bytes"] += page.nbytes
+                self.stats["swapped_out"] += 1
+                self.stats["swap_out_bytes"] += page.nbytes
+                swapped.append((pid, page.layer))
+        return swapped
+
+    def swap_in_seq(self, seq_id: int) -> list[tuple]:
+        """Bring a parked sequence's host pages back to their pre-swap
+        device tier, bit-identical (the representation was preserved).
+        The version bump makes the next device `sync` re-upload them; the
+        content hash re-registers unless a newer page claimed it while
+        the sequence was parked. Returns restored ``(page_id, layer)``."""
+        restored: list[tuple] = []
+        seen: set[int] = set()
+        for key in [k for k in self._by_seq if k[0] == seq_id]:
+            for pid in self._by_seq[key]:
+                if pid in seen:
+                    continue
+                seen.add(pid)
+                page = self.pages[pid]
+                if page.tier != "host":
+                    continue
+                tier = page.resident_tier or "slow"
+                page.tier, page.resident_tier = tier, None
+                page.version += 1
+                self.host_pages -= 1
+                self.stats["host_bytes"] -= page.nbytes
+                self.stats[f"{tier}_bytes"] += page.nbytes
+                self.stats["swapped_in"] += 1
+                self.stats["swap_in_bytes"] += page.nbytes
+                if tier == "fast":
+                    self._fast_lru[pid] = None
+                if page.content_hash is not None:
+                    self._by_hash.setdefault(page.content_hash, pid)
+                restored.append((pid, page.layer))
+        self._maybe_evict()
+        return restored
+
+    def check_invariants(self, pins: Optional[dict] = None) -> None:
+        """Structural self-check (satellite: asserted in debug mode and by
+        every serve-suite test teardown). ``pins`` maps page_id -> external
+        (non-sequence) reference count, e.g. the radix tree's
+        `pin_counts()`; with it refcounts are checked exactly, without it
+        only as lower bounds. Raises AssertionError on the first breach."""
+        holders: dict[int, int] = {}
+        for key, pids in self._by_seq.items():
+            for pid in pids:
+                assert pid in self.pages, \
+                    f"_by_seq[{key}] names dead page {pid}"
+                holders[pid] = holders.get(pid, 0) + 1
+        tier_bytes = {"fast": 0, "slow": 0, "host": 0}
+        n_host = 0
+        for pid, page in self.pages.items():
+            assert page.page_id == pid
+            assert page.tier in tier_bytes, f"page {pid} tier {page.tier!r}"
+            held = holders.get(pid, 0)
+            if pins is not None:
+                expect = held + pins.get(pid, 0)
+                assert page.refs == expect, \
+                    (f"page {pid}: refs={page.refs} != seq holders {held}"
+                     f" + pins {pins.get(pid, 0)}")
+            else:
+                assert page.refs >= max(held, 1), \
+                    f"page {pid}: refs={page.refs} < holders {held}"
+            assert (pid in self._fast_lru) == (page.tier == "fast"), \
+                f"page {pid}: tier {page.tier} vs LRU membership mismatch"
+            if page.tier == "host":
+                n_host += 1
+                assert page.resident_tier in ("fast", "slow"), \
+                    f"host page {pid} lost its resident tier"
+            else:
+                assert page.quantized == (page.tier == "slow"), \
+                    f"page {pid}: tier {page.tier} quantized={page.quantized}"
+            tier_bytes[page.tier] += page.nbytes
+        assert n_host == self.host_pages, \
+            f"host_pages={self.host_pages} but {n_host} host-tier pages"
+        for tier, total in tier_bytes.items():
+            assert self.stats[f"{tier}_bytes"] == total, \
+                (f"{tier}_bytes stat {self.stats[f'{tier}_bytes']} != "
+                 f"live sum {total}")
+        for h, pid in self._by_hash.items():
+            page = self.pages.get(pid)
+            assert page is not None, f"_by_hash[{h}] names dead page {pid}"
+            assert page.content_hash == h, \
+                f"_by_hash[{h}] -> page {pid} hashed {page.content_hash}"
+            assert page.tier != "host", \
+                f"_by_hash[{h}] resolves to parked page {pid}"
 
     def _maybe_evict(self):
         # O(1) per victim: pop the LRU head instead of rescanning the pool

@@ -53,17 +53,23 @@ class RequestMetrics:
 
     ``status``: queued -> active -> done | cancelled; or rejected (never
     admitted — admission verdict said no, or the front-end queue was
-    full). Times come from the registry's clock (``time.perf_counter``
-    by default; injectable for tests)."""
+    full); or error (admitted but failed mid-flight, e.g. a swap-in
+    fault — partial tokens may have streamed). Preemption transitions
+    (active -> parked -> active) are counted per request (``preempts``)
+    with the parked spans collected in ``resume_wait_s``. Times come from
+    the registry's clock (``time.perf_counter`` by default; injectable
+    for tests)."""
 
-    __slots__ = ("status", "reject_reason", "submit_s", "admit_s",
-                 "first_token_s", "end_s", "tokens", "itl_s",
-                 "accept_rate", "_clock", "_last_s")
+    __slots__ = ("status", "reject_reason", "error_reason", "submit_s",
+                 "admit_s", "first_token_s", "end_s", "tokens", "itl_s",
+                 "accept_rate", "deadline_s", "preempts", "resume_wait_s",
+                 "_clock", "_last_s", "_parked_s")
 
     def __init__(self, clock=time.perf_counter):
         self._clock = clock
         self.status = "queued"
         self.reject_reason = None
+        self.error_reason = None
         self.submit_s = clock()
         self.admit_s = None
         self.first_token_s = None
@@ -71,7 +77,11 @@ class RequestMetrics:
         self.tokens = 0
         self.itl_s: list[float] = []     # per-token delivery gaps
         self.accept_rate = None
+        self.deadline_s = None           # SLO budget (Request.deadline)
+        self.preempts = 0                # times parked to the host tier
+        self.resume_wait_s: list[float] = []  # parked span per preemption
         self._last_s = None
+        self._parked_s = None
 
     # -- lifecycle events ---------------------------------------------------
     def on_admit(self):
@@ -109,6 +119,26 @@ class RequestMetrics:
         self.reject_reason = reason
         self.end_s = self.submit_s
 
+    def on_preempt(self):
+        self.preempts += 1
+        self._parked_s = self._clock()
+
+    def on_resume(self):
+        if self._parked_s is not None:
+            self.resume_wait_s.append(self._clock() - self._parked_s)
+            self._parked_s = None
+        # the parked span must not pollute per-token gaps: restart the
+        # inter-token clock at resume
+        if self._last_s is not None:
+            self._last_s = self._clock()
+
+    def on_error(self, reason: str):
+        """Admitted but failed mid-flight (structured per-request error,
+        e.g. a swap-in fault) — terminal, partial tokens stand."""
+        self.status = "error"
+        self.error_reason = reason
+        self.end_s = self._clock()
+
     # -- derived ------------------------------------------------------------
     @property
     def queue_wait_s(self) -> Optional[float]:
@@ -135,12 +165,27 @@ class RequestMetrics:
             return None
         return sum(self.itl_s) / len(self.itl_s)
 
+    @property
+    def met_deadline(self) -> Optional[bool]:
+        """True/False for finished deadline-carrying requests; None when
+        no deadline was set or the request never finished (sheds and
+        errors count as misses in the summary's SLO attainment)."""
+        if self.deadline_s is None:
+            return None
+        if self.status != "done" or self.total_s is None:
+            return False
+        return self.total_s <= self.deadline_s
+
     def as_dict(self) -> dict:
         return {"status": self.status, "tokens": self.tokens,
                 "queue_wait_s": self.queue_wait_s, "ttft_s": self.ttft_s,
                 "tpot_s": self.tpot_s, "total_s": self.total_s,
                 "accept_rate": self.accept_rate,
-                "reject_reason": self.reject_reason}
+                "reject_reason": self.reject_reason,
+                "error_reason": self.error_reason,
+                "deadline_s": self.deadline_s,
+                "preempts": self.preempts,
+                "met_deadline": self.met_deadline}
 
 
 class MetricsRegistry:
@@ -172,7 +217,8 @@ class MetricsRegistry:
         done = [m for m in reqs if m.status == "done"]
         cancelled = [m for m in reqs if m.status == "cancelled"]
         rejected = [m for m in reqs if m.status == "rejected"]
-        served = done + cancelled
+        errors = [m for m in reqs if m.status == "error"]
+        served = done + cancelled + errors
         tokens = sum(m.tokens for m in served)
         ends = [m.end_s for m in reqs if m.end_s is not None]
         wall = (max(ends) - min(m.submit_s for m in reqs)) if ends else 0.0
@@ -180,6 +226,17 @@ class MetricsRegistry:
         itl = [g for m in served for g in m.itl_s]
         waits = [m.queue_wait_s for m in served]
         rates = [m.accept_rate for m in done if m.accept_rate is not None]
+        # SLO attainment over every deadline-carrying request the system
+        # owed an answer to: sheds and errors count as misses, client
+        # cancellations don't count at all. None when nothing carried a
+        # deadline (so "no SLOs in play" never reads as "100% attained").
+        dl = [m for m in reqs
+              if m.deadline_s is not None and m.status != "cancelled"]
+        resume_waits = [w for m in reqs for w in m.resume_wait_s]
+        reject_reasons: dict[str, int] = {}
+        for m in rejected:
+            r = m.reject_reason or "unknown"
+            reject_reasons[r] = reject_reasons.get(r, 0) + 1
 
         def stats(xs):
             xs = [x for x in xs if x is not None]
@@ -190,9 +247,17 @@ class MetricsRegistry:
         return {
             "n_requests": len(reqs), "n_done": len(done),
             "n_cancelled": len(cancelled), "n_rejected": len(rejected),
+            "n_errors": len(errors),
             "tokens": tokens, "wall_s": wall,
             "throughput_tok_s": toks_per_s(tokens, wall) if wall else None,
             "ttft": stats(ttft), "tpot": stats(itl),
             "queue_wait": stats(waits),
             "accept_rate": sum(rates) / len(rates) if rates else None,
+            "preemptions": sum(m.preempts for m in reqs),
+            "n_preempted": sum(1 for m in reqs if m.preempts),
+            "resume_wait": stats(resume_waits),
+            "slo_attainment": (sum(1 for m in dl if m.met_deadline)
+                               / len(dl)) if dl else None,
+            "deadline_misses": sum(1 for m in dl if not m.met_deadline),
+            "reject_reasons": reject_reasons,
         }

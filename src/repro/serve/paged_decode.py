@@ -120,6 +120,10 @@ class PagedKVState:
         self._tail_slot: dict[int, int] = {}   # seq -> GLOBAL device slot
         self._spill_slot: dict[int, int] = {}  # k>1: boundary-crossing rows
         self._shard_of: dict[int, int] = {}    # seq -> data shard
+        # preempted sequences: seq -> host copy of its partial tail rows
+        # (num_layers, tail_len, hkv, hd) K/V, or None when the tail was
+        # empty at swap-out (numpy mode keeps tails host-side already)
+        self._parked_tail: dict[int, object] = {}
         self._device: DevicePagePool | None = None
         self._trash = 0
         if mode != "numpy":
@@ -536,6 +540,73 @@ class PagedKVState:
         if self._device is not None:
             self._device.release_pid(pid)
 
+    # -- preemption: whole-sequence swap out / in ---------------------------
+    def is_parked(self, seq: int) -> bool:
+        return seq in self._parked_tail
+
+    def swap_out(self, seq: int) -> int:
+        """Park a live sequence between steps: its partial tail rows are
+        read back to the host, its tail/spill device slots are recycled,
+        its exclusively-held pool pages move to the host tier
+        (`PagedKVPool.swap_out_seq` — shared/pinned pages stay resident),
+        and their device slots free. All decode bookkeeping (`tail_len`,
+        shard binding, pending chunk hashes) survives, so `swap_in`
+        followed by the next `begin_step` resumes mid-decode with
+        bit-identical KV. Returns the tail bytes moved to host (page bytes
+        are counted in the pool's ``swap_out_bytes`` stat)."""
+        if seq in self._parked_tail:
+            raise RuntimeError(f"sequence {seq} is already swapped out")
+        tail_bytes = 0
+        if self._device is not None:
+            n = self.tail_len.get(seq, 0)
+            slot = self._tail_slot.pop(seq, None)
+            if n > 0:
+                if slot is None:
+                    raise RuntimeError(
+                        f"sequence {seq}: {n} tail rows but no tail slot")
+                k_all, v_all = self._device.read_slot(slot)
+                kt = np.ascontiguousarray(k_all[:, :n])
+                vt = np.ascontiguousarray(v_all[:, :n])
+                self._parked_tail[seq] = (kt, vt)
+                tail_bytes = kt.nbytes + vt.nbytes
+                self.pool.stats["swap_out_bytes"] += tail_bytes
+            else:
+                self._parked_tail[seq] = None
+            if slot is not None:
+                self._device.release_slot(slot)
+            # the spill slot only ever holds phantom (not-yet-kept) rows
+            # between steps — nothing to preserve
+            spill = self._spill_slot.pop(seq, None)
+            if spill is not None:
+                self._device.release_slot(spill)
+        else:
+            self._parked_tail[seq] = None   # numpy tails already host-side
+        for pid, _layer in self.pool.swap_out_seq(seq):
+            if self._device is not None:
+                self._device.release_pid(pid)
+        return tail_bytes
+
+    def swap_in(self, seq: int) -> int:
+        """Un-park a sequence: pool pages return to their pre-swap device
+        tier (the next `begin_step`'s `sync` re-uploads them to freshly
+        allocated slots on the sequence's bound shard) and the saved tail
+        rows scatter into a new tail slot. Returns tail bytes restored."""
+        data = self._parked_tail.pop(seq)   # KeyError == caller bug
+        self.pool.swap_in_seq(seq)
+        tail_bytes = 0
+        n = self.tail_len.get(seq, 0)
+        if self._device is not None and n > 0:
+            kt, vt = data
+            slot = self._ensure_tail_slot(seq)
+            slots = np.full(n, slot, np.int32)
+            rows = np.arange(n, dtype=np.int32)
+            for layer in range(self.num_layers):
+                self._device.write_rows(layer, slots, rows,
+                                        kt[layer], vt[layer])
+            tail_bytes = kt.nbytes + vt.nbytes
+            self.pool.stats["swap_in_bytes"] += tail_bytes
+        return tail_bytes
+
     # -- retire -------------------------------------------------------------
     def free_seq(self, seq: int) -> list[int]:
         """Retire a request: drop its pool page refs (destroying pages
@@ -548,6 +619,7 @@ class PagedKVState:
         self.tail_len.pop(seq, None)
         self._shard_of.pop(seq, None)
         self._pending_hashes.pop(seq, None)
+        self._parked_tail.pop(seq, None)
         for key in [k for k in self.tail_data if k[0] == seq]:
             self.tail_data.pop(key)
         for slot in (self._tail_slot.pop(seq, None),

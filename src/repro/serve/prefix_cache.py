@@ -100,6 +100,18 @@ class RadixPrefixCache:
         requests' reservations covers them."""
         return len(self._nodes[shard]) * self.num_layers
 
+    def pin_counts(self) -> dict[int, int]:
+        """page id -> number of tree references held on it (one per node
+        per layer page, across every shard). This is the external-pin
+        argument `PagedKVPool.check_invariants` verifies exact refcounts
+        with: ``page.refs == sequence holders + pin_counts()[pid]``."""
+        out: dict[int, int] = {}
+        for shard_nodes in self._nodes:
+            for node in shard_nodes.values():
+                for pid in node.group:
+                    out[pid] = out.get(pid, 0) + 1
+        return out
+
     def _exclusive(self, node: _Node) -> bool:
         """True when the tree is the only holder of every page of the
         node's group — the only nodes eviction may destroy."""

@@ -45,6 +45,8 @@ class TraceSpec:
     speculate: int = 0                # per-request k for the whole mix
     cancel_fraction: float = 0.0      # share cancelled mid-stream
     cancel_after: int = 2             # tokens consumed before cancelling
+    deadlines: tuple = ()             # SLO budgets (s), sampled; () = none
+    priorities: tuple = (0,)          # sampled per request (higher wins)
     seed: int = 0
 
     def override(self, **kv) -> "TraceSpec":
@@ -58,6 +60,8 @@ class TraceItem:
     max_new: int
     speculate: Optional[int]
     cancel_after: Optional[int]       # None -> runs to completion
+    deadline: Optional[float] = None  # SLO budget in seconds from submit
+    priority: int = 0
 
 
 # Standing mixes: the uniform and prefix-heavy pair BENCH_traffic.json
@@ -80,6 +84,18 @@ MIXES = {
     "chunked": TraceSpec(name="chunked", n_requests=8, arrival_rate=60.0,
                          prompt_lens=(64, 48), new_tokens=(4, 8),
                          prefix_fraction=0.5, prefix_len=32, seed=3),
+    # sustained overload: arrivals far outpace the service rate with
+    # mixed deadlines and priorities, so the SLO-aware path must preempt
+    # (swap rows to the host tier for more urgent arrivals) and shed
+    # (deadline_infeasible) instead of letting the queue grow without
+    # bound — every request still terminates with a structured outcome
+    # (arrivals must interleave with decode for preemption to matter: an
+    # instantaneous burst just gets urgency-sorted at the first admit, so
+    # the rate is set near the warm service rate, not far above it)
+    "overload": TraceSpec(name="overload", n_requests=16,
+                          arrival_rate=120.0, prompt_lens=(8, 16),
+                          new_tokens=(16, 24), deadlines=(0.05, 2.0, 30.0),
+                          priorities=(0, 1), seed=6),
 }
 
 
@@ -111,7 +127,10 @@ def make_trace(spec: TraceSpec, vocab_size: int) -> list[TraceItem]:
             arrival_s=float(arrivals[i]), prompt=prompt,
             max_new=int(rng.choice(spec.new_tokens)),
             speculate=spec.speculate if spec.speculate > 1 else None,
-            cancel_after=cancel))
+            cancel_after=cancel,
+            deadline=(float(rng.choice(spec.deadlines))
+                      if spec.deadlines else None),
+            priority=int(rng.choice(spec.priorities))))
     return items
 
 
@@ -124,7 +143,8 @@ async def replay(engine, spec: TraceSpec, *, max_active: int = 4,
                  max_queue: int = 16, seed: int = 0,
                  chunked_prefill: Optional[bool] = None,
                  prefill_budget: int = 1,
-                 radix: Optional[bool] = None) -> dict:
+                 radix: Optional[bool] = None,
+                 preempt: bool = True, preempt_policy=None) -> dict:
     """Replay a trace open-loop against a fresh front end over `engine`.
 
     Each request is submitted at its trace arrival time (not when a row
@@ -138,7 +158,8 @@ async def replay(engine, spec: TraceSpec, *, max_active: int = 4,
         engine, capacity=trace_capacity(trace), max_active=max_active,
         max_queue=max_queue, speculate=max(1, spec.speculate), seed=seed,
         metrics=metrics, chunked_prefill=chunked_prefill,
-        prefill_budget=prefill_budget, radix=radix)
+        prefill_budget=prefill_budget, radix=radix, preempt=preempt,
+        preempt_policy=preempt_policy)
     n_cancelled = 0
 
     async def consume(item: TraceItem, handle):
@@ -164,7 +185,8 @@ async def replay(engine, spec: TraceSpec, *, max_active: int = 4,
                 await asyncio.sleep(delay)
             handle = await front.submit(
                 Request(item.prompt.copy(), item.max_new,
-                        speculate=item.speculate))
+                        speculate=item.speculate,
+                        deadline=item.deadline, priority=item.priority))
             tasks.append(asyncio.create_task(consume(item, handle)))
         await asyncio.gather(*tasks)
 
@@ -187,18 +209,26 @@ async def replay(engine, spec: TraceSpec, *, max_active: int = 4,
     # pages must be freed — anything still live leaked
     out["cancelled_pages_freed"] = pool.live_pages == 0
     out["decode_steps"] = front.session.steps
+    # overload-control outcomes: preempt/resume counts from the session,
+    # swap volume from the pool's tier stats
+    out["n_resumed"] = front.session.resumes
+    out["swap_out_bytes"] = pool.stats.get("swap_out_bytes", 0)
+    out["swap_in_bytes"] = pool.stats.get("swap_in_bytes", 0)
     return out
 
 
 def run_trace(engine, spec: TraceSpec, *, max_active: int = 4,
               max_queue: int = 16, seed: int = 0,
               chunked_prefill: Optional[bool] = None,
-              prefill_budget: int = 1, radix: Optional[bool] = None) -> dict:
+              prefill_budget: int = 1, radix: Optional[bool] = None,
+              preempt: bool = True, preempt_policy=None) -> dict:
     """Synchronous wrapper: replay one mix and return its summary."""
     return asyncio.run(replay(engine, spec, max_active=max_active,
                               max_queue=max_queue, seed=seed,
                               chunked_prefill=chunked_prefill,
-                              prefill_budget=prefill_budget, radix=radix))
+                              prefill_budget=prefill_budget, radix=radix,
+                              preempt=preempt,
+                              preempt_policy=preempt_policy))
 
 
 def parse_spec(arg: str) -> TraceSpec:
@@ -220,7 +250,10 @@ def parse_spec(arg: str) -> TraceSpec:
             raise ValueError(f"unknown TraceSpec field {key!r} in {arg!r}")
         cur = getattr(spec, key)
         if isinstance(cur, tuple):
-            kv[key] = tuple(int(x) for x in val.split("+"))
+            # deadline tuples carry fractional seconds; length/priority
+            # tuples stay ints
+            kv[key] = tuple(float(x) if "." in x else int(x)
+                            for x in val.split("+"))
         elif isinstance(cur, float):
             kv[key] = float(val)
         elif isinstance(cur, int):

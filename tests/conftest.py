@@ -7,3 +7,20 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True)
+def _pool_invariants():
+    """After every test, sweep every live `PagedKVPool` and
+    `DevicePagePool` (weak registries) and assert their structural
+    invariants: refcounts match holders, free lists are disjoint from
+    live slots, per-tier byte stats are consistent. A test that corrupts
+    pool state fails HERE with the invariant message even if its own
+    assertions passed — serve-suite teardown coverage for free."""
+    yield
+    from repro.serve.device_pool import DevicePagePool
+    from repro.serve.kvcache import PagedKVPool
+    for pool in list(PagedKVPool._instances):
+        pool.check_invariants()
+    for dev in list(DevicePagePool._instances):
+        dev.check_invariants()

@@ -1,0 +1,429 @@
+"""Three-tier page pool + SLO-aware preemption: swap-out parks a
+sequence's KV on the host tier bit-identically, preempt/resume rejoins
+the fused decode mid-stream with greedy outputs token-for-token equal to
+the never-preempted run, overload sheds with structured verdicts instead
+of stalling, and a failed swap-in surfaces as a per-request error that
+frees exactly the victim's pages."""
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.serve.engine import Request, ServeEngine, ServeSession
+from repro.serve.kvcache import PagedKVPool
+from repro.serve.metrics import MetricsRegistry, RequestMetrics
+from repro.serve.preemption import LRUVictimPolicy, RequestView
+from repro.serve.scheduler import Scheduler
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return smoke_config("starcoder2-7b")
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return ServeEngine(cfg).params
+
+
+def _engine(cfg, params, **kw):
+    return ServeEngine(cfg, params=params,
+                       kv_pool=PagedKVPool(page_tokens=4), **kw)
+
+
+def _prompt(cfg, n, seed=0):
+    return np.random.default_rng(seed).integers(
+        0, cfg.vocab_size, n).astype(np.int32)
+
+
+def _drain(ses, events=None):
+    while not ses.done:
+        evs = ses.step()
+        if events is not None:
+            events.extend(evs)
+
+
+# ---------------------------------------------------------------------------
+# Pool tier mechanics
+# ---------------------------------------------------------------------------
+def _page(rng, t=4, h=2, d=8):
+    return rng.standard_normal((t, h, d)).astype(np.float32)
+
+
+def test_pool_swap_roundtrip_bit_identical(rng):
+    """Swap-out preserves the exact resident representation per page
+    (fast float stays float, demoted int8 stays int8), so swap-in
+    restores byte-identical data on the original tier."""
+    pool = PagedKVPool(page_tokens=4, fast_capacity_pages=1)
+    k0, v0 = _page(rng), _page(rng)
+    k1, v1 = _page(rng), _page(rng)
+    p0 = pool.put(7, k0, v0)
+    p1 = pool.put(7, k1, v1)                     # demotes p0 to int8
+    assert pool.pages[p0].tier == "slow"
+    demoted = pool.get(p0)                       # int8 roundtrip view
+    moved = pool.swap_out_seq(7)
+    assert {pid for pid, _ in moved} == {p0, p1}
+    assert pool.host_pages == 2
+    assert pool.pages[p0].resident_tier == "slow"
+    assert pool.pages[p1].resident_tier == "fast"
+    assert pool.stats["swap_out_bytes"] > 0
+    assert pool.resident_pages == 0              # headroom freed
+
+    pool.swap_in_seq(7)
+    assert pool.host_pages == 0
+    assert pool.pages[p0].tier == "slow" and pool.pages[p0].quantized
+    assert pool.pages[p1].tier == "fast" and not pool.pages[p1].quantized
+    for got, want in zip(pool.get(p1), (k1, v1)):
+        np.testing.assert_array_equal(got, want)
+    for got, want in zip(pool.get(p0), demoted):
+        np.testing.assert_array_equal(got, want)
+    pool.free(7)
+    assert pool.live_pages == 0
+
+
+def test_pool_swap_skips_shared_pages(rng):
+    """A page another holder still references (prefix sharing, radix
+    pins) must stay resident — it serves other readers."""
+    pool = PagedKVPool(page_tokens=4)
+    shared = pool.put(1, _page(rng), _page(rng), content_hash="h0")
+    own = pool.put(1, _page(rng), _page(rng))
+    assert pool.put(2, _page(rng), _page(rng), content_hash="h0") == shared
+    moved = pool.swap_out_seq(1)
+    assert [pid for pid, _ in moved] == [own]
+    assert pool.pages[shared].tier == "fast"     # still serving seq 2
+    assert pool.pages[own].tier == "host"
+    pool.swap_in_seq(1)
+    pool.free(1)
+    pool.free(2)
+
+
+def test_invariant_checker_catches_corruption(rng):
+    pool = PagedKVPool(page_tokens=4)
+    pid = pool.put(0, _page(rng), _page(rng))
+    pool.check_invariants()                      # clean state passes
+    pool.pages[pid].refs = 5                     # corrupt: no holders
+    with pytest.raises(AssertionError):
+        pool.check_invariants(pins={})
+    pool.pages[pid].refs = 1                     # restore for teardown
+    pool.free(0)
+
+
+# ---------------------------------------------------------------------------
+# Session preempt / resume: token-identical to the unpreempted run
+# ---------------------------------------------------------------------------
+def test_preempt_resume_token_identical(cfg, params):
+    pA, pB = _prompt(cfg, 12, seed=1), _prompt(cfg, 10, seed=2)
+    ctrl = _engine(cfg, params)
+    wantA = ctrl.generate([Request(pA.copy(), 12)])[0]
+    wantB = ctrl.generate([Request(pB.copy(), 8)])[0]
+
+    eng = _engine(cfg, params)
+    ses = ServeSession(eng, capacity=64, max_active=2)
+    A, B = Request(pA.copy(), 12), Request(pB.copy(), 8)
+    ses.submit(A)
+    ses.submit(B)
+    for _ in range(4):
+        ses.step()
+    assert ses.preempt(A)
+    assert ses.request_stats(A) is None          # still in flight
+    assert eng.kv_pool.stats["swap_out_bytes"] > 0
+    for _ in range(2):
+        ses.step()                               # B decodes; A auto-resumes
+    _drain(ses)
+    np.testing.assert_array_equal(ses.result(A), wantA)
+    np.testing.assert_array_equal(ses.result(B), wantB)
+    assert ses.preemptions == 1 and ses.resumes == 1
+    ses.close()
+    assert eng.kv_pool.live_pages == 0
+
+
+def test_priority_arrival_auto_preempts_and_resumes(cfg, params):
+    """max_active=1: a priority-1 arrival outranks the active priority-0
+    row, which is parked on the host tier, and both finish with outputs
+    identical to their solo runs."""
+    pA, pB = _prompt(cfg, 8, seed=3), _prompt(cfg, 8, seed=4)
+    ctrl = _engine(cfg, params)
+    wantA = ctrl.generate([Request(pA.copy(), 10)])[0]
+    wantB = ctrl.generate([Request(pB.copy(), 4)])[0]
+
+    eng = _engine(cfg, params)
+    ses = ServeSession(eng, capacity=32, max_active=1)
+    A = Request(pA.copy(), 10, priority=0)
+    B = Request(pB.copy(), 4, priority=1)
+    ses.submit(A)
+    for _ in range(3):
+        ses.step()
+    ses.submit(B)                                # B strictly outranks A
+    _drain(ses)
+    assert ses.preemptions == 1 and ses.resumes == 1
+    np.testing.assert_array_equal(ses.result(A), wantA)
+    np.testing.assert_array_equal(ses.result(B), wantB)
+    ses.close()
+    assert eng.kv_pool.live_pages == 0
+
+
+def test_preempt_during_chunked_prefill(cfg, params):
+    """Parking a row that is still streaming prompt chunks keeps its
+    pending suffix and partial tail; the resumed prefill completes and
+    the output matches the never-preempted run."""
+    prompt = _prompt(cfg, 22, seed=5)            # several pages + tail
+    ctrl = _engine(cfg, params)
+    want = ctrl.generate([Request(prompt.copy(), 8)])[0]
+
+    eng = _engine(cfg, params)
+    ses = ServeSession(eng, capacity=48, max_active=1,
+                       chunked_prefill=True)
+    A = Request(prompt.copy(), 8)
+    ses.submit(A)
+    ses.step()                                   # first chunk lands
+    rec = ses._recs[id(A)]
+    assert rec.active.prefilling
+    assert ses.preempt(A)
+    assert eng.kv_pool.host_pages > 0            # real pages parked
+    _drain(ses)
+    np.testing.assert_array_equal(ses.result(A), want)
+    ses.close()
+    assert eng.kv_pool.live_pages == 0
+
+
+def test_preempt_speculative_row(cfg, params):
+    prompt = _prompt(cfg, 12, seed=6)
+    ctrl = _engine(cfg, params)
+    want = ctrl.generate([Request(prompt.copy(), 12)])[0]
+
+    eng = _engine(cfg, params, speculate=4, draft="ngram")
+    ses = ServeSession(eng, capacity=64, max_active=1, speculate=4)
+    A = Request(prompt.copy(), 12, speculate=4)
+    ses.submit(A)
+    for _ in range(2):
+        ses.step()
+    assert ses.preempt(A)
+    _drain(ses)
+    np.testing.assert_array_equal(ses.result(A), want)
+    assert ses.resumes == 1
+    ses.close()
+    assert eng.kv_pool.live_pages == 0
+
+
+def test_cancel_swapped_out_sequence(cfg, params):
+    """Cancelling a parked request frees its host-tier pages and parked
+    tail — nothing leaks, and its partial tokens stand."""
+    eng = _engine(cfg, params)
+    ses = ServeSession(eng, capacity=32, max_active=1)
+    A = Request(_prompt(cfg, 8, seed=7), 10)
+    B = Request(_prompt(cfg, 8, seed=8), 4, priority=1)
+    ses.submit(A)
+    for _ in range(3):
+        ses.step()
+    ses.submit(B)
+    ses.step()                                   # B preempts A
+    assert ses._recs[id(A)].status == "preempted"
+    assert ses.cancel(A)
+    assert ses._recs[id(A)].status == "cancelled"
+    assert len(ses.result(A)) > 0                # partial output stands
+    _drain(ses)
+    assert ses.result(B) is not None
+    ses.close()
+    assert eng.kv_pool.live_pages == 0
+    assert eng.kv_pool.host_pages == 0
+
+
+def test_swap_in_fault_surfaces_structured_error(cfg, params,
+                                                 monkeypatch):
+    """REPRO_SERVE_FAULT=swap_fail:1.0 — the resume's swap-in fails:
+    the victim terminates as a structured per-request error event with
+    its partial result, its pages free exactly, and the preemptor is
+    untouched."""
+    monkeypatch.setenv("REPRO_SERVE_FAULT", "swap_fail:1.0")
+    pB = _prompt(cfg, 8, seed=10)
+    ctrl = _engine(cfg, params)
+    wantB = ctrl.generate([Request(pB.copy(), 4)])[0]
+
+    eng = _engine(cfg, params)
+    metrics = MetricsRegistry()
+    ses = ServeSession(eng, capacity=32, max_active=1, metrics=metrics)
+    A = Request(_prompt(cfg, 8, seed=9), 10)
+    B = Request(pB.copy(), 4, priority=1)
+    ses.submit(A)
+    for _ in range(3):
+        ses.step()
+    ses.submit(B)
+    events = []
+    _drain(ses, events)
+    rec = ses._recs[id(A)]
+    assert rec.status == "error"
+    assert rec.stats["error"] == "swap_fail"
+    err_evs = [e for e in events if e.error == "swap_fail"]
+    assert len(err_evs) == 1 and err_evs[0].request is A
+    assert err_evs[0].done
+    assert 0 < len(ses.result(A)) < 10           # partial tokens stand
+    np.testing.assert_array_equal(ses.result(B), wantB)   # B unaffected
+    assert metrics.summary()["n_errors"] == 1
+    ses.close()
+    assert eng.kv_pool.live_pages == 0           # victim's pages freed
+
+
+def test_debug_mode_checks_invariants_each_step(cfg, params, monkeypatch):
+    monkeypatch.setenv("REPRO_SERVE_DEBUG", "1")
+    eng = _engine(cfg, params)
+    ses = ServeSession(eng, capacity=32, max_active=2)
+    assert ses._debug
+    A = Request(_prompt(cfg, 8, seed=11), 4)
+    ses.submit(A)
+    _drain(ses)
+    assert ses.result(A) is not None
+    ses.close()
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: urgency order, deadline shedding
+# ---------------------------------------------------------------------------
+def _sched(**kw):
+    pool = PagedKVPool(page_tokens=4)
+    return Scheduler(pool, num_layers=2, **kw)
+
+
+def _req(plen=4, new=4, **kw):
+    return Request(np.zeros(plen, np.int32), new, **kw)
+
+
+def test_waiting_queue_sorted_by_urgency():
+    s = _sched(max_active=1)                     # submit queues; no admit
+    lo = _req(priority=0)
+    hi = _req(priority=1)
+    dl = _req(priority=1, deadline=0.5)
+    for r in (lo, hi, dl):
+        assert s.submit(r)
+    # higher priority first; within a priority, earlier deadline first
+    assert list(s.waiting) == [dl, hi, lo]
+    assert s.preempts(dl, hi) and s.preempts(hi, lo)
+    assert not s.preempts(lo, hi)
+    assert not s.preempts(lo, lo)                # strict: never self
+
+
+def test_deadline_infeasible_shed_at_submit():
+    s = _sched(max_active=2)
+    s.observe_step(0.1)                          # 100ms/step service rate
+    verdict = s.submit(_req(new=50, deadline=0.5))
+    assert not verdict
+    assert verdict.reason == "deadline_infeasible"
+    assert verdict.deadline_headroom_s is not None
+    assert verdict.deadline_headroom_s < 0
+    ok = s.submit(_req(new=2, deadline=60.0))    # feasible: queued
+    assert ok and ok.deadline_headroom_s > 0
+
+
+def test_expired_deadline_sheds_late():
+    s = _sched(max_active=1)
+    now = [0.0]
+    s._clock = lambda: now[0]
+    a = _req(new=8, priority=1)                  # outranks b: admits first
+    b = _req(new=4, deadline=0.5)
+    assert s.submit(a) and s.submit(b)
+    assert s.admit() == [a]                      # b waits behind a's row
+    now[0] = 1.0                                 # b's deadline passes
+    s.retire(a)
+    assert s.admit() == []                       # b sheds instead of running
+    (req, verdict), = s.late_rejections
+    assert req is b and verdict.reason == "deadline_infeasible"
+    assert verdict.deadline_headroom_s < 0
+    assert s.done
+
+
+def test_lru_victim_policy_least_progress_most_recent():
+    views = [RequestView(tokens_done=5, admit_seq=1),
+             RequestView(tokens_done=2, admit_seq=2),
+             RequestView(tokens_done=2, admit_seq=7)]
+    pick = LRUVictimPolicy().pick(RequestView(), views)
+    assert pick == 2                             # least done, newest admit
+    assert LRUVictimPolicy().pick(RequestView(), []) is None
+
+
+def test_sibyl_preemption_policy_learns_from_step_rewards():
+    from repro.serve.placement import SibylPreemption
+    pol = SibylPreemption(seed=0)
+    head = RequestView(priority=1, queue_depth=3)
+    views = [RequestView(tokens_done=i, tokens_left=8 - i, admit_seq=i)
+             for i in range(3)]
+    for _ in range(4):
+        i = pol.pick(head, views)
+        assert i is not None and 0 <= i < 3
+        pol.observe(0.01, deadline_misses=1)
+    assert pol.decisions == 4
+    assert not pol._pending                      # rewards consumed
+    assert pol.agent.t > 0                       # transitions recorded
+
+
+# ---------------------------------------------------------------------------
+# Overload: bounded outcome accounting through the full async stack
+# ---------------------------------------------------------------------------
+def test_overload_trace_every_request_terminates(cfg, params):
+    from repro.serve.traffic import MIXES, run_trace
+    eng = _engine(cfg, params)
+    pool = eng.kv_pool
+    spec = MIXES["overload"].override(n_requests=10)
+    out = run_trace(eng, spec, max_active=2, max_queue=8)
+    accounted = (out["n_done"] + out["n_cancelled"] + out["n_rejected"]
+                 + out["n_errors"])
+    assert accounted == out["n_trace"]           # nothing lost or stalled
+    assert out["slo_attainment"] is not None     # deadlines were in play
+    assert pool.live_pages == 0
+    if out["preemptions"]:
+        assert out["swap_out_bytes"] > 0
+        assert out["n_resumed"] + out["n_errors"] + out["n_cancelled"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Metrics: preempt/resume spans and SLO attainment
+# ---------------------------------------------------------------------------
+def test_metrics_preempt_resume_and_slo():
+    now = [0.0]
+    reg = MetricsRegistry(clock=lambda: now[0])
+    m = reg.submit()
+    m.deadline_s = 5.0
+    m.on_admit()
+    now[0] = 1.0
+    m.on_tokens(1)
+    m.on_preempt()
+    now[0] = 3.0
+    m.on_resume()
+    now[0] = 3.5
+    m.on_tokens(1)
+    now[0] = 4.0
+    m.on_finish(2)
+    assert m.preempts == 1
+    assert m.resume_wait_s == [2.0]
+    # the parked span does not pollute inter-token gaps
+    assert max(m.itl_s) <= 1.0
+    assert m.met_deadline is True
+
+    missed = reg.submit()
+    missed.deadline_s = 0.5
+    missed.on_admit()
+    now[0] = 6.0
+    missed.on_tokens(1)
+    missed.on_finish(1)
+    assert missed.met_deadline is False
+
+    shed = reg.submit()
+    shed.deadline_s = 1.0
+    shed.on_reject("deadline_infeasible")
+
+    err = reg.submit()
+    err.deadline_s = 1.0
+    err.on_error("swap_fail")
+
+    s = reg.summary()
+    assert s["preemptions"] == 1 and s["n_preempted"] == 1
+    assert s["resume_wait"]["p50_ms"] == 2000.0
+    assert s["slo_attainment"] == 0.25           # 1 of 4 deadline-carriers
+    assert s["deadline_misses"] == 3             # shed + error count
+    assert s["n_errors"] == 1
+    assert s["reject_reasons"] == {"deadline_infeasible": 1}
+
+
+def test_request_metrics_no_deadline_has_no_slo():
+    m = RequestMetrics(clock=lambda: 0.0)
+    assert m.met_deadline is None
+    reg = MetricsRegistry(clock=lambda: 0.0)
+    reg.submit().on_finish(1)
+    assert reg.summary()["slo_attainment"] is None

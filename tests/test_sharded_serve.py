@@ -14,7 +14,7 @@ import numpy as np
 import pytest
 
 from repro.configs import smoke_config
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import Request, ServeEngine, ServeSession
 from repro.serve.kvcache import PagedKVPool
 from repro.serve.scheduler import Scheduler
 
@@ -119,6 +119,39 @@ def test_sharded_chunked_prefill_matches_monolithic(cfg, params, spec_k):
     for a, b in zip(outs_ref, outs):
         np.testing.assert_array_equal(a, b)
     assert len(eng.kv_pool.pages) == 0     # serve() dropped the pins
+
+
+@needs8
+def test_sharded_preempt_resume_matches_single_device(cfg, params):
+    """Preempt one active row on EACH data shard of a 2x2 mesh: the
+    victims swap to the host tier, auto-resume onto their original
+    shard when rows free, and every output is token-for-token identical
+    to its solo single-device decode."""
+    reqs = _reqs(cfg, n=4, plen=12, new=8, seed=3)
+    ref = _engine(cfg, params, (1, 1))
+    want = [ref.generate([Request(r.prompt.copy(), r.max_new_tokens)])[0]
+            for r in reqs]
+
+    eng = _engine(cfg, params, (2, 2))
+    ses = ServeSession(eng, capacity=64, max_active=4)
+    for r in reqs:
+        ses.submit(r)
+    for _ in range(3):
+        ses.step()
+    by_shard = {}
+    for r in reqs:                     # first request seen on each shard
+        by_shard.setdefault(ses.sched.assigned_shard(r), r)
+    assert sorted(by_shard) == [0, 1]
+    for r in by_shard.values():
+        assert ses.preempt(r)
+    assert eng.kv_pool.stats["swap_out_bytes"] > 0
+    while not ses.done:
+        ses.step()
+    for r, w in zip(reqs, want):
+        np.testing.assert_array_equal(ses.result(r), w)
+    assert ses.preemptions == 2 and ses.resumes == 2
+    ses.close()
+    assert eng.kv_pool.live_pages == 0
 
 
 # ---------------------------------------------------------------------------
