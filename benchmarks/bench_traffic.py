@@ -53,6 +53,56 @@ def _bench_mixes(mix_names=("uniform", "prefix_heavy", "speculative",
     return results
 
 
+def _state_bytes(layout, cap_tokens: int) -> tuple[int, int]:
+    """(paged, dense) per-request state bytes at `cap_tokens` capacity:
+    paged = ring/KV pages as actually pooled + O(1) recurrent blocks;
+    dense = a full-length K/V cache for every attention-bearing layer
+    (sliding-window included — an unpaged cache cannot recycle) plus the
+    same recurrent blocks."""
+    cfg = layout.cfg
+    page_bytes = 2 * layout.page_tokens * cfg.num_kv_heads \
+        * cfg.head_dim * 4
+    rec = layout.rec_state_bytes()
+    paged = layout.pages_needed(cap_tokens, tail_slots=1) * page_bytes + rec
+    dense = layout.n_kv * 2 * cap_tokens * cfg.num_kv_heads \
+        * cfg.head_dim * 4 + rec
+    return paged, dense
+
+
+def _bench_hybrid(archs=("mamba2-780m", "recurrentgemma-2b")):
+    """The hybrid mix against the paged-state stacks: SSM / RG-LRU /
+    sliding-window layers served through the fused decode path. Persists
+    tok/s plus the O(window)/O(1) memory-per-request story vs a dense
+    full-length cache."""
+    from repro.serve.paged_state import StateLayout
+    from repro.serve.traffic import make_trace, trace_capacity
+
+    results = {}
+    mesh = mesh_from_env()
+    spec = MIXES["hybrid"]
+    for arch in archs:
+        cfg = smoke_config(arch)
+        pool = PagedKVPool(page_tokens=PAGE_TOKENS)
+        eng = ServeEngine(cfg, kv_pool=pool, seed=SEED, mesh=mesh)
+        run_trace(eng, spec.override(arrival_rate=1000.0),
+                  max_active=MAX_ACTIVE)           # warm pass: jit compiles
+        assert pool.live_pages == 0, f"warm pass leaked pages ({arch})"
+        r = run_trace(eng, spec, max_active=MAX_ACTIVE)
+        lay = StateLayout(cfg, PAGE_TOKENS)
+        cap = trace_capacity(make_trace(spec, cfg.vocab_size))
+        paged, dense = _state_bytes(lay, cap)
+        paged2x, dense2x = _state_bytes(lay, 2 * cap)
+        # the whole point of the paged-state protocol: per-request state
+        # is O(window)/O(1), independent of sequence length
+        assert paged2x == paged, (arch, paged, paged2x)
+        r["state_bytes_per_req"] = paged
+        r["dense_bytes_per_req"] = dense
+        r["state_vs_dense"] = paged / dense
+        r["rec_state_bytes"] = lay.rec_state_bytes()
+        results[f"hybrid_{arch}"] = r
+    return results
+
+
 def persist(results: dict, path: Path = RESULT_PATH) -> dict:
     entry = {"timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
              "model": "starcoder2-7b(smoke)", "page_tokens": PAGE_TOKENS,
@@ -74,6 +124,7 @@ def persist(results: dict, path: Path = RESULT_PATH) -> dict:
 
 def run():
     results = _bench_mixes()
+    results.update(_bench_hybrid())
     persist(results)
     rows = []
     for name, r in results.items():
@@ -98,6 +149,13 @@ def run():
                          f"hit{r['prefix_hit_rate']:.2f}_decodep99adm"
                          f"{p99:.2f}ms" if p99 is not None else
                          f"hit{r['prefix_hit_rate']:.2f}"))
+        if r.get("state_vs_dense") is not None:
+            # paged-state memory story: O(window)/O(1) bytes per request
+            # against the dense full-length cache at the trace's capacity
+            rows.append((f"traffic.{name}.state_bytes",
+                         float(r["state_bytes_per_req"]),
+                         f"vs_dense{r['state_vs_dense']:.2f}"
+                         f"_rec{r['rec_state_bytes']}B"))
         if r.get("slo_attainment") is not None:
             # SLO-aware overload control: attainment over the deadline-
             # carrying population plus the preempt/swap work done for it

@@ -19,7 +19,10 @@ def rglru_cost(grid_shape, tile: dict, dtype_bytes: int) -> tuple | None:
     recurrence itself is latency-bound (sequential rows), so the window
     only trades grid-step overhead against VMEM residency."""
     B, S, W = grid_shape
-    q = tile["chunk"]
+    # the kernel clamps its chunk to the sequence (decode steps run S=1
+    # through the same kernel) — cost the clamped tile, reject only a
+    # genuine remainder
+    q = min(tile["chunk"], S)
     if S % q:
         return None
     vmem = 3 * q * W * dtype_bytes * 2 + W * 4      # a/b/h blocks + state
@@ -61,5 +64,9 @@ SPEC = registry.register(KernelSpec(
         KernelCase({"B": 2, "S": 64, "W": 32}, {"chunk": 16}),
         KernelCase({"B": 1, "S": 128, "W": 64}, {"chunk": 64}),
         KernelCase({"B": 3, "S": 96, "W": 16}, {"chunk": 32}),
+        # decode-shaped single-token step (the fused serve path's
+        # per-token RG-LRU state update runs this exact shape)
+        KernelCase({"B": 4, "S": 1, "W": 64}, {"chunk": 32}),
+        KernelCase({"B": 2, "S": 4, "W": 32}, {"chunk": 64}),
     ),
 ))

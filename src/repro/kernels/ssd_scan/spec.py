@@ -24,7 +24,10 @@ def ssd_cost(grid_shape, tile: dict, dtype_bytes: int) -> tuple | None:
     data-movement tradeoff this kernel exists to exploit (those tiles stay
     in VMEM; the XLA path materializes them to HBM)."""
     B, S, H, P, G, N = grid_shape
-    q = tile["chunk"]
+    # the kernel clamps its chunk to the sequence (decode steps run S=1
+    # through the same kernel) — cost the clamped tile, reject only a
+    # genuine remainder
+    q = min(tile["chunk"], S)
     if S % q:
         return None
     # x/y (q,P) + b/c (q,N) + dt blocks, double buffered, plus fp32 state
@@ -84,6 +87,12 @@ SPEC = registry.register(KernelSpec(
         KernelCase({"B": 1, "S": 128, "H": 4, "P": 32, "G": 2, "N": 16},
                    {"chunk": 32}),
         KernelCase({"B": 2, "S": 64, "H": 6, "P": 8, "G": 3, "N": 8},
+                   {"chunk": 64}),
+        # decode-shaped single-token step (the fused serve path's
+        # per-token SSD state update runs this exact shape)
+        KernelCase({"B": 4, "S": 1, "H": 4, "P": 16, "G": 1, "N": 8},
+                   {"chunk": 16}),
+        KernelCase({"B": 1, "S": 4, "H": 4, "P": 16, "G": 2, "N": 8},
                    {"chunk": 64}),
     ),
 ))

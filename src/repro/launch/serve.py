@@ -4,10 +4,19 @@ CPU; production shapes via the dry-run).
     PYTHONPATH=src python -m repro.launch.serve --arch recurrentgemma-2b \
         --batch 4 --prompt-len 32 --new-tokens 16 --smoke
 
-    # continuous batching over a paged pool (global-attention archs),
+    # continuous batching over a paged pool,
     # Sibyl placement learning from real gather latency:
     PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-7b \
         --smoke --paged --continuous --max-active 2 --sibyl
+
+    # hybrid stacks (SSM / RG-LRU / sliding-window) serve through the
+    # same paged fused path — recurrent layers hold O(1) state slots,
+    # ring layers recycle O(window) pages (the launcher prints the
+    # per-request paged-state budget):
+    PYTHONPATH=src python -m repro.launch.serve --arch mamba2-780m \
+        --smoke --paged --continuous --max-active 2
+    PYTHONPATH=src python -m repro.launch.serve --arch recurrentgemma-2b \
+        --smoke --paged --speculate 4
 
     # speculative multi-token decode: n-gram drafts, 4-token verify steps
     # through the fused paged graph (2 host syncs per accepted run):
@@ -146,6 +155,17 @@ def main():
     eng = ServeEngine(cfg, kv_pool=pool, decode_mode=args.decode_mode,
                       knee_cache=args.knee_cache, speculate=args.speculate,
                       draft=args.draft, mesh=mesh)
+    if pool is not None:
+        # per-request paged-state budget for this arch at the launch shape
+        from repro.serve.paged_state import StateLayout, supports_paged_layout
+        if supports_paged_layout(cfg):
+            lay = StateLayout(cfg, args.page_tokens)
+            cap = args.prompt_len + args.new_tokens
+            print(f"paged state: {lay.n_kv} kv/ring layers "
+                  f"({lay.pages_needed(cap)} pages per request"
+                  f"{' — ring-bounded at O(window)' if lay.has_ring else ''}"
+                  f"), {lay.n_ssd + lay.n_rg} recurrent layers "
+                  f"({lay.rec_state_bytes()} B O(1) state per request)")
     if args.frontend:
         _run_frontend(args, cfg, eng, pool)
         return

@@ -54,39 +54,82 @@ def _conv1d(u, w, bias, state=None):
     return out + bias
 
 
+def rglru_decode_core(cfg: ModelConfig, p, x, h, conv, *, tp: int = 1):
+    """One-token RG-LRU step shared by the dense decode-cache path and
+    the serve layer's fused paged step.
+
+    x: (B, 1, d); h: (B, W) fp32 recurrent state; conv: (B, K-1, W) prior
+    raw conv inputs. Returns ``(y (B, 1, d), new_h, new_conv)``.
+
+    ``tp > 1`` is the tensor-parallel form (shard_map body, "model"
+    axis): w_in/w_gate/conv split the W width by column like heads, the
+    row-sharded gate matrices w_a/w_i complete their full-width
+    contraction with one psum (both stacked into a single collective),
+    and the row-sharded w_out psums the output partial sum."""
+    from repro.sharding.partition import constrain
+    u_raw = constrain(x @ p["w_in"], ("batch", "seq", "lru"))
+    conv_window = jnp.concatenate([conv.astype(u_raw.dtype), u_raw], axis=1)
+    u = jnp.einsum("bkw,kw->bw", conv_window, p["conv_w"]) + p["conv_b"]
+    u = u[:, None, :]
+    if tp == 1:
+        a, gated = _gates(p, u)
+    else:
+        w_l = p["b_a"].shape[0]           # local width ("lru" shard)
+        c0 = jax.lax.axis_index("model") * w_l
+        # u is width-local; w_a/w_i rows are width-sharded — the psum
+        # completes both full-width pre-activations in one collective,
+        # then this shard keeps its own gate columns
+        pre = jnp.concatenate(
+            [(u @ p["w_a"]).astype(jnp.float32),
+             (u @ p["w_i"]).astype(jnp.float32)], axis=-1)
+        pre = jax.lax.psum(pre, "model")
+        w_full = w_l * tp
+        r = jax.nn.sigmoid(
+            jax.lax.dynamic_slice_in_dim(pre, c0, w_l, axis=-1) + p["b_a"])
+        i = jax.nn.sigmoid(
+            jax.lax.dynamic_slice_in_dim(pre, w_full + c0, w_l, axis=-1)
+            + p["b_i"])
+        log_a = C_EXP * r * jax.nn.log_sigmoid(p["lam"])[None, None, :]
+        a = jnp.exp(log_a)
+        beta = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-6, 1.0))
+        gated = beta * i * u.astype(jnp.float32)
+    new_h = a[:, 0] * h + gated[:, 0]
+    new_conv = conv_window[:, 1:, :]
+    y = new_h[:, None, :]
+    y = y.astype(x.dtype) * jax.nn.gelu(x @ p["w_gate"])
+    out = y @ p["w_out"]
+    if tp > 1:
+        out = jax.lax.psum(out, "model")  # row-sharded partial sum
+    return out, new_h, new_conv
+
+
 def rglru_apply(cfg: ModelConfig, p, x, *, mode: str, cache=None):
     """Returns (y, new_cache). cache = {"h": (B,W) fp32, "conv": (B,K-1,W)}."""
     from repro.sharding.partition import constrain
-    b = x.shape[0]
-    w = cfg.lru_width
-    u_raw = constrain(x @ p["w_in"], ("batch", "seq", "lru"))
 
     if mode == "decode":
-        conv_window = jnp.concatenate([cache["conv"].astype(u_raw.dtype), u_raw],
-                                      axis=1)
-        u = jnp.einsum("bkw,kw->bw", conv_window, p["conv_w"]) + p["conv_b"]
-        u = u[:, None, :]
-        a, gated = _gates(p, u)
-        h = a[:, 0] * cache["h"] + gated[:, 0]
-        y = h[:, None, :]
-        new_cache = {"h": h, "conv": conv_window[:, 1:, :]}
+        y, new_h, new_conv = rglru_decode_core(cfg, p, x, cache["h"],
+                                               cache["conv"])
+        return y, {"h": new_h, "conv": new_conv}
+
+    u_raw = constrain(x @ p["w_in"], ("batch", "seq", "lru"))
+    u = _conv1d(u_raw, p["conv_w"], p["conv_b"],
+                state=cache["conv"] if cache else None)
+    a, gated = _gates(p, u)
+
+    # associative scan: (a, b) o (a', b') = (a*a', a'*b + b')
+    def combine(x1, x2):
+        a1, b1 = x1
+        a2, b2 = x2
+        return a1 * a2, a2 * b1 + b2
+    aa, hh = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    y = hh
+    if mode == "prefill":
+        k = p["conv_w"].shape[0]
+        new_cache = {"h": hh[:, -1, :],
+                     "conv": u_raw[:, -(k - 1):, :].astype(jnp.float32)}
     else:
-        u = _conv1d(u_raw, p["conv_w"], p["conv_b"],
-                    state=cache["conv"] if cache else None)
-        a, gated = _gates(p, u)
-        # associative scan: (a, b) o (a', b') = (a*a', a'*b + b')
-        def combine(x1, x2):
-            a1, b1 = x1
-            a2, b2 = x2
-            return a1 * a2, a2 * b1 + b2
-        aa, hh = jax.lax.associative_scan(combine, (a, gated), axis=1)
-        y = hh
-        if mode == "prefill":
-            k = p["conv_w"].shape[0]
-            new_cache = {"h": hh[:, -1, :],
-                         "conv": u_raw[:, -(k - 1):, :].astype(jnp.float32)}
-        else:
-            new_cache = None
+        new_cache = None
 
     y = y.astype(x.dtype) * jax.nn.gelu(x @ p["w_gate"])
     return y @ p["w_out"], new_cache

@@ -24,12 +24,17 @@ def ssm_spec(cfg: ModelConfig):
     d = cfg.d_model
     din, nh, conv_dim = ssm_dims(cfg)
     g, n = cfg.ssm_ngroups, cfg.ssm_state
+    # in_proj/conv carry the "ssm_proj" logical axis (not "ssm_inner"):
+    # training shards both over "model", but the serve rules replicate
+    # "ssm_proj" so the fused decode step can compute the projection at
+    # full width and slice each shard's head block locally (the B/C
+    # channels are shared by every head and cannot split by head).
     return {
-        "in_proj": ParamSpec((d, 2 * din + 2 * g * n + nh), ("embed", "ssm_inner"),
+        "in_proj": ParamSpec((d, 2 * din + 2 * g * n + nh), ("embed", "ssm_proj"),
                              init="fan_in"),
-        "conv_w": ParamSpec((cfg.ssm_conv_width, conv_dim), (None, "ssm_inner"),
+        "conv_w": ParamSpec((cfg.ssm_conv_width, conv_dim), (None, "ssm_proj"),
                             init="fan_in"),
-        "conv_b": ParamSpec((conv_dim,), ("ssm_inner",), init="zeros"),
+        "conv_b": ParamSpec((conv_dim,), ("ssm_proj",), init="zeros"),
         "dt_bias": ParamSpec((nh,), ("ssm_heads",), init="zeros", dtype="float32"),
         "a_log": ParamSpec((nh,), ("ssm_heads",), init="alog", dtype="float32"),
         "d_skip": ParamSpec((nh,), ("ssm_heads",), init="ones", dtype="float32"),
@@ -128,8 +133,100 @@ def _conv1d(xbc, w, bias):
     return out + bias
 
 
+def ssd_decode_core(cfg: ModelConfig, p, x, conv, state, *, tp: int = 1):
+    """One-token SSD step shared by the dense decode-cache path and the
+    serve layer's fused paged step (the serving hot path traces this
+    inside its jitted graph, so dense decode and fused serving agree by
+    construction).
+
+    x: (B, 1, d); conv: (B, K-1, conv_dim) raw pre-conv inputs; state:
+    (B, H, P, N) fp32. Returns ``(y (B, 1, d), new_conv, new_state)``.
+
+    ``tp > 1`` is the tensor-parallel form, valid only inside a shard_map
+    body with a "model" axis: the in-projection and conv run replicated at
+    full width ("ssm_proj" params replicate under SERVE_RULES — the B/C
+    channels are group-shared and cannot split by head), the head block
+    local to this shard is sliced out (state stays head-sharded, like
+    attention heads), and the gate norm / out projection complete their
+    full-width reductions with one psum each.
+    """
+    din, nh, conv_dim = ssm_dims(cfg)
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    P = cfg.ssm_head_dim
+    B = x.shape[0]
+
+    from repro.sharding.partition import constrain
+    proj = constrain(x @ p["in_proj"], ("batch", "seq", "ssm_inner"))
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    window = jnp.concatenate([conv, xbc], axis=1)     # (B, K, C)
+    xbc_t = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    xbc_t = jax.nn.silu(xbc_t)[:, None, :]
+    new_conv = window[:, 1:, :]
+
+    if tp == 1:
+        a = -jnp.exp(p["a_log"])
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+        xs = xbc_t[..., :din].reshape(B, 1, nh, P)
+        bm = xbc_t[..., din:din + g * n].reshape(B, 1, g, n)
+        cm = xbc_t[..., din + g * n:].reshape(B, 1, g, n)
+        da = jnp.exp(dt[:, 0, :] * a)                 # (B,H)
+        # broadcast groups to heads
+        bm_h = jnp.repeat(bm[:, 0], nh // g, axis=1).astype(jnp.float32)
+        cm_h = jnp.repeat(cm[:, 0], nh // g, axis=1).astype(jnp.float32)
+        dbx = dt[:, 0, :, None, None] * bm_h[:, :, None, :] * \
+            xs[:, 0, :, :, None].astype(jnp.float32)  # (B,H,P,N)
+        new_state = state * da[..., None, None] + dbx
+        y = jnp.einsum("bhpn,bhn->bhp", new_state, cm_h)
+        y = y + p["d_skip"][None, :, None] * xs[:, 0].astype(jnp.float32)
+        y = y.reshape(B, 1, din)
+        y = y * jax.nn.silu(z.astype(jnp.float32))
+        y = rms_norm(y.astype(x.dtype), p["gate_norm"])
+        return y @ p["out_proj"], new_conv, new_state
+
+    # -- tensor-parallel form (shard_map body, "model" axis) ----------------
+    nh_l = p["a_log"].shape[0]            # local heads ("ssm_heads" shard)
+    din_l = nh_l * P
+    h0 = jax.lax.axis_index("model") * nh_l
+    d0 = h0 * P
+    a = -jnp.exp(p["a_log"])
+    dt_l = jax.lax.dynamic_slice_in_dim(dt_raw, h0, nh_l, axis=2)
+    dt = jax.nn.softplus(dt_l.astype(jnp.float32) + p["dt_bias"])
+    xs_full = xbc_t[..., :din].reshape(B, 1, nh, P)
+    xs = jax.lax.dynamic_slice_in_dim(xs_full, h0, nh_l, axis=2)
+    bm = xbc_t[..., din:din + g * n].reshape(B, 1, g, n)
+    cm = xbc_t[..., din + g * n:].reshape(B, 1, g, n)
+    bm_h = jax.lax.dynamic_slice_in_dim(
+        jnp.repeat(bm[:, 0], nh // g, axis=1).astype(jnp.float32),
+        h0, nh_l, axis=1)
+    cm_h = jax.lax.dynamic_slice_in_dim(
+        jnp.repeat(cm[:, 0], nh // g, axis=1).astype(jnp.float32),
+        h0, nh_l, axis=1)
+    da = jnp.exp(dt[:, 0, :] * a)
+    dbx = dt[:, 0, :, None, None] * bm_h[:, :, None, :] * \
+        xs[:, 0, :, :, None].astype(jnp.float32)
+    new_state = state * da[..., None, None] + dbx     # (B, nh_l, P, N)
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, cm_h)
+    y = y + p["d_skip"][None, :, None] * xs[:, 0].astype(jnp.float32)
+    y = y.reshape(B, 1, din_l)
+    z_l = jax.lax.dynamic_slice_in_dim(z, d0, din_l, axis=2)
+    y = y * jax.nn.silu(z_l.astype(jnp.float32))
+    # gate rms_norm over the FULL din: one psum completes the mean square
+    y32 = y.astype(x.dtype).astype(jnp.float32)
+    var = jax.lax.psum(jnp.sum(y32 * y32, axis=-1, keepdims=True),
+                       "model") / din
+    y = y32 * jax.lax.rsqrt(var + 1e-6)
+    y = (y * (1.0 + p["gate_norm"].astype(jnp.float32))).astype(x.dtype)
+    out = y @ p["out_proj"]               # row-sharded -> partial sum
+    return jax.lax.psum(out, "model"), new_conv, new_state
+
+
 def ssm_apply(cfg: ModelConfig, p, x, *, mode: str, cache=None):
     """Returns (y, new_cache). cache = {"conv": (B,K-1,C), "state": (B,H,P,N)}."""
+    if mode == "decode":
+        y, new_conv, new_state = ssd_decode_core(cfg, p, x, cache["conv"],
+                                                 cache["state"])
+        return y, {"conv": new_conv, "state": new_state}
+
     din, nh, conv_dim = ssm_dims(cfg)
     g, n = cfg.ssm_ngroups, cfg.ssm_state
     P = cfg.ssm_head_dim
@@ -142,41 +239,19 @@ def ssm_apply(cfg: ModelConfig, p, x, *, mode: str, cache=None):
     xbc = xbc_raw
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
 
-    if mode == "decode":
-        # single step
-        conv_st = cache["conv"]                           # (B, K-1, C)
-        window = jnp.concatenate([conv_st, xbc], axis=1)  # (B, K, C)
-        xbc_t = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
-        xbc_t = jax.nn.silu(xbc_t)[:, None, :]
-        new_conv = window[:, 1:, :]
-        xs = xbc_t[..., :din].reshape(B, 1, nh, P)
-        bm = xbc_t[..., din:din + g * n].reshape(B, 1, g, n)
-        cm = xbc_t[..., din + g * n:].reshape(B, 1, g, n)
-        da = jnp.exp(dt[:, 0, :] * a)                     # (B,H)
-        # broadcast groups to heads
-        bm_h = jnp.repeat(bm[:, 0], nh // g, axis=1).astype(jnp.float32)
-        cm_h = jnp.repeat(cm[:, 0], nh // g, axis=1).astype(jnp.float32)
-        dbx = dt[:, 0, :, None, None] * bm_h[:, :, None, :] * \
-            xs[:, 0, :, :, None].astype(jnp.float32)      # (B,H,P,N)
-        state = cache["state"] * da[..., None, None] + dbx
-        y = jnp.einsum("bhpn,bhn->bhp", state, cm_h)
-        y = y + p["d_skip"][None, :, None] * xs[:, 0].astype(jnp.float32)
-        y = y.reshape(B, 1, din)
-        new_cache = {"conv": new_conv, "state": state}
+    xbc = jax.nn.silu(_conv1d(xbc, p["conv_w"], p["conv_b"]))
+    xs = xbc[..., :din].reshape(B, -1, nh, P)
+    bm = xbc[..., din:din + g * n].reshape(B, -1, g, n)
+    cm = xbc[..., din + g * n:].reshape(B, -1, g, n)
+    y, h_final = ssd_chunked(xs, bm, cm, dt, a, cfg.ssm_chunk,
+                             bf16_intra=cfg.ssm_bf16_intra)
+    y = y + p["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, x.shape[1], din)
+    if mode == "prefill":
+        k = cfg.ssm_conv_width
+        new_cache = {"conv": xbc_raw[:, -(k - 1):, :], "state": h_final}
     else:
-        xbc = jax.nn.silu(_conv1d(xbc, p["conv_w"], p["conv_b"]))
-        xs = xbc[..., :din].reshape(B, -1, nh, P)
-        bm = xbc[..., din:din + g * n].reshape(B, -1, g, n)
-        cm = xbc[..., din + g * n:].reshape(B, -1, g, n)
-        y, h_final = ssd_chunked(xs, bm, cm, dt, a, cfg.ssm_chunk,
-                                 bf16_intra=cfg.ssm_bf16_intra)
-        y = y + p["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
-        y = y.reshape(B, x.shape[1], din)
-        if mode == "prefill":
-            k = cfg.ssm_conv_width
-            new_cache = {"conv": xbc_raw[:, -(k - 1):, :], "state": h_final}
-        else:
-            new_cache = None
+        new_cache = None
 
     y = y * jax.nn.silu(z.astype(jnp.float32))
     y = rms_norm(y.astype(x.dtype), p["gate_norm"])

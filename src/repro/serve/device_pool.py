@@ -143,15 +143,17 @@ class DevicePagePool:
         # PER-SHARD requirement (== total for the 1-shard pool).
         self.plan = plan
         self.shards = plan.dp if plan is not None else 1
-        if plan is not None and hkv % plan.tp:
-            raise ValueError(f"hkv={hkv} not divisible by the model-axis "
-                             f"size {plan.tp}")
+        # a kv-head count the model axis cannot divide (e.g. hkv=1 MQA on
+        # tp=2) replicates the head axis instead — each model shard holds
+        # the full kv heads and attends them against its local q heads
+        rep_heads = plan is not None and hkv > 0 and hkv % plan.tp != 0
         self.capacity_local = 1
         while self.capacity_local < max(8, init_slots):
             self.capacity_local *= 2
         self.capacity = self.shards * self.capacity_local
         ll, c, t = num_layers, self.capacity, page_tokens
-        self._shardings = plan.pool_shardings() if plan is not None else None
+        self._shardings = plan.pool_shardings(replicate_heads=rep_heads) \
+            if plan is not None else None
         self.arrays = (
             jnp.zeros((ll, c, t, hkv, hd), dtype),      # k_pages (fast float)
             jnp.zeros((ll, c, t, hkv, hd), dtype),      # v_pages

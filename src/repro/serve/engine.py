@@ -43,6 +43,7 @@ from repro.configs.base import ModelConfig
 from repro.kernels import api
 from repro.models import Model
 from repro.serve.kvcache import PagedKVPool, pad_caches
+from repro.serve.paged_state import StateLayout
 from repro.serve.paged_decode import (MODES, PagedKVState, build_fused_step,
                                       extract_prefill_pages,
                                       paged_decode_step, supports_paged)
@@ -189,21 +190,44 @@ class ServeEngine:
         self._check_spec_width(k)
         return k, ks
 
+    def _layout(self) -> StateLayout:
+        """Paged-state layout for this (config, page_tokens) pair, cached:
+        which layers take KV pages / recurrent slots / ring pages."""
+        lay = getattr(self, "_layout_cache", None)
+        if lay is None:
+            lay = StateLayout(self.cfg, self.kv_pool.page_tokens)
+            self._layout_cache = lay
+        return lay
+
+    @property
+    def _hybrid(self) -> bool:
+        """True when the stack holds any non-global-attention mixer
+        (recurrent slots or ring pages) — served fused-only."""
+        lay = self._layout()
+        return lay.has_rec or lay.has_ring
+
     def _require_paged(self):
         if self.kv_pool is None:
             raise ValueError("continuous serving decodes from a page pool — "
                              "construct the engine with kv_pool=")
         if not supports_paged(self.cfg):
             raise NotImplementedError(
-                f"{self.cfg.name}: paged serving needs a "
-                f"global-attention stack")
+                f"{self.cfg.name}: paged serving needs a stack of "
+                f"attn/local_attn/ssd/rglru mixers")
+        if self._hybrid and self.decode_mode != "fused":
+            raise NotImplementedError(
+                f"{self.cfg.name}: recurrent/ring layers serve through the "
+                f"fused paged step only; decode_mode="
+                f"{self.decode_mode!r} stays the global-attention "
+                f"reference")
 
     def _new_state(self, capacity: int, batch_hint: int,
                    tail_slots: int = 1) -> PagedKVState:
         return PagedKVState(self.kv_pool, capacity, self.cfg.num_layers,
                             self.cfg.num_kv_heads, self.cfg.head_dim,
                             mode=self.decode_mode, batch_hint=batch_hint,
-                            tail_slots=tail_slots, plan=self.plan)
+                            tail_slots=tail_slots, plan=self.plan,
+                            layout=self._layout())
 
     def _fused_step_fn(self, slots: int, greedy: bool, temperature: float,
                        k: int = 1):
@@ -211,7 +235,8 @@ class ServeEngine:
         fn = self._fused_cache.get(key)
         if fn is None:
             fn = build_fused_step(self.model, slots, k=k, greedy=greedy,
-                                  temperature=temperature, plan=self.plan)
+                                  temperature=temperature, plan=self.plan,
+                                  layout=self._layout())
             self._fused_cache[key] = fn
         return fn
 
@@ -244,6 +269,12 @@ class ServeEngine:
         seq_ids = [-1] * b
         pos = np.zeros(b, np.int32)
         proposed = [0] * b
+        # recurrent stacks: per-row in-graph state-checkpoint picks —
+        # chunk rows commit exactly their chunk length of recurrent
+        # state; draft rows commit min(accepted, proposed) + 1 (padding
+        # columns must never advance the state even if they "accept")
+        keep_fixed = np.ones(b, np.int32)
+        keep_cap = np.zeros(b, np.int32)
         for i, r in enumerate(rows):
             if r is None:
                 continue
@@ -253,6 +284,7 @@ class ServeEngine:
             if chunk is not None:
                 m = len(chunk)
                 toks[i, :m] = chunk
+                keep_fixed[i] = m
                 if m < k:               # pad: repeat the last true token
                     toks[i, m:] = chunk[-1]
                 continue
@@ -265,8 +297,11 @@ class ServeEngine:
                 toks[i, 1:1 + len(drafts)] = drafts
             if proposed[i] < k - 1:     # pad: repeat the last filled token
                 toks[i, 1 + proposed[i]:] = toks[i, proposed[i]]
+            keep_fixed[i] = -1
+            keep_cap[i] = proposed[i]
         verdict = state.run_spec(step_fn, self.params, toks, seq_ids, pos,
-                                 key)
+                                 key, keep_fixed=keep_fixed,
+                                 keep_cap=keep_cap)
         kept = [None] * b
         advanced = [0] * b
         for i, r in enumerate(rows):
@@ -647,14 +682,26 @@ class ServeSession:
             raise ValueError(
                 f"chunked prefill rides the fused verify graph; "
                 f"decode_mode={engine.decode_mode!r} stays monolithic")
+        hybrid = engine._hybrid
+        if hybrid and chunked_prefill is not None and not chunked_prefill:
+            # the monolithic session prefill right-pads its bucket, which
+            # a recurrent scan cannot ignore — hybrid stacks stream their
+            # prompts through the chunked path unconditionally
+            raise ValueError(
+                f"{engine.cfg.name}: recurrent/ring stacks prefill through "
+                f"chunked prefill only; drop chunked_prefill=False")
         self.chunked = fused if chunked_prefill is None \
             else bool(chunked_prefill)
         self.prefill_budget = max(1, int(prefill_budget))
         # radix prefix tree: pins completed prompts' pages so later
         # requests adopt cached prefixes (adoption itself needs the
         # chunked path; with chunked off the tree still pins/credits and
-        # the pool dedups by content hash)
-        self.radix = (bool(prefix_cache) if radix is None else bool(radix))
+        # the pool dedups by content hash). A recurrent stack cannot
+        # adopt: its per-sequence state is not content-addressable.
+        self.radix = False if hybrid else \
+            (bool(prefix_cache) if radix is None else bool(radix))
+        if hybrid:
+            self.prefix_cache = prefix_cache = False
         plan = engine.plan
         # under a mesh plan the decode batch carries an equal block of
         # rows per data shard; admission fills rows (and page budget)
@@ -670,7 +717,8 @@ class ServeSession:
                                default_speculate=engine.speculate,
                                data_shards=dp,
                                rows_per_shard=n_rows // dp,
-                               prefix_index=self.prefix_index)
+                               prefix_index=self.prefix_index,
+                               layout=engine._layout())
         # a chunk-fill step reuses the spill-slot protocol (decode rows
         # riding a wide step may cross their page boundary), so chunked
         # sessions need the second tail slot even at k == 1
@@ -744,12 +792,16 @@ class ServeSession:
         t = self.pool.page_tokens
         tail = 2 if (self.spec_k > 1 or self.chunked) else 1
         need_tokens = len(req.prompt) + req.max_new_tokens
+        lay = self.engine._layout()
         pages = -(-need_tokens // t)
+        if lay.has_ring:                # ring layers recycle: O(window)
+            pages = min(pages, lay.ring_pages())
         eff_k = effective_speculate(req, self.engine.speculate)
-        if pages + tail > self.state.slots:
+        if lay.n_kv and pages + tail > self.state.slots:
             verdict = Admission(
                 False, reason="capacity",
-                pages_needed=self.engine.cfg.num_layers * (pages + 1),
+                pages_needed=lay.pages_needed(need_tokens,
+                                              tail_slots=tail),
                 pages_budget=self.sched._budget(),
                 detail=f"request spans {need_tokens} KV tokens = {pages} "
                        f"pages + {tail} tail slot(s), beyond the session "
@@ -1124,8 +1176,19 @@ class ServeSession:
                 want_hashes = self.prefix_cache or self.radix
                 hashes = ([prefix_page_hashes(toks, self.pool.page_tokens)]
                           if want_hashes else None)
+                # adopt the radix-cached prefix pages by reference (the
+                # prefill compute still runs full-length for the logits,
+                # but the cached pages are never re-written — they stay
+                # tree-shared instead of merely content-deduped)
+                match = self.sched.take_match(req) if self.radix else None
+                adopted = match.pages if match is not None else 0
+                if adopted:
+                    self.state.adopt_prefix(seq, match.groups)
+                    self.pages_adopted_total += adopted
+                self.pages_needed_total += self.sched.adopt_cap(req)
                 extract_prefill_pages(eng.model, caches, self.state, [seq],
-                                      page_hashes=hashes, valid_len=plen)
+                                      page_hashes=hashes, valid_len=plen,
+                                      skip_pages=[adopted])
                 if self.radix and hashes:
                     # pin the completed prompt's full pages so later
                     # requests are credited for (and, chunked, adopt) them

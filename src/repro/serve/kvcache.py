@@ -130,6 +130,7 @@ class PagedKVPool:
         self.clock = 0
         self.next_id = 0
         self.host_pages = 0           # pages currently in the "host" tier
+        self._parked: set[int] = set()  # seq ids swapped out via swap_out_seq
         self.recorder = None          # optional DecodeTraceRecorder
         self.stats = {"fast_hits": 0, "slow_hits": 0, "host_hits": 0,
                       "evictions": 0, "fast_bytes": 0, "slow_bytes": 0,
@@ -314,6 +315,7 @@ class PagedKVPool:
         Returns destroyed ``(page_id, layer)`` pairs (the layer routes
         device-slot recycling without scanning every layer's mirror)."""
         destroyed: list[tuple] = []
+        self._parked.discard(seq_id)
         # key scan is O(live (seq, layer) entries) — bounded by active
         # requests x layers, not by pool size
         for key in [k for k in self._by_seq if k[0] == seq_id]:
@@ -328,14 +330,43 @@ class PagedKVPool:
                 destroyed.append((pid, page.layer))
         return destroyed
 
+    def drop_front(self, seq_id: int, layer: int = 0) -> list[tuple]:
+        """Retire the OLDEST page of ``(seq_id, layer)`` — the ring-buffer
+        recycling primitive for sliding-window layers. Once the window
+        slides past a page's positions those rows can never be attended
+        again, so dropping the front page bounds the per-sequence page
+        need at O(window) instead of O(generated length). Returns the
+        destroyed ``(page_id, layer)`` pairs in `free`'s format (empty
+        while other holders keep the page alive)."""
+        pids = self._by_seq.get((seq_id, layer))
+        if not pids:
+            return []
+        pid = pids.pop(0)
+        if not pids:
+            del self._by_seq[(seq_id, layer)]
+        page = self.pages.get(pid)
+        if page is None:
+            return []
+        page.refs -= 1
+        if page.refs > 0:
+            return []
+        self._destroy(page)
+        return [(pid, page.layer)]
+
     # -- host tier: whole-sequence swap (preemption substrate) --------------
     def swap_out_seq(self, seq_id: int) -> list[tuple]:
         """Park a sequence's exclusively-held pages on the host tier.
 
-        Refcount- and radix-pin-aware: pages with ``refs > 1`` (shared with
-        another live sequence or pinned by the radix tree) stay resident —
-        they still serve other readers, so only this sequence's private KV
-        leaves the device budget. Parked pages keep their exact resident
+        Refcount- and radix-pin-aware: a page with ``refs > 1`` stays
+        resident while any *live* reader remains (another active sequence
+        or a radix-tree pin still serves gathers from it), so only this
+        sequence's private KV leaves the device budget. Shared-page
+        parking rule: when the LAST live holder of a shared page parks —
+        every holding sequence is itself swapped out and no external pin
+        covers it (``refs`` equals the holder multiplicity) — the page
+        parks with it; otherwise it would sit device-resident with no
+        covering reservation, silently eating the budget the scheduler
+        believes is free. Parked pages keep their exact resident
         representation (float stays float, int8 stays int8): swap-in is a
         bit-identical restore, which is what makes a resumed sequence's
         greedy output token-for-token equal to the never-preempted run.
@@ -347,14 +378,30 @@ class PagedKVPool:
         """
         swapped: list[tuple] = []
         seen: set[int] = set()
+        self._parked.add(seq_id)
+        holder_seqs: Optional[dict] = None   # pid -> [holding seq ids]
         for key in [k for k in self._by_seq if k[0] == seq_id]:
             for pid in self._by_seq[key]:
                 if pid in seen:
                     continue
                 seen.add(pid)
                 page = self.pages[pid]
-                if page.refs > 1 or page.tier == "host":
+                if page.tier == "host":
                     continue
+                if page.refs > 1:
+                    # shared page: park only as the last live holder, and
+                    # only when no non-sequence pin covers it. The holder
+                    # map is built lazily — preemption touching a shared
+                    # page is the rare path.
+                    if holder_seqs is None:
+                        holder_seqs = {}
+                        for (s, _l), ps in self._by_seq.items():
+                            for p2 in ps:
+                                holder_seqs.setdefault(p2, []).append(s)
+                    held = holder_seqs.get(pid, ())
+                    if page.refs != len(held) or \
+                            any(s not in self._parked for s in held):
+                        continue
                 self.stats[f"{page.tier}_bytes"] -= page.nbytes
                 if page.tier == "fast":
                     self._fast_lru.pop(pid, None)
@@ -379,6 +426,7 @@ class PagedKVPool:
         the sequence was parked. Returns restored ``(page_id, layer)``."""
         restored: list[tuple] = []
         seen: set[int] = set()
+        self._parked.discard(seq_id)
         for key in [k for k in self._by_seq if k[0] == seq_id]:
             for pid in self._by_seq[key]:
                 if pid in seen:
@@ -410,11 +458,13 @@ class PagedKVPool:
         `pin_counts()`; with it refcounts are checked exactly, without it
         only as lower bounds. Raises AssertionError on the first breach."""
         holders: dict[int, int] = {}
+        holder_seqs: dict[int, set] = {}
         for key, pids in self._by_seq.items():
             for pid in pids:
                 assert pid in self.pages, \
                     f"_by_seq[{key}] names dead page {pid}"
                 holders[pid] = holders.get(pid, 0) + 1
+                holder_seqs.setdefault(pid, set()).add(key[0])
         tier_bytes = {"fast": 0, "slow": 0, "host": 0}
         n_host = 0
         for pid, page in self.pages.items():
@@ -438,6 +488,16 @@ class PagedKVPool:
             else:
                 assert page.quantized == (page.tier == "slow"), \
                     f"page {pid}: tier {page.tier} quantized={page.quantized}"
+                # shared-page parking rule: a device-resident page whose
+                # every holder is itself parked and that carries no
+                # external pin (refs == holder multiplicity) has no live
+                # reader and no covering reservation — it must have been
+                # parked with the last holder to leave
+                assert not (held > 0 and page.refs == held and
+                            holder_seqs[pid] <= self._parked), \
+                    (f"page {pid}: resident but every holder "
+                     f"{sorted(holder_seqs[pid])} is parked and no pin "
+                     f"covers it — swap_out_seq should have parked it")
             tier_bytes[page.tier] += page.nbytes
         assert n_host == self.host_pages, \
             f"host_pages={self.host_pages} but {n_host} host-tier pages"

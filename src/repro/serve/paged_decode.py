@@ -53,13 +53,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ATTN, MLP_DENSE, MLP_MOE, MLP_NONE
+from repro.configs.base import (ATTN, LOCAL_ATTN, MLP_DENSE, MLP_MOE,
+                                MLP_NONE, RGLRU, SSD)
 from repro.kernels import api
 from repro.models.attention import decode_qkv
 from repro.models.layers import lm_head_apply, rms_norm
 from repro.models.transformer import mlp_tail
 from repro.serve.device_pool import DevicePagePool
 from repro.serve.kvcache import PagedKVPool
+from repro.serve.paged_state import (RecurrentStore, StateLayout,
+                                     gather_ring_kv, rec_array_names,
+                                     rec_array_specs, rec_gather,
+                                     rec_scan_tokens, rec_scatter,
+                                     ring_attend, select_checkpoint,
+                                     supports_paged_layout)
 
 MODES = ("fused", "eager", "numpy")
 
@@ -92,7 +99,8 @@ class PagedKVState:
 
     def __init__(self, pool: PagedKVPool, capacity: int, num_layers: int,
                  hkv: int, hd: int, mode: str = "fused",
-                 batch_hint: int = 1, tail_slots: int = 1, plan=None):
+                 batch_hint: int = 1, tail_slots: int = 1, plan=None,
+                 layout: StateLayout | None = None):
         if mode not in MODES:
             raise ValueError(f"mode {mode!r} not in {MODES}")
         if tail_slots not in (1, 2):
@@ -100,11 +108,24 @@ class PagedKVState:
         if plan is not None and mode != "fused":
             raise ValueError(f"mesh-sharded serving requires the fused "
                              f"decode mode, got {mode!r}")
+        # heterogeneous stacks (recurrent / ring layers) route through the
+        # paged-state layout: the pool's layer axis holds only KV-bearing
+        # layers, recurrent state lives in a RecurrentStore, ring layers
+        # bound their page-table need at O(window)
+        self.layout = layout
+        if layout is not None:
+            num_layers = layout.n_kv
+            if (layout.has_rec or layout.has_ring) and mode != "fused":
+                raise NotImplementedError(
+                    f"recurrent/ring paged state is fused-only, got "
+                    f"mode {mode!r}")
         self.pool = pool
         self.num_layers = num_layers
         self.hkv, self.hd = hkv, hd
         t = pool.page_tokens
         slots = -(-capacity // t)          # ceil: pages covering capacity
+        if layout is not None and layout.has_ring:
+            slots = min(slots, layout.ring_pages())
         # + tail page(s) (2 for speculative steps, whose k rows may cross
         # one page boundary into a spill slot), rounded to a mult. of 8
         self.slots = -(-(slots + tail_slots) // 8) * 8
@@ -124,6 +145,10 @@ class PagedKVState:
         # (num_layers, tail_len, hkv, hd) K/V, or None when the tail was
         # empty at swap-out (numpy mode keeps tails host-side already)
         self._parked_tail: dict[int, object] = {}
+        self._rec: RecurrentStore | None = None
+        self._rec_slot: dict[int, int] = {}    # seq -> GLOBAL rec slot
+        self._parked_rec: dict[int, dict] = {}  # seq -> parked state blocks
+        self._ring_base: dict[int, int] = {}   # seq -> dropped ring pages
         self._device: DevicePagePool | None = None
         self._trash = 0
         if mode != "numpy":
@@ -135,6 +160,10 @@ class PagedKVState:
                 num_layers, t, hkv, hd,
                 init_slots=self.slots * rows_per_shard, plan=plan)
             self._trash = [self._device.alloc(s) for s in range(shards)]
+            if layout is not None and layout.has_rec:
+                self._rec = RecurrentStore(
+                    layout, batch_hint=self.batch_hint, plan=plan,
+                    compute_dtype=jnp.dtype(layout.cfg.compute_dtype))
         self._step = None         # per-step view (begin_step .. end_step)
         self.gather_s = 0.0       # host-side bookkeeping time (Sibyl reward)
         self.h2d = 0              # control/token uploads owned by the state
@@ -161,31 +190,46 @@ class PagedKVState:
 
     @property
     def device_arrays(self):
-        return self._device.arrays
+        """The fused step's donated array tuple: the six layer-stacked KV
+        pool arrays, then the recurrent store arrays (if any)."""
+        kv = self._device.arrays
+        return kv + self._rec.arrays if self._rec is not None else kv
 
     def adopt_device_arrays(self, arrays):
         """Take ownership of the pool arrays returned by a fused step (the
         previous ones were donated into the jit and must not be reused)."""
-        self._device.arrays = tuple(arrays)
+        arrays = tuple(arrays)
+        self._device.arrays = arrays[:6]
+        if self._rec is not None:
+            self._rec.arrays = arrays[6:]
 
     def transfer_counts(self) -> tuple[int, int]:
         """(host->device, device->host) explicit transfers so far,
         including the device pool's scatter payload uploads and fill
         readbacks."""
         dev = self._device
-        return (self.h2d + (dev.writes if dev is not None else 0),
-                self.d2h + (dev.reads if dev is not None else 0))
+        h2d = self.h2d + (dev.writes if dev is not None else 0)
+        d2h = self.d2h + (dev.reads if dev is not None else 0)
+        if self._rec is not None:
+            h2d += self._rec.writes
+            d2h += self._rec.reads
+        return h2d, d2h
 
     # -- writes -------------------------------------------------------------
     def write_prefill(self, layer: int, seq: int, k: np.ndarray,
-                      v: np.ndarray, page_hashes=None):
+                      v: np.ndarray, page_hashes=None, skip_pages: int = 0):
         """k, v: (prefill_len, hkv, hd) — full pages into the pool, the
         remainder rows into the sequence's tail slot. `page_hashes[p]`
         (cumulative token-prefix digests) enables ref-counted page sharing
-        across requests with identical prompt prefixes."""
+        across requests with identical prompt prefixes. ``skip_pages``
+        full pages at the front are assumed already present (adopted from
+        the radix prefix index) and are not re-put; the tail-row math is
+        unchanged."""
         t = self.pool.page_tokens
         n_full = k.shape[0] // t
         for p in range(n_full):
+            if p < skip_pages:
+                continue
             h = page_hashes[p] if page_hashes is not None else None
             self.pool.put(seq, k[p * t:(p + 1) * t], v[p * t:(p + 1) * t],
                           layer=layer, content_hash=h)
@@ -246,12 +290,37 @@ class PagedKVState:
             self._spill_slot[seq] = slot
         return slot
 
+    def _ensure_rec_slot(self, seq: int) -> int:
+        """The sequence's O(1) recurrent slot (one state block per
+        recurrent layer), zero-initialized on first use."""
+        slot = self._rec_slot.get(seq)
+        if slot is None:
+            slot = self._rec.alloc(self.shard_of(seq))
+            self._rec.zero_slot(slot)
+            self._rec_slot[seq] = slot
+        return slot
+
+    def write_prefill_rec(self, seq: int, blocks: dict):
+        """Install post-prefill recurrent state for `seq`: ``blocks`` maps
+        store array names to (n_layers_of_kind, ...) host blocks. A full
+        block set skips the zero-init write (swap-in restores all names
+        bit-identically)."""
+        slot = self._rec_slot.get(seq)
+        if slot is None:
+            slot = self._rec.alloc(self.shard_of(seq))
+            self._rec_slot[seq] = slot
+            if set(blocks) != set(self._rec.names):
+                self._rec.zero_slot(slot)
+        self._rec.write_slot(slot, blocks)
+
     # -- per-step protocol ---------------------------------------------------
     def _page_groups(self, seq: int, tail_slots: int = 1):
         """Per-layer pool pids of each logical page of `seq`, zipped into
         layer-uniform groups, with the slot-overflow check (+ the tail
         slot(s) every decode step appends into — 2 for speculative steps,
         whose rows may cross one page boundary)."""
+        if self.num_layers == 0:       # pure-recurrent stack: no KV pages
+            return []
         per_layer = [self.pool.seq_pages(seq, l)
                      for l in range(self.num_layers)]
         n = len(per_layer[0])
@@ -269,7 +338,7 @@ class PagedKVState:
         return list(zip(*per_layer)) if n else []
 
     def begin_step(self, seq_ids, positions, k: int = 1,
-                   tokens=None) -> np.ndarray:
+                   tokens=None, keep_fixed=None, keep_cap=None) -> np.ndarray:
         """Host bookkeeping before one decode step: touch each live page
         once (one pool-clock tick for the whole step), sync the device
         mirror (new prefill pages, demotion rewrites), and build the
@@ -300,10 +369,17 @@ class PagedKVState:
                 f"may spill across at most one page boundary")
         positions = np.broadcast_to(np.asarray(positions, np.int32), (b,))
         s = self.slots
-        width = s + 4 if k == 1 else s + 5 + k
-        # column offsets past the page table (k=1 keeps the PR-4 layout)
-        c_tail, c_row, c_pos, c_len = (s, s + 1, s + 2, s + 3) if k == 1 \
-            else (s, s + 2, s + 3, s + 4)
+        lay = self.layout
+        if lay is not None:
+            cc = lay.cols(s, k)
+            width = cc.width
+            c_tail, c_row, c_pos, c_len = cc.tail, cc.row, cc.pos, cc.len
+        else:
+            cc = None
+            width = s + 4 if k == 1 else s + 5 + k
+            # column offsets past the page table (k=1 keeps the PR-4 layout)
+            c_tail, c_row, c_pos, c_len = (s, s + 1, s + 2, s + 3) \
+                if k == 1 else (s, s + 2, s + 3, s + 4)
         dev = self._device
         shards = dev.shards if dev is not None else 1
         if shards > 1 and b % shards:
@@ -319,10 +395,19 @@ class PagedKVState:
                               for sh in row_shard], np.int32)
             control[:, c_tail] = trash
         control[:, c_len] = 1
+        if self._rec is not None:
+            # dead rows read/write the recurrent trash slot, and keep
+            # exactly 1 phantom token (keep_cap 0) so their garbage never
+            # escapes the trash row
+            control[:, cc.rec] = [self._rec.local_slot(self._rec.trash[sh])
+                                  for sh in row_shard]
+            if k > 1:
+                control[:, cc.keep_fixed] = 1
+                control[:, cc.keep_cap] = 0
         if k > 1:
             control[:, s + 1] = control[:, c_tail]            # spill slot
             if tokens is not None:
-                control[:, s + 5:] = np.asarray(tokens, np.int32)
+                control[:, s + 5:s + 5 + k] = np.asarray(tokens, np.int32)
         groups_by_row, touch_pids = [], []
         sync_groups, sync_shards = [], []
         for i, seq in enumerate(seq_ids):
@@ -345,7 +430,7 @@ class PagedKVState:
                 continue
             seq = seq_ids[i]
             tail = self.tail_len.get(seq, 0)
-            if dev is not None:
+            if dev is not None and self.num_layers:
                 sh = row_shard[i]
                 for n, g in enumerate(groups):
                     control[i, n] = dev.local_slot(dev.slot(g[0], sh))
@@ -356,6 +441,16 @@ class PagedKVState:
                     control[i, s + 1] = \
                         dev.local_slot(self._ensure_spill_slot(seq))
                     control[i, len(groups) + 1] = control[i, s + 1]
+            if self._rec is not None:
+                control[i, cc.rec] = \
+                    self._rec.local_slot(self._ensure_rec_slot(seq))
+                if k > 1:
+                    control[i, cc.keep_fixed] = \
+                        -1 if keep_fixed is None else int(keep_fixed[i])
+                    control[i, cc.keep_cap] = \
+                        k - 1 if keep_cap is None else int(keep_cap[i])
+            if cc is not None and lay.has_ring:
+                control[i, cc.base] = self._ring_base.get(seq, 0)
             control[i, c_row] = tail
             control[i, c_pos] = positions[i]
             control[i, c_len] = len(groups) * t + tail + 1
@@ -400,7 +495,8 @@ class PagedKVState:
         self.end_step(seq_ids)
         return tok_host, tok_dev
 
-    def run_spec(self, step_fn, params, tokens_k, seq_ids, positions, key):
+    def run_spec(self, step_fn, params, tokens_k, seq_ids, positions, key,
+                 keep_fixed=None, keep_cap=None):
         """Drive one speculative verify step (`build_fused_step(k=...)`)
         with the steady-state transfer protocol: begin_step bookkeeping,
         ONE control upload (page table + tail/spill slots + the k input
@@ -410,10 +506,17 @@ class PagedKVState:
         tokens. ``tokens_k`` is the (b, k) host matrix [last accepted |
         k-1 drafts]. The step is left OPEN: the caller decides how many
         tokens each row keeps (eos / max_new / per-request k clamping) and
-        must call ``end_step(seq_ids, advanced)`` with those counts."""
+        must call ``end_step(seq_ids, advanced)`` with those counts.
+
+        ``keep_fixed`` / ``keep_cap`` (per-row, recurrent stacks only)
+        drive the in-graph state-checkpoint pick: a row with
+        ``keep_fixed[i] >= 0`` commits exactly that many tokens of
+        recurrent state (chunked prefill rows); ``-1`` rows commit
+        ``min(accepted, keep_cap) + 1`` (the verify accept rule)."""
         control = self.begin_step(seq_ids, positions,
                                   k=int(np.asarray(tokens_k).shape[1]),
-                                  tokens=tokens_k)
+                                  tokens=tokens_k, keep_fixed=keep_fixed,
+                                  keep_cap=keep_cap)
         if self.plan is not None:
             cdev = jax.device_put(control, self.plan.control_sharding())
         else:
@@ -493,9 +596,13 @@ class PagedKVState:
                 raise ValueError(
                     f"sequence {seq}: advanced {adv} tokens in one step "
                     f"(valid: 1..page_tokens={t})")
+            if self.num_layers == 0:
+                continue            # pure-recurrent stack: no pages to fill
             n = self.tail_len.get(seq, 0) + adv
             if n < t:
                 self.tail_len[seq] = n
+                if self.layout is not None and self.layout.has_ring:
+                    self._drop_ring(seq)
                 continue
             self.tail_len[seq] = n - t
             if self._device is not None:
@@ -529,8 +636,32 @@ class PagedKVState:
                     rows = self.tail_data.pop((seq, l))
                     self.pool.put(seq, np.stack([r[0] for r in rows]),
                                   np.stack([r[1] for r in rows]), layer=l)
+            if self.layout is not None and self.layout.has_ring:
+                self._drop_ring(seq)
         self._step = None
         self.gather_s += time.perf_counter() - t0
+
+    def _drop_ring(self, seq: int):
+        """Ring recycling: retire front pages every query position can no
+        longer see (`StateLayout.ring_base`), releasing their pool pages
+        and device slots in place — the sequence's resident page set stays
+        O(window) no matter how long it runs. `_ring_base[seq]` counts the
+        drops so page-table position n keeps meaning logical page
+        ``base + n``."""
+        lay = self.layout
+        t = self.pool.page_tokens
+        base = self._ring_base.get(seq, 0)
+        n_pages = len(self.pool.seq_pages(seq, 0))
+        last_pos = (base + n_pages) * t + self.tail_len.get(seq, 0) - 1
+        target = lay.ring_base(last_pos)
+        while base < target and n_pages > 0:
+            for l in range(self.num_layers):
+                for pid, _layer in self.pool.drop_front(seq, l):
+                    if self._device is not None:
+                        self._device.release_pid(pid)
+            base += 1
+            n_pages -= 1
+        self._ring_base[seq] = base
 
     def release_page(self, pid: int):
         """Recycle a destroyed pool page's device slot — the radix
@@ -581,6 +712,15 @@ class PagedKVState:
                 self._device.release_slot(spill)
         else:
             self._parked_tail[seq] = None   # numpy tails already host-side
+        if self._rec is not None:
+            slot = self._rec_slot.pop(seq, None)
+            if slot is not None:
+                blocks = self._rec.read_slot(slot)
+                self._parked_rec[seq] = blocks
+                self._rec.release_slot(slot)
+                rec_bytes = sum(v.nbytes for v in blocks.values())
+                self.pool.stats["swap_out_bytes"] += rec_bytes
+                tail_bytes += rec_bytes
         for pid, _layer in self.pool.swap_out_seq(seq):
             if self._device is not None:
                 self._device.release_pid(pid)
@@ -605,6 +745,12 @@ class PagedKVState:
                                         kt[layer], vt[layer])
             tail_bytes = kt.nbytes + vt.nbytes
             self.pool.stats["swap_in_bytes"] += tail_bytes
+        blocks = self._parked_rec.pop(seq, None)
+        if blocks is not None:
+            self.write_prefill_rec(seq, blocks)    # full set: bit-identical
+            rec_bytes = sum(v.nbytes for v in blocks.values())
+            self.pool.stats["swap_in_bytes"] += rec_bytes
+            tail_bytes += rec_bytes
         return tail_bytes
 
     # -- retire -------------------------------------------------------------
@@ -620,6 +766,12 @@ class PagedKVState:
         self._shard_of.pop(seq, None)
         self._pending_hashes.pop(seq, None)
         self._parked_tail.pop(seq, None)
+        self._parked_rec.pop(seq, None)
+        self._ring_base.pop(seq, None)
+        if self._rec is not None:
+            slot = self._rec_slot.pop(seq, None)
+            if slot is not None:
+                self._rec.release_slot(slot)
         for key in [k for k in self.tail_data if k[0] == seq]:
             self.tail_data.pop(key)
         for slot in (self._tail_slot.pop(seq, None),
@@ -698,10 +850,11 @@ class PagedKVState:
 # Full decode step over the layer stack, attention via the paged kernel
 # ---------------------------------------------------------------------------
 def supports_paged(cfg) -> bool:
-    """The paged path covers global-attention stacks (ATTN mixer, any MLP);
-    sliding-window / MLA / SSM layers keep their dense decode caches."""
-    return all(mixer == ATTN and mlp in (MLP_DENSE, MLP_MOE, MLP_NONE)
-               for mixer, mlp in cfg.layer_kinds())
+    """The paged path covers every stack the paged-state protocol maps:
+    ATTN / LOCAL_ATTN / SSD / RGLRU mixers (KV pages, ring pages, O(1)
+    recurrent slots) with dense/MoE/none MLPs. MLA and cross-attention
+    stacks keep their dense decode caches."""
+    return supports_paged_layout(cfg)
 
 
 def _iter_layers(model, params):
@@ -717,33 +870,77 @@ def _iter_layers(model, params):
 
 
 def extract_prefill_pages(model, caches, state: PagedKVState, seq_ids,
-                          page_hashes=None, valid_len=None):
-    """Write the prefill caches into the pool as real pages — one
-    write_prefill per (layer, sequence). `page_hashes[bi]` is that
-    request's cumulative token-prefix digest list (prefix caching);
-    `valid_len` drops right-padding rows emitted by a bucketed prefill
-    (continuous admission pads prompts to a power-of-two length)."""
+                          page_hashes=None, valid_len=None, skip_pages=None):
+    """Write the prefill caches into the paged-state substrate — KV/ring
+    layers as pool pages, recurrent layers as O(1) state blocks.
+    `page_hashes[bi]` is that request's cumulative token-prefix digest
+    list (prefix caching); `valid_len` drops right-padding rows emitted
+    by a bucketed prefill (continuous admission pads prompts to a
+    power-of-two length); `skip_pages[bi]` front pages were adopted from
+    the prefix cache and are not re-put. Ring (LOCAL_ATTN) layers keep
+    only the pages the window can still see — the drop count seeds the
+    sequence's ring base. Recurrent layers require an unpadded-right
+    prefill (their state is position-final, not sliceable)."""
     gs = len(model.group_kinds)
+    lay = state.layout
+    t = state.pool.page_tokens
     sl = slice(None, valid_len)
+    if lay is not None and lay.has_rec and valid_len is not None:
+        raise NotImplementedError(
+            "bucketed (right-padded) prefill cannot extract recurrent "
+            "state — hybrid stacks admit through chunked prefill")
 
     def hashes(bi):
         return page_hashes[bi] if page_hashes is not None else None
 
-    for g in range(model.n_groups):
-        for i, _ in enumerate(model.group_kinds):
-            c = caches["groups"][f"l{i}"]
-            k = np.asarray(c["k"][g])          # (b, plen, hkv, hd)
-            v = np.asarray(c["v"][g])
-            for bi, seq in enumerate(seq_ids):
-                state.write_prefill(g * gs + i, seq, k[bi][sl], v[bi][sl],
-                                    page_hashes=hashes(bi))
-    for i, _ in enumerate(model.tail_kinds):
-        c = caches["tail"][f"t{i}"]
+    def skips(bi):
+        return skip_pages[bi] if skip_pages is not None else 0
+
+    # per batch row: store-array name -> per-layer state blocks, appended
+    # in global layer order == each kind's substrate row order
+    rec_parts: list[dict] = [{} for _ in seq_ids]
+
+    def emit(glayer, mixer, c, cut=None):
+        if mixer == SSD:
+            names = (("ssd_conv", "conv"), ("ssd_state", "state"))
+        elif mixer == RGLRU:
+            names = (("rg_h", "h"), ("rg_conv", "conv"))
+        else:
+            names = None
+        if names is not None:
+            for bi in range(len(seq_ids)):
+                for store_name, key in names:
+                    val = c[key][cut] if cut is not None else c[key]
+                    rec_parts[bi].setdefault(store_name, []) \
+                        .append(np.asarray(val[bi]))
+            return
+        kvrow = lay.kv_of[glayer] if lay is not None else glayer
+        k = np.asarray(c["k"][cut] if cut is not None else c["k"])
+        v = np.asarray(c["v"][cut] if cut is not None else c["v"])
         for bi, seq in enumerate(seq_ids):
-            state.write_prefill(model.n_groups * gs + i, seq,
-                                np.asarray(c["k"][bi][sl]),
-                                np.asarray(c["v"][bi][sl]),
-                                page_hashes=hashes(bi))
+            if mixer == LOCAL_ATTN:
+                # dense prefill emits the full natural-order cache; keep
+                # only pages the window still sees and seed the ring base
+                plen = k.shape[1] if valid_len is None else valid_len
+                base = lay.ring_base(plen - 1)
+                state.write_prefill(kvrow, seq, k[bi, base * t:plen],
+                                    v[bi, base * t:plen])
+                state._ring_base[seq] = base
+            else:
+                state.write_prefill(kvrow, seq, k[bi][sl], v[bi][sl],
+                                    page_hashes=hashes(bi),
+                                    skip_pages=skips(bi))
+
+    for g in range(model.n_groups):
+        for i, (mixer, _mlp) in enumerate(model.group_kinds):
+            emit(g * gs + i, mixer, caches["groups"][f"l{i}"], cut=g)
+    for i, (mixer, _mlp) in enumerate(model.tail_kinds):
+        emit(model.n_groups * gs + i, mixer, caches["tail"][f"t{i}"])
+
+    for bi, seq in enumerate(seq_ids):
+        if rec_parts[bi]:
+            state.write_prefill_rec(
+                seq, {n: np.stack(v) for n, v in rec_parts[bi].items()})
 
 
 def paged_decode_step(model, params, tokens, state: PagedKVState, seq_ids,
@@ -760,9 +957,11 @@ def paged_decode_step(model, params, tokens, state: PagedKVState, seq_ids,
     rows, whose logits are garbage and must be ignored. Returns logits
     (b, V)."""
     cfg = model.cfg
-    if not supports_paged(cfg):
+    if not all(mixer == ATTN for mixer, _ in cfg.layer_kinds()) \
+            or not supports_paged(cfg):
         raise NotImplementedError(
-            f"paged decode needs a global-attention stack, got "
+            f"eager paged decode needs a pure global-attention stack "
+            f"(recurrent/ring layers are fused-only), got "
             f"{cfg.layer_kinds()}")
     seq_ids = list(seq_ids)
     state.begin_step(seq_ids, pos)
@@ -807,29 +1006,33 @@ def _mlp_tail_tp(cfg, kind, p, x, tp):
     return x + y
 
 
-def _wrap_step(step, model, plan, *, control_spec, out_spec):
+def _wrap_step(step, model, plan, *, control_spec, out_spec, layout=None):
     """jit the step; under a mesh plan, shard_map it first: params by the
-    serve partition rules, pool arrays by the kernel's head-sharded
-    calling convention, decode rows over "data". check_rep=False because
-    the body's donated scatters + psum seams are not replication-safe to
-    infer; correctness is asserted by the sharded-vs-single-device
-    equivalence tests."""
+    serve partition rules, pool + recurrent-store arrays by the kernel's
+    head-sharded calling convention, decode rows over "data".
+    check_rep=False because the body's donated scatters + psum seams are
+    not replication-safe to infer; correctness is asserted by the
+    sharded-vs-single-device equivalence tests."""
     if plan is None:
         return jax.jit(step, donate_argnums=(1,))
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
-    pool_specs = plan.pool_specs()
+    cfg = model.cfg
+    rep_heads = cfg.num_kv_heads > 0 and cfg.num_kv_heads % plan.tp != 0
+    arr_specs = plan.pool_specs(replicate_heads=rep_heads)
+    if layout is not None:
+        arr_specs = arr_specs + rec_array_specs(layout, plan)
     mapped = shard_map(
         step, mesh=plan.mesh,
-        in_specs=(plan.param_specs(model), pool_specs) + control_spec
+        in_specs=(plan.param_specs(model), arr_specs) + control_spec
         + (P(),),
-        out_specs=(out_spec, pool_specs), check_rep=False)
+        out_specs=(out_spec, arr_specs), check_rep=False)
     return jax.jit(mapped, donate_argnums=(1,))
 
 
 def build_fused_step(model, num_slots: int, *, k: int = 1,
                      backend: str = "auto", greedy: bool = True,
-                     temperature: float = 1.0, plan=None):
+                     temperature: float = 1.0, plan=None, layout=None):
     """Build the jitted fused decode step.
 
     ``k == 1`` — the plain PR-4 step. Returned callable:
@@ -868,7 +1071,14 @@ def build_fused_step(model, num_slots: int, *, k: int = 1,
     carries shard-local slot ids), attention/MLP heads shard over "model"
     with psum seams after the wo- and down-projections, and sampling
     folds the data-shard index into the key so concurrent rows draw
-    independent noise. ``plan=None`` is the exact single-device graph."""
+    independent noise. ``plan=None`` is the exact single-device graph.
+
+    ``layout`` (a `paged_state.StateLayout`) generalizes the graph to
+    heterogeneous stacks: LOCAL_ATTN layers scatter into the same KV pool
+    but attend a ring gather windowed by the control block's base column,
+    SSD/RGLRU layers read/advance their O(1) state slot in the
+    RecurrentStore arrays riding behind the six pool arrays. Pure-ATTN
+    stacks trace the identical legacy graph with or without a layout."""
     cfg = model.cfg
     gs = len(model.group_kinds)
     s = num_slots
@@ -876,56 +1086,109 @@ def build_fused_step(model, num_slots: int, *, k: int = 1,
     dp = plan.dp if plan is not None else 1
     if k < 1:
         raise ValueError(f"k must be >= 1, got {k}")
+    lay = layout if layout is not None else StateLayout(cfg, 1)
     if k > 1:
         return _build_spec_step(model, num_slots, k, backend=backend,
                                 greedy=greedy, temperature=temperature,
-                                plan=plan)
+                                plan=plan, layout=lay)
+    cc = lay.cols(s, 1)
+    rec_of = {n: i for i, n in enumerate(rec_array_names(lay))}
+    n_rec = len(rec_of)
+
+    def rows_of(g, i):
+        """Substrate rows of group-position i at (traced) group index g."""
+        kv_r, ssd_r, rg_r = lay.kv_rank[i], lay.ssd_rank[i], lay.rg_rank[i]
+        return (None if kv_r is None else g * lay.kv_per_group + kv_r,
+                None if ssd_r is None else g * lay.ssd_per_group + ssd_r,
+                None if rg_r is None else g * lay.rg_per_group + rg_r)
+
+    def tail_rows_of(i):
+        return lay.tail_kv[i], lay.tail_ssd[i], lay.tail_rg[i]
 
     def step(params, arrays, tokens, control, key):
-        kf, vf, kq, vq, ks, vs = arrays
+        kv = tuple(arrays[:6])
+        rec = list(arrays[6:])
+        kf, vf, kq, vq, ks, vs = kv
         ll, c, t = kf.shape[0], kf.shape[1], kf.shape[2]
         table = control[:, :s]
-        positions = control[:, s + 2]
-        lengths = control[:, s + 3]
+        positions = control[:, cc.pos]
+        lengths = control[:, cc.len]
         # flat (layer, slot, row) scatter index base for the step's rows
-        row_base = control[:, s] * t + control[:, s + 1]
+        row_base = control[:, cc.tail] * t + control[:, cc.row]
+        rec_slots = control[:, cc.rec] if lay.has_rec else None
+        ring_base = control[:, cc.base] if lay.has_ring else None
         flat_kv = (ll * c * t,) + kf.shape[3:]
 
         x = model._embed_in(params, {"tokens": tokens[:, None]})
 
-        def layer_step(x, kf, vf, kind, p, layer):
+        def layer_step(carry, kind, p, row_kv, row_ssd, row_rg):
+            x, kf, vf = carry[0], carry[1], carry[2]
+            rec = list(carry[3:])
+            mixer, _mlp = kind
             h = rms_norm(x, p["norm1"])
-            ap = p["attn"]
-            q, k_new, v_new = decode_qkv(cfg, ap, h, positions)
-            idx = layer * (c * t) + row_base
-            kf = kf.reshape(flat_kv).at[idx] \
-                .set(k_new[:, 0].astype(kf.dtype)).reshape(kf.shape)
-            vf = vf.reshape(flat_kv).at[idx] \
-                .set(v_new[:, 0].astype(vf.dtype)).reshape(vf.shape)
-            y = api.run("paged_attention", q[:, 0], kf, vf, kq, vq, ks, vs,
-                        table, lengths, jnp.asarray(layer, jnp.int32),
-                        backend=backend)
-            y = jnp.einsum("bhk,hkd->bd", y.astype(x.dtype), ap["wo"])
-            if tp > 1:          # complete the head-sharded partial sum
-                y = jax.lax.psum(y, "model")
-            x = x + y[:, None]
+            if mixer in (ATTN, LOCAL_ATTN):
+                ap = p["attn"]
+                q, k_new, v_new = decode_qkv(cfg, ap, h, positions)
+                idx = row_kv * (c * t) + row_base
+                kf = kf.reshape(flat_kv).at[idx] \
+                    .set(k_new[:, 0].astype(kf.dtype)).reshape(kf.shape)
+                vf = vf.reshape(flat_kv).at[idx] \
+                    .set(v_new[:, 0].astype(vf.dtype)).reshape(vf.shape)
+                if mixer == ATTN:
+                    y = api.run("paged_attention", q[:, 0], kf, vf, kq, vq,
+                                ks, vs, table, lengths,
+                                jnp.asarray(row_kv, jnp.int32),
+                                backend=backend)
+                else:
+                    k_all, v_all = gather_ring_kv((kf, vf, kq, vq, ks, vs),
+                                                  row_kv, table)
+                    y = ring_attend(q, k_all, v_all, lengths=lengths,
+                                    base=ring_base,
+                                    positions=positions[:, None],
+                                    window=lay.window, page_tokens=t)[:, 0]
+                y = jnp.einsum("bhk,hkd->bd", y.astype(x.dtype), ap["wo"])
+                if tp > 1:      # complete the head-sharded partial sum
+                    y = jax.lax.psum(y, "model")
+                x = x + y[:, None]
+            elif mixer == SSD:
+                ia, ib = rec_of["ssd_conv"], rec_of["ssd_state"]
+                state0 = (rec_gather(rec[ia], row_ssd, rec_slots),
+                          rec_gather(rec[ib], row_ssd, rec_slots))
+                y, states = rec_scan_tokens(cfg, SSD, p["ssm"], h, state0,
+                                            tp=tp)
+                rec[ia] = rec_scatter(rec[ia], row_ssd, rec_slots,
+                                      states[0][0])
+                rec[ib] = rec_scatter(rec[ib], row_ssd, rec_slots,
+                                      states[1][0])
+                x = x + y
+            else:               # RGLRU
+                ia, ib = rec_of["rg_h"], rec_of["rg_conv"]
+                state0 = (rec_gather(rec[ia], row_rg, rec_slots),
+                          rec_gather(rec[ib], row_rg, rec_slots))
+                y, states = rec_scan_tokens(cfg, RGLRU, p["rglru"], h,
+                                            state0, tp=tp)
+                rec[ia] = rec_scatter(rec[ia], row_rg, rec_slots,
+                                      states[0][0])
+                rec[ib] = rec_scatter(rec[ib], row_rg, rec_slots,
+                                      states[1][0])
+                x = x + y
             x = _mlp_tail_tp(cfg, kind, p, x, tp)
-            return x, kf, vf
+            return (x, kf, vf, *rec)
 
         def group_body(carry, xs):
-            x, kf, vf = carry
             gp, g = xs
             for i, kind in enumerate(model.group_kinds):
-                x, kf, vf = layer_step(x, kf, vf, kind, gp[f"l{i}"],
-                                       g * gs + i)
-            return (x, kf, vf), None
+                carry = layer_step(carry, kind, gp[f"l{i}"], *rows_of(g, i))
+            return carry, None
 
-        (x, kf, vf), _ = jax.lax.scan(
-            group_body, (x, kf, vf),
+        carry, _ = jax.lax.scan(
+            group_body, (x, kf, vf, *rec),
             (params["groups"], jnp.arange(model.n_groups)))
         for i, kind in enumerate(model.tail_kinds):
-            x, kf, vf = layer_step(x, kf, vf, kind, params["tail"][f"t{i}"],
-                                   model.n_groups * gs + i)
+            carry = layer_step(carry, kind, params["tail"][f"t{i}"],
+                               *tail_rows_of(i))
+        x, kf, vf = carry[0], carry[1], carry[2]
+        rec = list(carry[3:])
 
         x = rms_norm(x, params["final_norm"])
         logits = lm_head_apply(cfg, params["embed"], x)[:, 0]
@@ -936,35 +1199,123 @@ def build_fused_step(model, num_slots: int, *, k: int = 1,
                 key = jax.random.fold_in(key, jax.lax.axis_index("data"))
             tok = jax.random.categorical(key, logits / temperature,
                                          axis=-1).astype(jnp.int32)
-        return tok, (kf, vf, kq, vq, ks, vs)
+        return tok, (kf, vf, kq, vq, ks, vs, *rec)
 
     from jax.sharding import PartitionSpec as P
     return _wrap_step(step, model, plan,
                       control_spec=(P("data"), P("data", None)),
-                      out_spec=P("data"))
+                      out_spec=P("data"),
+                      layout=lay if n_rec else None)
+
+
+def _commit_rec_checkpoints(model, lay, rec, rec_of, group_states,
+                            tail_states, rec_slots, keep):
+    """Write each row's selected recurrent checkpoint back to its state
+    slot — ONE flat scatter per store array, covering every recurrent
+    layer (scan groups and tail) at once. ``group_states`` is the scan's
+    stacked ys (per rec-bearing group position: leaves (G, k, b, ...)),
+    ``tail_states`` the tail layers' (k, b, ...) leaves, ``keep`` (b,)
+    the accept rule's per-row token-keep count."""
+    G = model.n_groups
+    contrib = {i: ([], []) for i in rec_of.values()}   # idx -> rows, vals
+
+    def add(name, rows, vals):
+        r, v = contrib[rec_of[name]]
+        r.append(rows)
+        v.append(vals)
+
+    gi = 0
+    for i, (mixer, _mlp) in enumerate(model.group_kinds):
+        if mixer not in (SSD, RGLRU):
+            continue
+        st = group_states[gi]
+        gi += 1
+        if mixer == SSD:
+            names = ("ssd_conv", "ssd_state")
+            per, rank = lay.ssd_per_group, lay.ssd_rank[i]
+        else:
+            names = ("rg_h", "rg_conv")
+            per, rank = lay.rg_per_group, lay.rg_rank[i]
+        rows = jnp.arange(G, dtype=jnp.int32) * per + rank
+        for name, leaf in zip(names, st):
+            # (G, k, b, ...) -> per-group checkpoint pick -> (G, b, ...)
+            add(name, rows,
+                jax.vmap(lambda sl: select_checkpoint(sl, keep))(leaf))
+    ti = 0
+    for j, (mixer, _mlp) in enumerate(model.tail_kinds):
+        if mixer not in (SSD, RGLRU):
+            continue
+        st = tail_states[ti]
+        ti += 1
+        if mixer == SSD:
+            names = ("ssd_conv", "ssd_state")
+            row = lay.tail_ssd[j]
+        else:
+            names = ("rg_h", "rg_conv")
+            row = lay.tail_rg[j]
+        for name, leaf in zip(names, st):
+            add(name, jnp.asarray([row], jnp.int32),
+                select_checkpoint(leaf, keep)[None])
+    out = list(rec)
+    for idx, (rows_l, vals_l) in contrib.items():
+        if not rows_l:
+            continue
+        a = out[idx]
+        rows = jnp.concatenate(rows_l)
+        vals = jnp.concatenate(vals_l, axis=0)          # (R, b, ...)
+        fidx = (rows[:, None] * a.shape[1]
+                + rec_slots[None, :]).reshape(-1)
+        flat = a.reshape((a.shape[0] * a.shape[1],) + a.shape[2:])
+        out[idx] = flat.at[fidx].set(
+            vals.reshape((-1,) + vals.shape[2:]).astype(a.dtype)
+        ).reshape(a.shape)
+    return out
 
 
 def _build_spec_step(model, num_slots: int, k: int, *, backend: str = "auto",
                      greedy: bool = True, temperature: float = 1.0,
-                     plan=None):
+                     plan=None, layout=None):
     """The k-row speculative verify graph behind `build_fused_step(k>1)`;
-    see that docstring for the contract."""
+    see that docstring for the contract.
+
+    Recurrent layers verify by construction in O(1) per token: the
+    pre-step state slot is READ once, the scan emits all k candidate
+    post-token states as stacked outputs (never overwriting in-scan), and
+    after the accept rule resolves each row's ``keep`` count, ONE scatter
+    per store array commits checkpoint ``keep - 1``. Rollback is
+    selection, not replay."""
     cfg = model.cfg
     gs = len(model.group_kinds)
     s = num_slots
     tp = plan.tp if plan is not None else 1
     dp = plan.dp if plan is not None else 1
+    lay = layout if layout is not None else StateLayout(cfg, 1)
+    cc = lay.cols(s, k)
+    rec_names = rec_array_names(lay)
+    rec_of = {n: i for i, n in enumerate(rec_names)}
+
+    def rows_of(g, i):
+        kv_r, ssd_r, rg_r = lay.kv_rank[i], lay.ssd_rank[i], lay.rg_rank[i]
+        return (None if kv_r is None else g * lay.kv_per_group + kv_r,
+                None if ssd_r is None else g * lay.ssd_per_group + ssd_r,
+                None if rg_r is None else g * lay.rg_per_group + rg_r)
 
     def step(params, arrays, control, key):
-        kf, vf, kq, vq, ks, vs = arrays
+        kv = tuple(arrays[:6])
+        rec = list(arrays[6:])
+        kf, vf, kq, vq, ks, vs = kv
         ll, c, t = kf.shape[0], kf.shape[1], kf.shape[2]
         table = control[:, :s]
-        tail1 = control[:, s]
-        spill = control[:, s + 1]
-        tail_row = control[:, s + 2]
-        pos0 = control[:, s + 3]
-        lengths = control[:, s + 4]                         # row 0's length
-        tokens = control[:, s + 5:s + 5 + k]                # (b, k)
+        tail1 = control[:, cc.tail]
+        spill = control[:, cc.spill]
+        tail_row = control[:, cc.row]
+        pos0 = control[:, cc.pos]
+        lengths = control[:, cc.len]                        # row 0's length
+        tokens = control[:, cc.tok:cc.tok + k]              # (b, k)
+        rec_slots = control[:, cc.rec] if lay.has_rec else None
+        ring_base = control[:, cc.base] if lay.has_ring else None
+        keeps = (control[:, cc.keep_fixed], control[:, cc.keep_cap]) \
+            if lay.has_rec else None
         offs = jnp.arange(k, dtype=jnp.int32)
         positions = pos0[:, None] + offs[None, :]           # (b, k)
         # per-row scatter target: rows crossing the page boundary go to
@@ -976,44 +1327,80 @@ def _build_spec_step(model, num_slots: int, k: int, *, backend: str = "auto",
 
         x = model._embed_in(params, {"tokens": tokens})     # (b, k, d)
 
-        def layer_step(x, kf, vf, kind, p, layer):
+        def layer_step(x, kf, vf, kind, p, row_kv, row_ssd, row_rg):
+            """-> (x, kf, vf, states): `states` is None for KV/ring
+            layers, else the stacked (k, b, ...) candidate-state leaves
+            the post-accept checkpoint commit selects from."""
+            mixer, _mlp = kind
             h = rms_norm(x, p["norm1"])
-            ap = p["attn"]
-            q, k_new, v_new = decode_qkv(cfg, ap, h, positions)
-            idx = (layer * (c * t) + row_base).reshape(-1)  # (b * k,)
-            b = k_new.shape[0]
-            kf = kf.reshape(flat_kv).at[idx] \
-                .set(k_new.reshape((b * k,) + k_new.shape[2:])
-                     .astype(kf.dtype)).reshape(kf.shape)
-            vf = vf.reshape(flat_kv).at[idx] \
-                .set(v_new.reshape((b * k,) + v_new.shape[2:])
-                     .astype(vf.dtype)).reshape(vf.shape)
-            # ONE KV pass scores all k rows (multi-query-row kernel path:
-            # row j masks to lengths + j)
-            y = api.run("paged_attention", q, kf, vf, kq, vq, ks, vs,
-                        table, lengths, jnp.asarray(layer, jnp.int32),
-                        backend=backend)
-            y = jnp.einsum("bshk,hkd->bsd", y.astype(x.dtype), ap["wo"])
-            if tp > 1:          # complete the head-sharded partial sum
-                y = jax.lax.psum(y, "model")
-            x = x + y
+            if mixer in (ATTN, LOCAL_ATTN):
+                ap = p["attn"]
+                q, k_new, v_new = decode_qkv(cfg, ap, h, positions)
+                idx = (row_kv * (c * t) + row_base).reshape(-1)  # (b * k,)
+                b = k_new.shape[0]
+                kf = kf.reshape(flat_kv).at[idx] \
+                    .set(k_new.reshape((b * k,) + k_new.shape[2:])
+                         .astype(kf.dtype)).reshape(kf.shape)
+                vf = vf.reshape(flat_kv).at[idx] \
+                    .set(v_new.reshape((b * k,) + v_new.shape[2:])
+                         .astype(vf.dtype)).reshape(vf.shape)
+                if mixer == ATTN:
+                    # ONE KV pass scores all k rows (multi-query-row
+                    # kernel path: row j masks to lengths + j)
+                    y = api.run("paged_attention", q, kf, vf, kq, vq, ks,
+                                vs, table, lengths,
+                                jnp.asarray(row_kv, jnp.int32),
+                                backend=backend)
+                else:
+                    k_all, v_all = gather_ring_kv((kf, vf, kq, vq, ks, vs),
+                                                  row_kv, table)
+                    y = ring_attend(q, k_all, v_all, lengths=lengths,
+                                    base=ring_base, positions=positions,
+                                    window=lay.window, page_tokens=t)
+                y = jnp.einsum("bshk,hkd->bsd", y.astype(x.dtype),
+                               ap["wo"])
+                if tp > 1:      # complete the head-sharded partial sum
+                    y = jax.lax.psum(y, "model")
+                x = x + y
+                states = None
+            elif mixer == SSD:
+                ia, ib = rec_of["ssd_conv"], rec_of["ssd_state"]
+                state0 = (rec_gather(rec[ia], row_ssd, rec_slots),
+                          rec_gather(rec[ib], row_ssd, rec_slots))
+                y, states = rec_scan_tokens(cfg, SSD, p["ssm"], h, state0,
+                                            tp=tp)
+                x = x + y
+            else:               # RGLRU
+                ia, ib = rec_of["rg_h"], rec_of["rg_conv"]
+                state0 = (rec_gather(rec[ia], row_rg, rec_slots),
+                          rec_gather(rec[ib], row_rg, rec_slots))
+                y, states = rec_scan_tokens(cfg, RGLRU, p["rglru"], h,
+                                            state0, tp=tp)
+                x = x + y
             x = _mlp_tail_tp(cfg, kind, p, x, tp)
-            return x, kf, vf
+            return x, kf, vf, states
 
         def group_body(carry, xs):
             x, kf, vf = carry
             gp, g = xs
+            ys = []
             for i, kind in enumerate(model.group_kinds):
-                x, kf, vf = layer_step(x, kf, vf, kind, gp[f"l{i}"],
-                                       g * gs + i)
-            return (x, kf, vf), None
+                x, kf, vf, st = layer_step(x, kf, vf, kind, gp[f"l{i}"],
+                                           *rows_of(g, i))
+                if st is not None:
+                    ys.append(st)
+            return (x, kf, vf), tuple(ys)
 
-        (x, kf, vf), _ = jax.lax.scan(
+        (x, kf, vf), group_states = jax.lax.scan(
             group_body, (x, kf, vf),
             (params["groups"], jnp.arange(model.n_groups)))
+        tail_states = []
         for i, kind in enumerate(model.tail_kinds):
-            x, kf, vf = layer_step(x, kf, vf, kind, params["tail"][f"t{i}"],
-                                   model.n_groups * gs + i)
+            x, kf, vf, st = layer_step(
+                x, kf, vf, kind, params["tail"][f"t{i}"],
+                lay.tail_kv[i], lay.tail_ssd[i], lay.tail_rg[i])
+            if st is not None:
+                tail_states.append(st)
 
         x = rms_norm(x, params["final_norm"])
         logits = lm_head_apply(cfg, params["embed"], x)      # (b, k, V)
@@ -1031,9 +1418,23 @@ def _build_spec_step(model, num_slots: int, k: int, *, backend: str = "auto",
         match = (tokens[:, 1:] == samp[:, :-1]).astype(jnp.int32)
         n_acc = jnp.cumprod(match, axis=1).sum(axis=1)
         verdict = jnp.concatenate([samp, n_acc[:, None]], axis=1)
-        return verdict, (kf, vf, kq, vq, ks, vs)
+
+        if lay.has_rec:
+            # commit the per-row state checkpoint: chunked-prefill rows
+            # keep their fixed token count, verify rows keep accepted +
+            # bonus capped at the row's real proposal count — O(1)
+            # rollback is SELECTING checkpoint keep-1, never a replay
+            keep_fixed, keep_cap = keeps
+            keep = jnp.where(keep_fixed >= 0, keep_fixed,
+                             jnp.minimum(n_acc, keep_cap) + 1)
+            keep = jnp.clip(keep, 1, k)
+            rec = _commit_rec_checkpoints(model, lay, rec, rec_of,
+                                          group_states, tail_states,
+                                          rec_slots, keep)
+        return verdict, (kf, vf, kq, vq, ks, vs, *rec)
 
     from jax.sharding import PartitionSpec as P
     return _wrap_step(step, model, plan,
                       control_spec=(P("data", None),),
-                      out_spec=P("data", None))
+                      out_spec=P("data", None),
+                      layout=lay if rec_names else None)

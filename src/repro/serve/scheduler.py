@@ -138,11 +138,17 @@ class Scheduler:
 
     def __init__(self, pool, num_layers: int, max_active: int = 4,
                  default_speculate: int = 0, data_shards: int = 1,
-                 rows_per_shard: Optional[int] = None, prefix_index=None):
+                 rows_per_shard: Optional[int] = None, prefix_index=None,
+                 layout=None):
         if max_active < 1:
             raise ValueError(f"max_active must be >= 1, got {max_active}")
         self.pool = pool
         self.num_layers = num_layers
+        # paged-state layout (`paged_state.StateLayout`): when present the
+        # admission budget charges each request its TRUE per-kind page
+        # need — only KV-bearing layers take pages, and ring (sliding
+        # window) layers cap out at O(window) pages instead of O(len)
+        self.layout = layout
         self.max_active = max_active
         # radix prefix index (`serve.prefix_cache.RadixPrefixCache`):
         # admission credits a request's cached prompt pages — they are
@@ -229,7 +235,9 @@ class Scheduler:
             return None, 0
         m = self.prefix_index.match(hashes, shard,
                                     limit=self.adopt_cap(req))
-        return m, self.num_layers * m.pages
+        kv_layers = self.layout.n_kv if self.layout is not None \
+            else self.num_layers
+        return m, kv_layers * m.pages
 
     def _pick_shard(self, req: Request, need: int):
         """Least-reserved data shard with a free row and page headroom;
@@ -468,14 +476,15 @@ class Scheduler:
     def pages_needed(self, req: Request) -> int:
         t = self.pool.page_tokens
         cap = len(req.prompt) + req.max_new_tokens
-        pages = -(-cap // t) + 1
-        if effective_speculate(req, self.default_speculate) > 1:
-            # k-token worst case: a verify step may hold up to k - 1
-            # in-flight rows past the page boundary in a spill page per
-            # layer (rejected rows roll back, but the headroom must cover
-            # the step while it is in flight)
-            pages += 1
-        return self.num_layers * pages
+        # k-token worst case: a verify step may hold up to k - 1
+        # in-flight rows past the page boundary in a spill page per
+        # layer (rejected rows roll back, but the headroom must cover
+        # the step while it is in flight)
+        tail = 1 + (1 if effective_speculate(req, self.default_speculate) > 1
+                    else 0)
+        if self.layout is not None:
+            return self.layout.pages_needed(cap, tail_slots=tail)
+        return self.num_layers * (-(-cap // t) + tail)
 
     def admit(self) -> list[Request]:
         """Pop every waiting request that fits right now (urgency-order

@@ -29,6 +29,8 @@ from typing import Optional
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.configs.base import (ATTN, CROSS_ATTN, LOCAL_ATTN, MLA,
+                                MLP_DENSE, RGLRU, SSD)
 from repro.kernels.paged_attention.spec import head_sharded_specs
 from repro.sharding.partition import SERVE_RULES, spec_for
 
@@ -75,10 +77,25 @@ class ServePlan:
         model's head/ffn dims cannot split over the model axis."""
         if self.tp == 1:
             return
-        bad = [f"{name}={n}" for name, n in
-               (("num_heads", cfg.num_heads),
-                ("num_kv_heads", cfg.num_kv_heads),
-                ("d_ff", cfg.d_ff)) if n % self.tp]
+        mixers = {m for m, _ in cfg.layer_kinds()}
+        mlps = {ml for _, ml in cfg.layer_kinds()}
+        checks = []
+        if mixers & {ATTN, LOCAL_ATTN, MLA, CROSS_ATTN}:
+            checks.append(("num_heads", cfg.num_heads))
+            # kv heads that the model axis cannot divide (e.g. MQA) are
+            # fine as long as each shard's q-head block still maps onto
+            # whole kv heads — the pool then replicates the head axis
+            if cfg.num_kv_heads % self.tp and \
+                    (cfg.num_heads // max(self.tp, 1)) % cfg.num_kv_heads:
+                checks.append(("num_kv_heads", cfg.num_kv_heads))
+        if MLP_DENSE in mlps:
+            checks.append(("d_ff", cfg.d_ff))
+        if SSD in mixers:
+            nh = (cfg.ssm_expand * cfg.d_model) // cfg.ssm_head_dim
+            checks.append(("ssm_heads", nh))
+        if RGLRU in mixers:
+            checks.append(("lru_width", cfg.lru_width))
+        bad = [f"{name}={n}" for name, n in checks if n % self.tp]
         if bad:
             raise ValueError(
                 f"{cfg.name}: {', '.join(bad)} not divisible by the "
@@ -97,14 +114,27 @@ class ServePlan:
         return row // (n_rows // self.dp)
 
     # -- page pool ----------------------------------------------------------
-    def pool_specs(self) -> tuple:
+    def pool_specs(self, replicate_heads: bool = False) -> tuple:
         """PartitionSpecs of the six layer-stacked pool arrays, in
-        `DevicePagePool.arrays` order."""
+        `DevicePagePool.arrays` order. `replicate_heads` strips the
+        "model" entry (used when kv heads don't divide the model axis —
+        e.g. MQA — so every model shard holds the full kv heads)."""
         specs = head_sharded_specs(layer_stacked=True)
-        return tuple(specs[a] for a in POOL_ARGS)
+        out = tuple(specs[a] for a in POOL_ARGS)
+        # degrade to replication on any axis the mesh does not carry
+        # (a data-only host mesh has no "model" axis at all), mirroring
+        # partition.spec_for's graceful fallback
+        sizes = mesh_axis_sizes(self.mesh)
+        drop = {"model"} if replicate_heads else set()
+        out = tuple(
+            P(*(None if ax in drop or (ax is not None and ax not in sizes)
+                else ax for ax in s))
+            for s in out)
+        return out
 
-    def pool_shardings(self) -> tuple:
-        return tuple(NamedSharding(self.mesh, s) for s in self.pool_specs())
+    def pool_shardings(self, replicate_heads: bool = False) -> tuple:
+        return tuple(NamedSharding(self.mesh, s)
+                     for s in self.pool_specs(replicate_heads))
 
     def control_sharding(self) -> NamedSharding:
         """The per-step int32 control block: rows over data."""

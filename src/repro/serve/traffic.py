@@ -96,6 +96,13 @@ MIXES = {
                           arrival_rate=120.0, prompt_lens=(8, 16),
                           new_tokens=(16, 24), deadlines=(0.05, 2.0, 30.0),
                           priorities=(0, 1), seed=6),
+    # hybrid-model mix (SSM / RG-LRU / sliding-window stacks served
+    # through the paged-state protocol): replayed by bench_traffic
+    # against the hybrid arch engines, with prompts long enough that a
+    # ring layer wraps its window and recycles pages mid-decode
+    "hybrid": TraceSpec(name="hybrid", n_requests=10, arrival_rate=60.0,
+                        prompt_lens=(24, 40, 56), new_tokens=(8, 12),
+                        cancel_fraction=0.2, seed=7),
 }
 
 

@@ -25,6 +25,7 @@ DEFAULT_RULES: dict = {
     "ffn": [("model",)],
     "experts": [("model",)],
     "ssm_inner": [("model",)],
+    "ssm_proj": [("model",)],
     "ssm_heads": [("model",)],
     "lru": [("model",)],
     "kv_lora": [("model",)],
@@ -50,6 +51,10 @@ SERVE_RULES: dict = {**DEFAULT_RULES,
                      "embed": [],
                      "vocab": [],
                      "experts": [],
+                     # SSD in/conv projections replicate: the fused step
+                     # computes them at full width and slices the local
+                     # head block (B/C channels are shared across heads)
+                     "ssm_proj": [],
                      "batch": [("data",)]}
 
 # axes resolved before others (so e.g. kv_heads grabs "model" before kv_seq)

@@ -20,7 +20,10 @@ def _pool_invariants():
     yield
     from repro.serve.device_pool import DevicePagePool
     from repro.serve.kvcache import PagedKVPool
+    from repro.serve.paged_state import RecurrentStore
     for pool in list(PagedKVPool._instances):
         pool.check_invariants()
     for dev in list(DevicePagePool._instances):
         dev.check_invariants()
+    for store in list(RecurrentStore._instances):
+        store.check_invariants()

@@ -173,7 +173,7 @@ def test_continuous_requires_pool_and_attention_stack(cfg):
     eng = ServeEngine(cfg)
     with pytest.raises(ValueError, match="kv_pool"):
         eng.serve([Request(np.arange(4, dtype=np.int32), 2)])
-    ssm = smoke_config("mamba2-780m")
-    eng2 = ServeEngine(ssm, kv_pool=PagedKVPool(page_tokens=4))
+    mla = smoke_config("minicpm3-4b")    # MLA: compressed-kv, not paged
+    eng2 = ServeEngine(mla, kv_pool=PagedKVPool(page_tokens=4))
     with pytest.raises(NotImplementedError, match="paged"):
         eng2.serve([Request(np.arange(4, dtype=np.int32), 2)])

@@ -1,0 +1,380 @@
+"""Universal paged-state subsystem: SSM (mamba2), RG-LRU + sliding-window
+(recurrentgemma) stacks served through the fused decode stack must be
+token-for-token identical to the eager dense-cache reference — plain and
+speculative k=4, single-device and 2x2 mesh — while recurrent layers hold
+O(1) device state (verify cost independent of position), ring layers
+recycle pages at O(window), and preemption moves recurrent slots and ring
+pages bit-identically."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.serve.engine import Request, ServeEngine, ServeSession
+from repro.serve.kvcache import PagedKVPool
+from repro.serve.paged_decode import (PagedKVState, build_fused_step,
+                                      extract_prefill_pages)
+from repro.serve.paged_state import StateLayout, supports_paged_layout
+
+HYBRIDS = ("mamba2-780m", "recurrentgemma-2b")
+
+needs8 = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="mesh tests need XLA_FLAGS=--xla_force_host_platform_"
+           "device_count=8")
+
+
+@pytest.fixture(scope="module")
+def cfgs():
+    return {a: smoke_config(a) for a in HYBRIDS}
+
+
+@pytest.fixture(scope="module")
+def params(cfgs):
+    return {a: ServeEngine(c).params for a, c in cfgs.items()}
+
+
+def _reqs(cfg, n=2, plen=10, new=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+                    new) for _ in range(n)]
+
+
+def _dense_ref(cfg, params, reqs):
+    """The eager dense-cache reference: generate() without a pool."""
+    return ServeEngine(cfg, params=params).generate(reqs)
+
+
+def _fused(cfg, params, **kw):
+    return ServeEngine(cfg, params=params,
+                       kv_pool=PagedKVPool(page_tokens=4),
+                       decode_mode="fused", **kw)
+
+
+# ---------------------------------------------------------------------------
+# Layout facts
+# ---------------------------------------------------------------------------
+def test_layouts(cfgs):
+    lay = StateLayout(cfgs["mamba2-780m"], 4)
+    assert (lay.n_kv, lay.n_ssd, lay.n_rg) == (0, 2, 0)
+    assert not lay.has_ring and lay.has_rec
+    assert lay.pages_needed(1000) == 0          # pure SSM: zero pool pages
+    lay = StateLayout(cfgs["recurrentgemma-2b"], 4)
+    assert (lay.n_kv, lay.n_ssd, lay.n_rg) == (1, 0, 2)
+    assert lay.has_ring and lay.has_rec and lay.window == 32
+    # ring layers cap at O(window) pages no matter the request length
+    assert lay.pages_needed(10_000) == lay.n_kv * (lay.ring_pages() + 1)
+
+
+def test_mla_not_paged():
+    assert not supports_paged_layout(smoke_config("minicpm3-4b"))
+
+
+# ---------------------------------------------------------------------------
+# Token-for-token equivalence vs the eager dense-cache reference
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", HYBRIDS)
+def test_fused_generate_matches_dense(cfgs, params, arch):
+    cfg = cfgs[arch]
+    ref = _dense_ref(cfg, params[arch], _reqs(cfg))
+    outs = _fused(cfg, params[arch]).generate(_reqs(cfg))
+    for a, b in zip(ref, outs):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("arch", HYBRIDS)
+def test_spec_k4_matches_dense(cfgs, params, arch):
+    cfg = cfgs[arch]
+    ref = _dense_ref(cfg, params[arch], _reqs(cfg))
+    outs = _fused(cfg, params[arch], speculate=4).generate(_reqs(cfg))
+    for a, b in zip(ref, outs):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("arch", HYBRIDS)
+@pytest.mark.parametrize("speculate", [0, 4])
+def test_serve_chunked_matches_dense(cfgs, params, arch, speculate):
+    """Continuous serving (chunked prefill rides the wide fused step)
+    matches generate([r]) per request."""
+    cfg = cfgs[arch]
+    refs = [_dense_ref(cfg, params[arch], [r])[0] for r in _reqs(cfg)]
+    eng = _fused(cfg, params[arch], speculate=speculate)
+    outs = eng.serve(_reqs(cfg), max_active=2)
+    for a, b in zip(refs, outs):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_ring_wrap_matches_dense(cfgs, params):
+    """Prompt length == window so the ring wraps and recycles pages
+    mid-decode; the page-aligned wrap keeps the paged path bit-exact."""
+    cfg = cfgs["recurrentgemma-2b"]
+    reqs = _reqs(cfg, n=1, plen=32, new=16)
+    ref = _dense_ref(cfg, params["recurrentgemma-2b"], reqs)
+    outs = _fused(cfg, params["recurrentgemma-2b"]).generate(
+        _reqs(cfg, n=1, plen=32, new=16))
+    np.testing.assert_array_equal(ref[0], outs[0])
+
+
+# ---------------------------------------------------------------------------
+# Fused-only + forced-session policy
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", HYBRIDS)
+def test_hybrid_requires_fused(cfgs, arch):
+    eng = ServeEngine(cfgs[arch], kv_pool=PagedKVPool(page_tokens=4),
+                      decode_mode="eager")
+    with pytest.raises(NotImplementedError, match="fused"):
+        eng.generate(_reqs(cfgs[arch], n=1))
+
+
+def test_hybrid_session_forces_chunked_and_no_radix(cfgs, params):
+    cfg = cfgs["recurrentgemma-2b"]
+    eng = _fused(cfg, params["recurrentgemma-2b"])
+    with pytest.raises(ValueError, match="chunked"):
+        ServeSession(eng, capacity=64, chunked_prefill=False)
+    sess = ServeSession(eng, capacity=64)
+    assert sess.chunked and not sess.radix and sess.prefix_index is None
+
+
+# ---------------------------------------------------------------------------
+# O(1) recurrent state: verify cost independent of position
+# ---------------------------------------------------------------------------
+def test_recurrent_verify_is_o1_per_token(cfgs, params):
+    """Speculative verify on a pure-SSM stack does constant recurrent-
+    store work per step — no per-position growth, no host readbacks:
+    the O(1) claim, asserted on the store's transfer counters."""
+    cfg = cfgs["mamba2-780m"]
+    eng = _fused(cfg, params["mamba2-780m"], speculate=4)
+    reqs = _reqs(cfg, n=1, plen=8, new=24)
+    ref = _dense_ref(cfg, params["mamba2-780m"],
+                     _reqs(cfg, n=1, plen=8, new=24))
+    t0 = eng.generate(reqs)
+    np.testing.assert_array_equal(ref[0], t0[0])
+    # rec-store traffic: the prefill installed the state once; every
+    # verify step after that ran device-resident (writes stay at the
+    # prefill count, reads at zero) — independent of how far the
+    # sequence advanced
+    steps = eng.stats["decode_steps"]
+    assert steps >= 5
+    state_writes = eng.last_transfers
+    assert state_writes is not None
+    # the engine snapshots (h2d, d2h): steady state is 2 per verify step
+    # plus the O(1) prefill state install — if recurrent state were
+    # re-uploaded per token the h2d count would scale with tokens x state
+    h2d, d2h = state_writes
+    assert h2d <= 2 * steps + 8
+    assert d2h <= steps + 8
+
+
+def test_rec_store_counters_constant_per_step(cfgs, params):
+    """Drive the fused step directly: RecurrentStore host transfers stay
+    ZERO during decode regardless of position (state never leaves the
+    device), at position 10 and position 40 alike."""
+    cfg = cfgs["mamba2-780m"]
+    eng = ServeEngine(cfg, params=params["mamba2-780m"],
+                      kv_pool=PagedKVPool(page_tokens=4))
+    layout = StateLayout(cfg, 4)
+    prompt = np.arange(8, dtype=np.int32) % cfg.vocab_size
+    logits, caches = jax.jit(eng.model.forward_prefill)(
+        eng.params, {"tokens": jnp.asarray(prompt[None])})
+    state = PagedKVState(eng.kv_pool, 32, cfg.num_layers, cfg.num_kv_heads,
+                         cfg.head_dim, mode="fused", layout=layout)
+    extract_prefill_pages(eng.model, caches, state, [0])
+    w0, r0 = state._rec.writes, state._rec.reads
+    fused = build_fused_step(eng.model, state.slots, layout=layout)
+    key = jax.random.PRNGKey(0)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    per_step = []
+    for s in range(40):
+        _, tok = state.run_fused(fused, eng.params, tok, [0], 8 + s, key)
+        per_step.append((state._rec.writes - w0, state._rec.reads - r0))
+    # no host crossings at any position: early and late steps identical
+    assert per_step[0] == per_step[-1] == (0, 0)
+
+
+# ---------------------------------------------------------------------------
+# Ring page recycling
+# ---------------------------------------------------------------------------
+def test_ring_pages_bounded_o_window(cfgs, params):
+    cfg = cfgs["recurrentgemma-2b"]
+    eng = ServeEngine(cfg, params=params["recurrentgemma-2b"],
+                      kv_pool=PagedKVPool(page_tokens=4))
+    layout = StateLayout(cfg, 4)
+    prompt = np.arange(32, dtype=np.int32) % cfg.vocab_size
+    logits, caches = jax.jit(eng.model.forward_prefill)(
+        eng.params, {"tokens": jnp.asarray(prompt[None])})
+    state = PagedKVState(eng.kv_pool, 64, cfg.num_layers, cfg.num_kv_heads,
+                         cfg.head_dim, mode="fused", layout=layout)
+    extract_prefill_pages(eng.model, caches, state, [0])
+    fused = build_fused_step(eng.model, state.slots, layout=layout)
+    key = jax.random.PRNGKey(0)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    counts = []
+    for s in range(40):
+        _, tok = state.run_fused(fused, eng.params, tok, [0], 32 + s, key)
+        counts.append(len(eng.kv_pool.seq_pages(0, 0)))
+    assert max(counts) <= layout.ring_pages()    # O(window), not O(len)
+    assert counts[-1] == counts[-2]              # steady state: recycled
+
+
+# ---------------------------------------------------------------------------
+# Transfer accounting: 2 host<->device crossings per steady-state token
+# ---------------------------------------------------------------------------
+def test_hybrid_two_transfers_per_token(cfgs, params):
+    """Pure SSM steady state: one control upload + one token download
+    per token; the recurrent state never crosses."""
+    cfg = cfgs["mamba2-780m"]
+    eng = ServeEngine(cfg, params=params["mamba2-780m"],
+                      kv_pool=PagedKVPool(page_tokens=16))
+    layout = StateLayout(cfg, 16)
+    prompt = np.arange(8, dtype=np.int32) % cfg.vocab_size
+    logits, caches = jax.jit(eng.model.forward_prefill)(
+        eng.params, {"tokens": jnp.asarray(prompt[None])})
+    state = PagedKVState(eng.kv_pool, 16, cfg.num_layers, cfg.num_kv_heads,
+                         cfg.head_dim, mode="fused", layout=layout)
+    extract_prefill_pages(eng.model, caches, state, [0])
+    fused = build_fused_step(eng.model, state.slots, layout=layout)
+    key = jax.random.PRNGKey(0)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    _, tok = state.run_fused(fused, eng.params, tok, [0], 8, key)
+    h0, d0 = state.transfer_counts()
+    for s in range(3):
+        _, tok = state.run_fused(fused, eng.params, tok, [0], 9 + s, key)
+    h1, d1 = state.transfer_counts()
+    assert (h1 - h0, d1 - d0) == (3, 3)
+
+
+# ---------------------------------------------------------------------------
+# Preemption: recurrent slots + ring pages move bit-identically
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", HYBRIDS)
+def test_swap_out_in_bit_identical(cfgs, params, arch):
+    """Park a mid-decode sequence to the host tier and resume it: the
+    continued stream must equal the uninterrupted one bit-for-bit (the
+    recurrent blocks and ring pages round-trip exactly)."""
+    cfg = cfgs[arch]
+    eng = ServeEngine(cfg, params=params[arch],
+                      kv_pool=PagedKVPool(page_tokens=4))
+    layout = StateLayout(cfg, 4)
+    prompt = np.arange(10, dtype=np.int32) % cfg.vocab_size
+
+    def run(swap_at):
+        pool = PagedKVPool(page_tokens=4)
+        state = PagedKVState(pool, 32, cfg.num_layers, cfg.num_kv_heads,
+                             cfg.head_dim, mode="fused", layout=layout)
+        logits, caches = jax.jit(eng.model.forward_prefill)(
+            eng.params, {"tokens": jnp.asarray(prompt[None])})
+        extract_prefill_pages(eng.model, caches, state, [0])
+        fused = build_fused_step(eng.model, state.slots, layout=layout)
+        key = jax.random.PRNGKey(0)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        outs = [int(tok[0])]
+        for s in range(12):
+            if s == swap_at:
+                out_b = state.swap_out(0)
+                in_b = state.swap_in(0)
+                assert out_b > 0 and in_b > 0      # state actually moved
+                tok = jnp.asarray([outs[-1]], jnp.int32)   # re-upload
+            _, tok = state.run_fused(fused, eng.params, tok, [0], 10 + s,
+                                     key)
+            outs.append(int(np.asarray(tok)[0]))
+        for seq in [0]:
+            state.free_seq(seq)
+        return outs
+
+    base = run(swap_at=None)
+    swapped = run(swap_at=6)
+    assert base == swapped
+
+
+def test_session_preemption_hybrid(cfgs, params):
+    """SLO-driven preemption through the full session on a hybrid stack:
+    outputs stay correct when a row parks and resumes."""
+    cfg = cfgs["recurrentgemma-2b"]
+    refs = {}
+    for r in _reqs(cfg, n=3, plen=10, new=6):
+        refs[r.prompt.tobytes()] = _dense_ref(
+            cfg, params["recurrentgemma-2b"], [r])[0]
+    eng = _fused(cfg, params["recurrentgemma-2b"])
+    reqs = _reqs(cfg, n=3, plen=10, new=6)
+    # max_active=1 forces queueing; priorities make the last request
+    # preempt-worthy — but correctness is what we assert
+    reqs[2].priority = 5
+    outs = eng.serve(reqs, max_active=1)
+    for r, o in zip(reqs, outs):
+        np.testing.assert_array_equal(refs[r.prompt.tobytes()], o)
+
+
+# ---------------------------------------------------------------------------
+# Admission math
+# ---------------------------------------------------------------------------
+def test_pure_ssm_session_admits_beyond_page_table(cfgs, params):
+    """A pure-SSM request takes zero pool pages — the session must not
+    reject it on KV page-table capacity."""
+    cfg = cfgs["mamba2-780m"]
+    eng = _fused(cfg, params["mamba2-780m"])
+    sess = ServeSession(eng, capacity=16)        # tiny page table
+    [req] = _reqs(cfg, n=1, plen=40, new=24)     # 64 tokens > capacity
+    verdict = sess.submit(req)
+    assert verdict, verdict.detail
+
+
+def test_ring_session_admits_long_request(cfgs, params):
+    """A ring request's page need caps at O(window): a request far past
+    the naive O(len) budget still admits."""
+    cfg = cfgs["recurrentgemma-2b"]
+    eng = _fused(cfg, params["recurrentgemma-2b"])
+    sess = ServeSession(eng, capacity=48)        # 12 slots at 4 tok/page
+    [req] = _reqs(cfg, n=1, plen=64, new=32)     # 96 tokens, window 32
+    verdict = sess.submit(req)
+    assert verdict, verdict.detail
+
+
+# ---------------------------------------------------------------------------
+# 2x2 mesh
+# ---------------------------------------------------------------------------
+@needs8
+@pytest.mark.parametrize("arch", HYBRIDS)
+def test_mesh_2x2_matches_single_device(cfgs, params, arch):
+    from repro.launch.mesh import make_serve_mesh
+    cfg = cfgs[arch]
+    ref = _fused(cfg, params[arch]).generate(_reqs(cfg))
+    eng = ServeEngine(cfg, params=params[arch],
+                      kv_pool=PagedKVPool(page_tokens=4),
+                      decode_mode="fused", mesh=make_serve_mesh(2, 2))
+    outs = eng.generate(_reqs(cfg))
+    for a, b in zip(ref, outs):
+        np.testing.assert_array_equal(a, b)
+
+
+@needs8
+@pytest.mark.parametrize("arch", HYBRIDS)
+def test_mesh_2x2_spec_matches_single_device(cfgs, params, arch):
+    from repro.launch.mesh import make_serve_mesh
+    cfg = cfgs[arch]
+    ref = _fused(cfg, params[arch], speculate=4).generate(_reqs(cfg))
+    eng = ServeEngine(cfg, params=params[arch],
+                      kv_pool=PagedKVPool(page_tokens=4),
+                      decode_mode="fused", speculate=4,
+                      mesh=make_serve_mesh(2, 2))
+    outs = eng.generate(_reqs(cfg))
+    for a, b in zip(ref, outs):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Traffic mix
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", HYBRIDS)
+def test_hybrid_traffic_mix(cfgs, params, arch):
+    """The standing 'hybrid' mix replays clean: every request terminates
+    with a structured outcome and no pages leak."""
+    from repro.serve.traffic import MIXES, run_trace
+    cfg = cfgs[arch]
+    eng = _fused(cfg, params[arch])
+    r = run_trace(eng, MIXES["hybrid"].override(n_requests=6,
+                                                arrival_rate=500.0),
+                  max_active=2)
+    assert r["n_done"] + r["n_cancelled"] + r["n_rejected"] \
+        + r.get("n_errors", 0) == r["n_trace"]
+    assert r["cancelled_pages_freed"]

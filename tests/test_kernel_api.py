@@ -86,8 +86,10 @@ def test_registry_contents_and_errors():
     with pytest.raises(ValueError, match="backend='ref'"):
         api.run("hdiff", x, backend="ref", interpret=True)
     # a grid no tune-space tile divides fails loudly, not with a bare min()
+    # (the kernels clamp chunk to S, so only an S larger than every
+    # tune-space chunk with a remainder under each is untileable)
     with pytest.raises(ValueError, match="divides grid"):
-        autotune_kernel(registry.get("rglru_scan"), (1, 48, 16))
+        autotune_kernel(registry.get("rglru_scan"), (1, 513, 16))
 
 
 def test_ops_shims_match_registry_dispatch():

@@ -171,7 +171,19 @@ def test_engine_counts_tokens_per_request():
 
 
 def test_paged_rejects_non_attention_stack():
-    cfg = smoke_config("mamba2-780m")
+    # MLA's compressed kv has no paged layout; SSM/RG-LRU/local-attn
+    # stacks are served through the paged-state protocol instead
+    cfg = smoke_config("minicpm3-4b")
     eng = ServeEngine(cfg, kv_pool=PagedKVPool(page_tokens=4))
     with pytest.raises(NotImplementedError, match="paged"):
+        eng.generate(_reqs(cfg, n=1))
+
+
+def test_paged_rejects_eager_for_recurrent_stack():
+    # recurrent/ring stacks are fused-only: the eager per-layer reference
+    # stays the pure global-attention path
+    cfg = smoke_config("mamba2-780m")
+    eng = ServeEngine(cfg, kv_pool=PagedKVPool(page_tokens=4),
+                      decode_mode="eager")
+    with pytest.raises(NotImplementedError, match="fused"):
         eng.generate(_reqs(cfg, n=1))
